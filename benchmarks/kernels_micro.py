@@ -1,0 +1,58 @@
+"""Microbenchmarks of the Pallas kernel ops (CPU: ref/interpret dispatch).
+
+Reports name,us_per_call,derived where derived is the achieved effective
+bandwidth (GB/s) for the bandwidth-bound kernels — meaningful relative to
+each other on this host, and a smoke check that the jit'd wrappers are not
+pathologically slow.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(out=print):
+    rows = []
+    n, d = 8192, 256
+    cur = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    hist = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    us = _bench(jax.jit(ops.change_score), cur, hist)
+    gbps = 2 * n * d * 4 / (us / 1e6) / 1e9
+    rows.append(("kernel.change_score_8192x256", us, f"{gbps:.1f}GB/s"))
+
+    b, neg = 256, 128
+    h = jax.random.normal(jax.random.PRNGKey(2), (b, d))
+    r = jax.random.normal(jax.random.PRNGKey(3), (b, d))
+    t = jax.random.normal(jax.random.PRNGKey(4), (b, neg, d))
+    us = _bench(jax.jit(lambda a, bb, c: ops.transe_neg_score(a, bb, c, 8.0)), h, r, t)
+    rows.append(("kernel.transe_score_256x128x256", us,
+                 f"{b*neg*d*3/ (us/1e6)/1e9:.2f}GFLOP/s-ish"))
+
+    phase = jax.random.normal(jax.random.PRNGKey(5), (b, d // 2))
+    us = _bench(jax.jit(lambda a, p, c: ops.rotate_neg_score(a, p, c, 8.0)), h, phase, t)
+    rows.append(("kernel.rotate_score_256x128x256", us, "-"))
+
+    agg = jax.random.normal(jax.random.PRNGKey(6), (n, d))
+    pri = jnp.ones((n,))
+    sign = (jax.random.uniform(jax.random.PRNGKey(7), (n,)) < 0.4).astype(jnp.int8)
+    us = _bench(jax.jit(ops.sparse_apply), cur, agg, pri, sign)
+    rows.append(("kernel.sparse_apply_8192x256", us,
+                 f"{3*n*d*4/(us/1e6)/1e9:.1f}GB/s"))
+
+    for name, us, derived in rows:
+        out(f"{name},{us:.1f},{derived}")
+    return rows

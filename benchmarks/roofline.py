@@ -1,0 +1,145 @@
+"""Roofline analysis (brief deliverable g).
+
+Reads the dry-run JSONL (loop-aware per-device HLO costs) and derives, per
+(arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / ICI_bw      [s]
+
+(The per-device numbers already divide by the chip count — the global
+HLO_FLOPs / (chips x peak) of the brief.)  Also reports MODEL_FLOPS = 6·N·D
+(train; 2·N·D prefill/decode; N = active params for MoE) and the usefulness
+ratio MODEL_FLOPS / HLO_FLOPs that exposes remat/redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.mesh import TPU_V5E
+
+PEAK = TPU_V5E["peak_flops_bf16"]
+HBM = TPU_V5E["hbm_bw"]
+ICI = TPU_V5E["ici_bw"]
+
+
+def load(path: str = "dryrun_results.jsonl") -> list[dict]:
+    out = {}
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r.get("mesh", "-"))
+        out[key] = r  # last record wins (reruns supersede)
+    return list(out.values())
+
+
+def roofline_row(r: dict) -> dict:
+    n_dev = r["num_devices"]
+    t_comp = r["flops_per_device"] / PEAK
+    t_mem = r["bytes_per_device"] / HBM
+    t_coll = r["collective_bytes_per_device"]["_total"] / ICI
+    dominant = max(
+        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    mult = 6.0 if r["kind"] == "train" else 2.0
+    model_flops = mult * r["active_param_count"] * r["tokens"]
+    hlo_global = r["flops_per_device"] * n_dev
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r.get("mesh", "-"),
+        "strategy": r.get("strategy", "-"),
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else float("nan"),
+        "step_lower_bound_s": max(t_comp, t_mem, t_coll),
+        "mem_gb_per_dev": (r["memory"]["argument_bytes"]
+                           + r["memory"]["temp_bytes"]) / n_dev / 2**30,
+    }
+
+
+def run(path: str = "dryrun_results.jsonl", mesh: str = "16x16", out=print):
+    rows = []
+    out("\n== Roofline (single-pod 16x16, per-device terms) ==")
+    hdr = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "useful", "mem/dev GB"]
+    out("  ".join(h.ljust(14) for h in hdr))
+    for r in sorted(load(path), key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "SKIP":
+            if mesh == "16x16":
+                out(f"{r['arch']:14.14s}  {r['shape']:14.14s}  SKIP ({r['reason'][:70]})")
+            continue
+        if r["status"] != "OK" or r.get("mesh") != mesh:
+            continue
+        row = roofline_row(r)
+        rows.append(row)
+        out("  ".join([
+            row["arch"][:14].ljust(14), row["shape"][:14].ljust(14),
+            f"{row['t_compute_s']:.3e}".ljust(14), f"{row['t_memory_s']:.3e}".ljust(14),
+            f"{row['t_collective_s']:.3e}".ljust(14), row["bottleneck"].ljust(14),
+            f"{row['useful_ratio']:.3f}".ljust(14), f"{row['mem_gb_per_dev']:.2f}",
+        ]))
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl")
+
+
+def markdown_table(path: str = "dryrun_results.jsonl", mesh: str = "16x16") -> str:
+    """§Roofline markdown for EXPERIMENTS.md."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| MODEL/HLO | mem GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(load(path), key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "SKIP":
+            if mesh == "16x16":
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |"
+                )
+            continue
+        if r["status"] != "OK" or r.get("mesh") != mesh:
+            continue
+        w = roofline_row(r)
+        lines.append(
+            f"| {w['arch']} | {w['shape']} | {w['t_compute_s']:.2e} | "
+            f"{w['t_memory_s']:.2e} | {w['t_collective_s']:.2e} | "
+            f"{w['bottleneck']} | {w['useful_ratio']:.3f} | "
+            f"{w['mem_gb_per_dev']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def compare_markdown(base_path: str, opt_path: str, mesh: str = "16x16") -> str:
+    """Baseline vs optimized step-lower-bound comparison (§Perf summary)."""
+    base = {(r["arch"], r["shape"]): roofline_row(r) for r in load(base_path)
+            if r["status"] == "OK" and r.get("mesh") == mesh}
+    opt = {(r["arch"], r["shape"]): roofline_row(r) for r in load(opt_path)
+           if r["status"] == "OK" and r.get("mesh") == mesh}
+    lines = [
+        "| arch | shape | baseline bound s | optimized bound s | speedup | "
+        "bottleneck (b→o) | useful (b→o) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        sp = b["step_lower_bound_s"] / o["step_lower_bound_s"]
+        lines.append(
+            f"| {key[0]} | {key[1]} | {b['step_lower_bound_s']:.2e} | "
+            f"{o['step_lower_bound_s']:.2e} | {sp:.2f}x | "
+            f"{b['bottleneck']}→{o['bottleneck']} | "
+            f"{b['useful_ratio']:.3f}→{o['useful_ratio']:.3f} |"
+        )
+    return "\n".join(lines)

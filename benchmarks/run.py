@@ -1,0 +1,84 @@
+"""Benchmark driver: one module per paper table/figure + roofline + kernels.
+
+Prints per-benchmark tables, a final ``name,us_per_call,derived`` CSV, and a
+claim-validation summary (PASS/WARN per paper claim).  Full run takes tens of
+minutes on this single CPU core; set REPRO_BENCH_FAST=1 for a quick pass, or
+select suites with ``--only table3,roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: kernels,table1,table2,table3,table4,"
+                         "table5,table6,fig2,sweep,q8,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    csv_rows: list[tuple[str, float, str]] = []
+    claims: list[str] = []
+    t_start = time.time()
+
+    if want("kernels"):
+        from benchmarks import kernels_micro
+
+        csv_rows += [tuple(r) for r in kernels_micro.run()]
+
+    suites = [
+        ("table1", "table1_compression"),
+        ("table2", "table2_accuracy"),
+        ("table3", "table3_comm"),
+        ("table4", "table4_fedepl"),
+        ("table5", "table5_local_epochs"),
+        ("table6", "table6_batch_size"),
+        ("fig2", "fig2_sync_ablation"),
+        ("sweep", "sweep_sparsity"),
+        ("q8", "feds_q8"),
+    ]
+    for key, mod_name in suites:
+        if not want(key):
+            continue
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        rows = mod.run()
+        wall = time.time() - t0
+        csv_rows.append((f"bench.{key}", wall * 1e6, f"{len(rows)}rows"))
+        if hasattr(mod, "check_claims"):
+            claims += [f"{key}: {n}" for n in mod.check_claims(rows)]
+
+    if want("roofline"):
+        from benchmarks import roofline
+
+        path = "dryrun_results.jsonl"
+        if os.path.exists(path):
+            t0 = time.time()
+            rows = roofline.run(path)
+            csv_rows.append(("bench.roofline", (time.time() - t0) * 1e6,
+                             f"{len(rows)}pairs"))
+        else:
+            print(f"[roofline] {path} not found — run "
+                  f"`python -m repro.launch.dryrun --all --mesh both --out {path}` first")
+
+    if claims:
+        print("\n== paper-claim validation ==")
+        for c in claims:
+            print(" ", c)
+        n_warn = sum("WARN" in c for c in claims)
+        print(f"  ({len(claims) - n_warn}/{len(claims)} claims PASS)")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(f"\ntotal wall: {time.time() - t_start:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table II: prediction accuracy (MRR / Hits@10) — Single vs FedEP vs FedS.
+
+Paper claim: FedS converges to MRR within ~1% of FedEP (sometimes above it),
+and both beat Single.
+"""
+from benchmarks.common import fmt_row, make_config, run_cached
+
+
+def _overrides(method: str, nc: int) -> dict:
+    # paper §IV-B: sparsity p=0.7 for ComplEx on R5, 0.4 everywhere else
+    return {"sparsity_p": 0.7} if (method == "complex" and nc == 5) else {}
+
+
+def run(methods=("transe", "rotate", "complex"), client_counts=(3, 5), out=print):
+    rows = []
+    out("\n== Table II: accuracy at convergence (synthetic R3/R5) ==")
+    out(fmt_row(["KGE", "clients", "setting", "MRR", "Hits@10"]))
+    for method in methods:
+        for nc in client_counts:
+            for proto in ("single", "fedep", "feds"):
+                res = run_cached(nc, make_config(proto, method,
+                                                 **_overrides(method, nc)))
+                rows.append({
+                    "kge": method, "clients": nc, "setting": proto,
+                    "mrr": res.test_mrr_cg, "hits10": res.test_hits10_cg,
+                    "val_mrr": res.val_mrr_cg,
+                })
+                out(fmt_row([method, nc, proto, f"{res.test_mrr_cg:.4f}",
+                             f"{res.test_hits10_cg:.4f}"]))
+    return rows
+
+
+def check_claims(rows) -> list[str]:
+    """Validate the paper's Table II claims on our runs."""
+    notes = []
+    by = {(r["kge"], r["clients"], r["setting"]): r for r in rows}
+    for (kge, nc, setting), r in by.items():
+        if setting != "feds":
+            continue
+        fedep = by[(kge, nc, "fedep")]
+        ratio = r["mrr"] / max(fedep["mrr"], 1e-9)
+        ok = ratio >= 0.95  # paper: >= ~0.99; we allow noise at tiny scale
+        notes.append(
+            f"[{'PASS' if ok else 'WARN'}] {kge}/R{nc}: FedS MRR = "
+            f"{100*ratio:.1f}% of FedEP (paper: ~99-100%)"
+        )
+    return notes

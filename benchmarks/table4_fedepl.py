@@ -1,0 +1,38 @@
+"""Table IV: FedS vs FedEPL (dimension-reduced FedEP at equal cycle budget).
+
+Paper claim: at the SAME per-cycle transmitted-parameter budget, FedS beats
+FedEPL on MRR — full-precision sparse rows > uniformly smaller embeddings.
+"""
+from benchmarks.common import fedepl_dim, fmt_row, make_config, run_cached
+
+
+def run(methods=("transe",), client_counts=(3, 5), out=print):
+    rows = []
+    dim_l = fedepl_dim()
+    out(f"\n== Table IV: FedS vs FedEPL (FedEPL dim={dim_l}) ==")
+    out(fmt_row(["KGE", "clients", "setting", "MRR", "R@CG"]))
+    for method in methods:
+        for nc in client_counts:
+            feds = run_cached(nc, make_config("feds", method))
+            fedepl = run_cached(nc, make_config("fedep", method, dim=dim_l))
+            for name, res in (("fedepl", fedepl), ("feds", feds)):
+                rows.append({"kge": method, "clients": nc, "setting": name,
+                             "mrr": res.test_mrr_cg, "r_cg": res.best_round})
+                out(fmt_row([method, nc, name, f"{res.test_mrr_cg:.4f}",
+                             res.best_round]))
+    return rows
+
+
+def check_claims(rows) -> list[str]:
+    notes = []
+    by = {(r["kge"], r["clients"], r["setting"]): r for r in rows}
+    for (kge, nc, setting), r in by.items():
+        if setting != "feds":
+            continue
+        l = by[(kge, nc, "fedepl")]
+        ok = r["mrr"] >= l["mrr"]
+        notes.append(
+            f"[{'PASS' if ok else 'WARN'}] {kge}/R{nc}: FedS MRR {r['mrr']:.4f} "
+            f"vs FedEPL {l['mrr']:.4f} (paper: FedS higher)"
+        )
+    return notes

@@ -1,0 +1,26 @@
+"""Table V: robustness of FedS across local-epoch counts."""
+from benchmarks.common import comm_table_row, fmt_row, make_config, run_cached
+
+
+def run(epochs=(2, 3, 4), out=print):
+    rows = []
+    out("\n== Table V: FedS vs FedEP across local epochs (TransE, R3) ==")
+    out(fmt_row(["epochs", "setting", "MRR", "P@CG", "P@99", "P@98"]))
+    for ep in epochs:
+        fedep = run_cached(3, make_config("fedep", local_epochs=ep))
+        feds = run_cached(3, make_config("feds", local_epochs=ep))
+        r = comm_table_row(feds, fedep)
+        rows.append({"epochs": ep, "mrr_fedep": fedep.test_mrr_cg,
+                     "mrr_feds": feds.test_mrr_cg, **r})
+        out(fmt_row([ep, "fedep", f"{fedep.test_mrr_cg:.4f}", "1.0", "1.0", "1.0"]))
+        out(fmt_row([ep, "feds", f"{feds.test_mrr_cg:.4f}"]
+                    + [f"{r[k]:.3f}" for k in ("P@CG", "P@99", "P@98")]))
+    return rows
+
+
+def check_claims(rows):
+    return [
+        f"[{'PASS' if r['mrr_feds'] >= 0.9 * r['mrr_fedep'] else 'WARN'}] "
+        f"epochs={r['epochs']}: FedS MRR {r['mrr_feds']:.4f} ~ FedEP {r['mrr_fedep']:.4f}"
+        for r in rows
+    ]

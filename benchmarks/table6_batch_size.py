@@ -1,0 +1,26 @@
+"""Table VI: robustness of FedS across batch sizes."""
+from benchmarks.common import comm_table_row, fmt_row, make_config, run_cached
+
+
+def run(batches=(64, 128, 256), out=print):
+    rows = []
+    out("\n== Table VI: FedS vs FedEP across batch sizes (TransE, R3) ==")
+    out(fmt_row(["batch", "setting", "MRR", "P@CG", "P@99", "P@98"]))
+    for bs in batches:
+        fedep = run_cached(3, make_config("fedep", batch_size=bs))
+        feds = run_cached(3, make_config("feds", batch_size=bs))
+        r = comm_table_row(feds, fedep)
+        rows.append({"batch": bs, "mrr_fedep": fedep.test_mrr_cg,
+                     "mrr_feds": feds.test_mrr_cg, **r})
+        out(fmt_row([bs, "fedep", f"{fedep.test_mrr_cg:.4f}", "1.0", "1.0", "1.0"]))
+        out(fmt_row([bs, "feds", f"{feds.test_mrr_cg:.4f}"]
+                    + [f"{r[k]:.3f}" for k in ("P@CG", "P@99", "P@98")]))
+    return rows
+
+
+def check_claims(rows):
+    return [
+        f"[{'PASS' if r['mrr_feds'] >= 0.9 * r['mrr_fedep'] else 'WARN'}] "
+        f"batch={r['batch']}: FedS MRR {r['mrr_feds']:.4f} ~ FedEP {r['mrr_fedep']:.4f}"
+        for r in rows
+    ]

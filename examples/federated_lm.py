@@ -1,0 +1,126 @@
+"""End-to-end driver: federated LM training with FedS sparse embedding sync.
+
+Demonstrates the paper's technique as a first-class feature of the LM
+framework (DESIGN.md §4): four federated "silos" (shards of the ``data``
+mesh axis) train a small qwen3-family LM on disjoint token streams; every
+round their *embedding tables* synchronize with the TPU-native FedS
+collective (entity-wise Top-K over vocab rows) instead of a dense
+all-reduce, while the transformer trunk synchronizes densely.
+
+Run (CPU, ~2-4 minutes; 4 fake devices are confined to this process):
+
+  python examples/federated_lm.py --rounds 8 --steps-per-round 10
+  python examples/federated_lm.py --model-scale 100m --rounds 200   # paper-scale
+
+The default model is ~6M params so the example completes on one CPU core;
+``--model-scale 100m`` selects a ~100M-param config with the same code path.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.core.distributed import make_sharded_feds_round
+from repro.core.sparsify import sparsity_k
+from repro.models.transformer import init_lm
+from repro.train.optimizer import adam_init, adam_update
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--steps-per-round", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4, help="per-client batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--sparsity", type=float, default=0.4)
+    ap.add_argument("--sync-interval", type=int, default=4)
+    ap.add_argument("--model-scale", default="6m", choices=["6m", "100m"])
+    args = ap.parse_args()
+
+    n_clients = 4
+    mesh = jax.make_mesh((n_clients,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    if args.model_scale == "100m":
+        cfg = dataclasses.replace(cfg, num_layers=8, d_model=768, num_heads=12,
+                                  num_kv_heads=4, d_ff=2048, vocab_size=32768)
+    cfg = dataclasses.replace(cfg, vocab_size=max(cfg.vocab_size, 512))
+    print(f"model: {cfg.name}-fed {cfg.param_count()/1e6:.1f}M params, "
+          f"{n_clients} federated clients")
+
+    # per-client params: same trunk init, embedding tables drift locally
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    params_c = jax.tree.map(lambda a: jnp.stack([a] * n_clients), params)
+    opt_c = jax.tree.map(lambda a: jnp.stack([a] * n_clients),
+                         adam_init(params))
+
+    # disjoint synthetic token streams (different vocab regions per client =
+    # heterogeneity, the regime FedS is designed for)
+    rng = np.random.default_rng(0)
+    v4 = cfg.vocab_size // 4
+
+    def batch_for(round_i, step_i):
+        toks = np.stack([
+            rng.integers(c * v4 // 2, cfg.vocab_size - (3 - c) * v4 // 2,
+                         size=(args.batch, args.seq))
+            for c in range(n_clients)
+        ]).astype(np.int32)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+    train_step = make_train_step(cfg, lr=3e-3)
+    vstep = jax.jit(jax.vmap(train_step))  # one client per data shard
+
+    k = sparsity_k(cfg.vocab_size, args.sparsity)
+    feds_round = make_sharded_feds_round(mesh, k=k,
+                                         sync_interval=args.sync_interval)
+    history = params_c["embed"].astype(jnp.float32)
+
+    shard = NamedSharding(mesh, P("data"))
+    params_c = jax.device_put(params_c, jax.tree.map(lambda _: shard, params_c))
+
+    t0 = time.time()
+    for r in range(args.rounds):
+        losses = None
+        for s in range(args.steps_per_round):
+            params_c, opt_c, losses = vstep(params_c, opt_c, batch_for(r, s))
+        # serialize phases: on the 1-core host backend, overlapping per-device
+        # dispatch can starve a collective rendezvous (4 device threads, 1 core)
+        params_c = jax.block_until_ready(params_c)
+        # --- FedS sparse embedding synchronization (one all-gather) ---
+        emb, history = feds_round(
+            params_c["embed"].astype(jnp.float32), history,
+            jnp.asarray([r], jnp.int32),
+        )
+        params_c["embed"] = emb.astype(cfg.dtype)
+        params_c = jax.block_until_ready(params_c)
+        # trunk: standard dense FedAvg
+        trunk = {kk: vv for kk, vv in params_c.items() if kk != "embed"}
+        trunk = jax.tree.map(lambda a: jnp.broadcast_to(a.mean(0, keepdims=True),
+                                                        a.shape), trunk)
+        params_c.update(trunk)
+        params_c = jax.block_until_ready(params_c)
+        full = cfg.vocab_size * cfg.d_model
+        sparse = k * cfg.d_model + k + cfg.vocab_size
+        print(f"round {r+1:3d}  mean loss {float(losses.mean()):.4f}  "
+              f"emb payload {sparse/full:.2%} of dense")
+    print(f"done in {time.time()-t0:.1f}s — FedS embedding sync transmitted "
+          f"{100*(k*cfg.d_model + k + cfg.vocab_size)/(cfg.vocab_size*cfg.d_model):.1f}% "
+          f"of a dense exchange per sparse round")
+
+
+if __name__ == "__main__":
+    main()

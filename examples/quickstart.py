@@ -1,0 +1,47 @@
+"""Quickstart: FedS vs FedEP on a 3-client federated KG, in ~1 minute on CPU.
+
+Shows the paper's headline result end-to-end: Entity-Wise Top-K
+Sparsification reaches the same accuracy while transmitting roughly half the
+parameters of full-exchange FedE(P).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.sync import comm_ratio_worst_case
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.simulation import FederatedConfig, run_federated
+
+
+def main():
+    kg = generate_kg(num_entities=300, num_relations=18, num_triples=3000, seed=7)
+    clients = partition_by_relation(kg, 3, seed=0)
+    print(f"synthetic KG: {kg.num_triples} triples / {kg.num_entities} entities "
+          f"-> 3 clients (relation-partitioned, like FB15k-237-R3)")
+
+    results = {}
+    for protocol in ("fedep", "feds"):
+        cfg = FederatedConfig(
+            method="transe", protocol=protocol, dim=32, rounds=20,
+            local_epochs=3, batch_size=128, num_negatives=32, lr=1e-2,
+            sparsity_p=0.4, sync_interval=4, eval_every=5, patience=3,
+            max_eval_triples=100, seed=0,
+        )
+        res = run_federated(clients, kg.num_entities, cfg, verbose=True)
+        results[protocol] = res
+        print(f"[{protocol}] test MRR {res.test_mrr_cg:.4f}  "
+              f"Hits@10 {res.test_hits10_cg:.4f}  "
+              f"params transmitted {res.ledger.params_transmitted:.3e}\n")
+
+    ratio = (results["feds"].ledger.params_transmitted
+             / results["fedep"].ledger.params_transmitted)
+    print(f"FedS transmitted {100 * ratio:.1f}% of FedEP's parameters "
+          f"(Eq. 5 worst-case bound: "
+          f"{100 * comm_ratio_worst_case(0.4, 4, 32):.1f}%)")
+    print(f"FedS MRR = {100 * results['feds'].test_mrr_cg / max(results['fedep'].test_mrr_cg, 1e-9):.1f}% of FedEP's")
+
+
+if __name__ == "__main__":
+    main()

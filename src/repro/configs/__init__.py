@@ -1,0 +1,42 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Each module defines ``CONFIG`` (the exact assigned dimensions, source cited)
+and ``smoke()`` (a reduced same-family variant: <=2 layers, d_model <= 512,
+<= 4 experts) used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_ARCHS = {
+    "stablelm-3b": "stablelm_3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "whisper-base": "whisper_base",
+    "arctic-480b": "arctic_480b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "xlstm-350m": "xlstm_350m",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCHS)
+
+
+def _module(arch_id: str):
+    if arch_id not in _ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_ARCHS[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke()

@@ -1,0 +1,35 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual [hf:Snowflake/snowflake-arctic-base].
+
+Arctic's dense-MoE hybrid: every layer runs a routed top-2 MoE *in parallel*
+with a dense residual FFN (``dense_residual=True``).
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    arch_type="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    num_experts=128,
+    num_experts_per_tok=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    source="hf:Snowflake/snowflake-arctic-base",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+    attn_pad_heads=64,  # 56 heads don't divide the 16-way model axis
+    moe_group_size=2048,  # smaller routing groups (dispatch flops)
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=512, num_experts=4, num_experts_per_tok=2,
+        moe_d_ff=128,
+    )

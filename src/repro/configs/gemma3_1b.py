@@ -1,0 +1,35 @@
+"""gemma3-1b [dense] — 5:1 local:global attention, 128k [hf:google/gemma-3-1b-pt].
+
+Every 6th layer is global; the rest use a 512-token sliding window.  This is
+the one dense arch that runs ``long_500k``: at that shape the global layers
+fall back to the 128k design-budget window (DESIGN.md §5).
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    arch_type="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    sliding_window=512,
+    global_every=6,
+    tie_embeddings=True,
+    rope_theta=1000000.0,
+    source="hf:google/gemma-3-1b-pt",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+    shard_heads="context",  # 4 heads: context parallelism (§Perf)
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=1,
+        head_dim=64, d_ff=512, vocab_size=512, sliding_window=16, global_every=2,
+    )

@@ -1,0 +1,33 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    arch_type="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5632,  # shared-expert fused width = 4 * 1408
+    vocab_size=151936,
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    moe_d_ff=1408,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+    moe_pad_experts=64,  # 60 experts don't divide the 16-way model axis
+    moe_group_size=256,
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=512, num_experts=4, num_experts_per_tok=2,
+        num_shared_experts=1, moe_d_ff=64,
+    )

@@ -1,0 +1,35 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+The vision encoder (ViT + merger) is a STUB per the brief: ``input_specs``
+provides precomputed patch embeddings of shape (B, num_patches, d_model);
+this config is the language/decoder backbone that consumes them.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,  # GQA kv=4
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),  # t/h/w rotary halves (head_dim 128)
+    rope_theta=1000000.0,
+    num_patches=256,
+    source="arXiv:2409.12191",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+    attn_pad_heads=32,  # 28 heads don't divide the 16-way model axis
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=512, vocab_size=512, num_patches=16, mrope_sections=(8, 12, 12),
+    )

@@ -1,0 +1,25 @@
+"""stablelm-3b [dense] — [hf:stabilityai/stablelm-2-1_6b]."""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,  # GQA kv=32 (full MHA)
+    d_ff=6912,
+    vocab_size=50304,
+    rope_theta=10000.0,
+    source="hf:stabilityai/stablelm-2-1_6b",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=512,
+    )

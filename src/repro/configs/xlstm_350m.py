@@ -1,0 +1,32 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+24 blocks, every 6th an sLSTM (scalar memory, sequential), the rest mLSTM
+(matrix memory, chunkwise-parallel).  ``d_ff=0``: the FFN lives inside the
+blocks (mLSTM pre-up-projection / sLSTM 4/3 gated FFN).
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    slstm_every=6,
+    tie_embeddings=True,
+    source="arXiv:2405.04517",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+    anchor_batch=False,  # GSPMD's batch x (data,model) layout wins here
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        vocab_size=512, slstm_every=2,
+    )

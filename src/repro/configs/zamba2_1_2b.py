@@ -1,0 +1,33 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+38 Mamba2 layers; ONE shared (weight-tied) attention+MLP block applied every
+``attn_every`` layers — the zamba2 design point: attention quality at
+near-zero parameter cost.
+"""
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    arch_type="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    source="arXiv:2411.15242",
+    flash_vjp=True,  # §Perf default (exact; see EXPERIMENTS.md)
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=512, ssm_state=16, ssm_head_dim=32, attn_every=2,
+    )

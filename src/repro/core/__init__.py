@@ -1,0 +1,40 @@
+"""FedS core: Entity-Wise Top-K Sparsification for federated KGE.
+
+This package is the paper's contribution:
+
+* :mod:`repro.core.sparsify` — upstream entity-wise Top-K selection (Eq. 1-2)
+* :mod:`repro.core.aggregate` — downstream personalized aggregation with
+  priority weights (Eq. 3-4)
+* :mod:`repro.core.sync` — Intermittent Synchronization Mechanism (§III-E)
+* :mod:`repro.core.protocol` — FedE / FedEP / FedEPL / FedS round logic
+* :mod:`repro.core.compression` — FedE-KD / FedE-SVD / FedE-SVD+ baselines
+  (the paper's negative finding, Table I)
+* :mod:`repro.core.distributed` — TPU-native sparse-sync collective
+  (shard_map + lax collectives, static-K masked buffers)
+"""
+from repro.core.sparsify import (
+    change_scores,
+    select_top_k,
+    upstream_sparsify,
+    sparsity_k,
+)
+from repro.core.aggregate import (
+    Upload,
+    Download,
+    personalized_aggregate,
+    fede_aggregate,
+)
+from repro.core.sync import is_sync_round, comm_ratio_worst_case
+
+__all__ = [
+    "change_scores",
+    "select_top_k",
+    "upstream_sparsify",
+    "sparsity_k",
+    "Upload",
+    "Download",
+    "personalized_aggregate",
+    "fede_aggregate",
+    "is_sync_round",
+    "comm_ratio_worst_case",
+]

@@ -1,0 +1,132 @@
+"""Downstream Personalized Entity-Wise Top-K Sparsification (paper §III-D).
+
+Server-side logic.  The federated *simulation* runs this host-side in numpy
+(clients have heterogeneous entity sets and counts, which is naturally a
+ragged problem); the SPMD/TPU deployment path uses
+:mod:`repro.core.distributed`, which implements the same semantics with
+static-K masked buffers + segment_sum and is property-tested against this
+module.
+
+Key semantics (Eq. 3-4):
+* aggregation for client c over entity e sums the uploads of the OTHER
+  clients that uploaded e this round (c's own upload excluded),
+* priority weight P_{c,e} = |C_{c,e}| = number of other clients that uploaded
+  e,
+* per-client Top-K by priority, random tie-break, K = N_c * p,
+* if fewer than K entities have any aggregate, send all available.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Upload:
+    """One client's upstream message (global entity id space)."""
+
+    client_id: int
+    entity_ids: np.ndarray  # (k,) int — GLOBAL ids of uploaded entities
+    values: np.ndarray  # (k, D) float32 embeddings
+
+
+@dataclasses.dataclass
+class Download:
+    """Server -> client message for one client."""
+
+    client_id: int
+    entity_ids: np.ndarray  # (k',) int GLOBAL ids (k' <= K)
+    agg_values: np.ndarray  # (k', D) summed embeddings A (Eq. 3)
+    priority: np.ndarray  # (k',) int counts |C_{c,e}|
+
+
+def personalized_aggregate(
+    uploads: list[Upload],
+    client_entities: list[np.ndarray],  # per client: GLOBAL ids of its shared entities
+    sparsity_p: float,
+    rng: np.random.Generator,
+) -> list[Download]:
+    """Run the server's downstream pass for every client."""
+    num_clients = len(uploads)
+    dim = uploads[0].values.shape[1]
+
+    # Index uploads once: entity -> list of (client, row).
+    by_entity: dict[int, list[tuple[int, int]]] = {}
+    for up in uploads:
+        for row, e in enumerate(up.entity_ids.tolist()):
+            by_entity.setdefault(e, []).append((up.client_id, row))
+
+    downloads: list[Download] = []
+    for c in range(num_clients):
+        ents = client_entities[c]
+        k = max(1, min(len(ents), int(round(len(ents) * sparsity_p))))
+        cand_ids: list[int] = []
+        cand_pri: list[int] = []
+        for e in ents.tolist():
+            contributors = [x for x in by_entity.get(e, ()) if x[0] != c]
+            if contributors:
+                cand_ids.append(e)
+                cand_pri.append(len(contributors))
+        if not cand_ids:
+            downloads.append(
+                Download(
+                    client_id=c,
+                    entity_ids=np.zeros(0, dtype=np.int64),
+                    agg_values=np.zeros((0, dim), dtype=np.float32),
+                    priority=np.zeros(0, dtype=np.int64),
+                )
+            )
+            continue
+        cand_ids_arr = np.asarray(cand_ids, dtype=np.int64)
+        cand_pri_arr = np.asarray(cand_pri, dtype=np.int64)
+        if len(cand_ids_arr) > k:
+            # Top-K by priority, random tie-break (paper: "a random strategy").
+            tie = rng.random(len(cand_ids_arr))
+            order = np.lexsort((tie, -cand_pri_arr))
+            sel = order[:k]
+        else:
+            sel = np.arange(len(cand_ids_arr))
+        sel_ids = cand_ids_arr[sel]
+        sel_pri = cand_pri_arr[sel]
+        agg = np.zeros((len(sel_ids), dim), dtype=np.float32)
+        for i, e in enumerate(sel_ids.tolist()):
+            for cl, row in by_entity[e]:
+                if cl != c:
+                    agg[i] += np.asarray(uploads[cl].values[row], dtype=np.float32)
+        downloads.append(
+            Download(client_id=c, entity_ids=sel_ids, agg_values=agg, priority=sel_pri)
+        )
+    return downloads
+
+
+def apply_download(
+    local_emb: np.ndarray,  # (N_c, D) client's full local entity table (LOCAL ids)
+    global_to_local: dict[int, int],
+    down: Download,
+) -> np.ndarray:
+    """Eq. 4: E^{t+1}_e = (A_e + E^t_e) / (1 + P_e) on selected rows."""
+    out = local_emb.copy()
+    for i, e in enumerate(down.entity_ids.tolist()):
+        li = global_to_local[e]
+        out[li] = (down.agg_values[i] + local_emb[li]) / (1.0 + down.priority[i])
+    return out
+
+
+def fede_aggregate(
+    uploads: list[Upload],
+    num_global_entities: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Standard FedE full aggregation (used on synchronization rounds).
+
+    Returns (global_table (E, D) mean over owning clients, count (E,)).
+    Entities uploaded by no client keep zero rows (count 0).
+    """
+    dim = uploads[0].values.shape[1]
+    total = np.zeros((num_global_entities, dim), dtype=np.float32)
+    count = np.zeros(num_global_entities, dtype=np.int64)
+    for up in uploads:
+        np.add.at(total, up.entity_ids, up.values.astype(np.float32))
+        np.add.at(count, up.entity_ids, 1)
+    mean = total / np.maximum(count, 1)[:, None]
+    return mean, count

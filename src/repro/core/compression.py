@@ -1,0 +1,334 @@
+"""Universal-precision-reduction baselines: FedE-KD, FedE-SVD, FedE-SVD+.
+
+These implement the paper's *negative finding* (§III-A, Table I, Appendix
+VI-A/B): compressing ALL entity embeddings — co-distillation to a lower
+dimension, or low-rank truncation of the update matrices — slows convergence
+enough that TOTAL communication goes UP despite the smaller per-round
+payload.  They exist as first-class baselines so Table I is reproducible.
+
+* FedE-KD: each client holds low- and high-dim embeddings; both train on
+  local triples with mutual KL co-distillation (Eq. 6); only the low-dim
+  table is communicated (FedE-style full exchange).
+* FedE-SVD: per-entity embedding *updates* are reshaped to (m, n) and
+  truncated to the top ``r`` singular values before transmission, both
+  directions.
+* FedE-SVD+: additionally retrains the factors (U, s, V) on the local loss
+  with an orthogonality regularizer (Eq. 7) before truncation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import Upload, fede_aggregate
+from repro.core.protocol import ClientCommView, build_comm_views
+from repro.data.partition import ClientData
+from repro.federated.client import KGEClient, _train_epoch
+from repro.federated.comm import CommLedger
+from repro.federated.metrics import weighted_average
+from repro.kge.scoring import KGEModel, init_kge_params, kge_loss, score_triples
+from repro.train.optimizer import adam_init, adam_update
+
+# --------------------------------------------------------------------- SVD
+
+
+def svd_compress(updates: np.ndarray, n_cols: int, rank: int):
+    """Truncated per-entity SVD of update rows.
+
+    updates (N, D) -> factors (U (N, m, r), s (N, r), V (N, n, r)) with
+    D = m * n_cols.  Transmitted parameter count per entity:
+    m*r + r + n*r (Appendix VI-B).
+    """
+    n_rows, dim = updates.shape
+    m = dim // n_cols
+    mat = updates.reshape(n_rows, m, n_cols)
+    u, s, vt = np.linalg.svd(mat, full_matrices=False)
+    return u[:, :, :rank], s[:, :rank], np.transpose(vt[:, :rank, :], (0, 2, 1))
+
+
+def svd_restore(u: np.ndarray, s: np.ndarray, v: np.ndarray, dim: int) -> np.ndarray:
+    """Inverse of :func:`svd_compress` (lossy)."""
+    mat = np.einsum("nmr,nr,nkr->nmk", u, s, v)
+    return mat.reshape(mat.shape[0], dim)
+
+
+def svd_params_per_entity(dim: int, n_cols: int, rank: int) -> int:
+    m = dim // n_cols
+    return m * rank + rank + n_cols * rank
+
+
+# ------------------------------------------------------------------- SVD+
+@functools.partial(jax.jit, static_argnames=("method", "gamma", "lr", "alpha", "steps"))
+def _svdp_refine(
+    base_entity,  # (N, D) embeddings at round start
+    u,  # (N, m, r)
+    s,  # (N, r)
+    v,  # (N, n, r)
+    relation,  # (R, Dr)
+    pos,
+    neg_t,
+    neg_h,
+    method: str,
+    gamma: float,
+    lr: float,
+    alpha: float,
+    steps: int,
+):
+    """Final-epoch factor training with orthogonality regularization (Eq. 7)."""
+    n, dim = base_entity.shape
+    r = s.shape[-1]
+
+    def entity_of(f):
+        delta = jnp.einsum("nmr,nr,nkr->nmk", f["u"], f["s"], f["v"]).reshape(n, dim)
+        return base_entity + delta
+
+    def loss_fn(f, batch):
+        p, nt, nh = batch
+        params = {"entity": entity_of(f), "relation": relation}
+        l_kge = kge_loss(params, p, nt, nh, method, gamma)
+        eye = jnp.eye(r)
+        ortho = (
+            jnp.mean(jnp.sum((jnp.einsum("nmr,nms->nrs", f["u"], f["u"]) - eye) ** 2, (-2, -1)))
+            + jnp.mean(jnp.sum((jnp.einsum("nkr,nks->nrs", f["v"], f["v"]) - eye) ** 2, (-2, -1)))
+        ) / (r * r)
+        return l_kge + alpha * ortho
+
+    factors = {"u": u, "s": s, "v": v}
+    opt = adam_init(factors)
+
+    def step_fn(carry, batch):
+        f, opt = carry
+        _, grads = jax.value_and_grad(loss_fn)(f, batch)
+        f, opt = adam_update(grads, opt, f, lr)
+        return (f, opt), 0.0
+
+    nb = pos.shape[0]
+    take = min(steps, nb)
+    (factors, _), _ = jax.lax.scan(
+        step_fn, (factors, opt), (pos[:take], neg_t[:take], neg_h[:take])
+    )
+    return factors["u"], factors["s"], factors["v"]
+
+
+# --------------------------------------------------------------------- KD
+@functools.partial(jax.jit, static_argnames=("method", "gamma", "lr", "temp"))
+def _kd_train_epoch(
+    params_lo,
+    params_hi,
+    opt_lo,
+    opt_hi,
+    pos,
+    neg_t,
+    neg_h,
+    method: str,
+    gamma: float,
+    lr: float,
+    temp: float,
+):
+    """Joint low/high-dim training with mutual KL co-distillation (Eq. 6)."""
+
+    def scores(params, p, nt, nh):
+        h, r, t = p[:, 0], p[:, 1], p[:, 2]
+        pos_s = score_triples(params, h, r, t, method, gamma)[:, None]
+        neg_ts = score_triples(params, h, r, nt, method, gamma)
+        neg_hs = score_triples(params, nh, r, t, method, gamma)
+        return jnp.concatenate([pos_s, neg_ts, neg_hs], axis=-1)  # (B, 1+2N)
+
+    def loss_fn(both, batch):
+        p, nt, nh = batch
+        l_lo = kge_loss(both["lo"], p, nt, nh, method, gamma, temp)
+        l_hi = kge_loss(both["hi"], p, nt, nh, method, gamma, temp)
+        s_lo = jax.nn.log_softmax(scores(both["lo"], p, nt, nh), axis=-1)
+        s_hi = jax.nn.log_softmax(scores(both["hi"], p, nt, nh), axis=-1)
+        kl_lh = jnp.sum(jnp.exp(s_lo) * (s_lo - s_hi), axis=-1).mean()
+        kl_hl = jnp.sum(jnp.exp(s_hi) * (s_hi - s_lo), axis=-1).mean()
+        # Adaptive weighting: co-distillation strengthens as supervised loss
+        # shrinks (Eq. 6 denominator), gradients through the weight stopped.
+        denom = jax.lax.stop_gradient(l_lo + l_hi) + 1e-6
+        return l_lo + l_hi + (kl_lh + kl_hl) / denom
+
+    both = {"lo": params_lo, "hi": params_hi}
+    opt = {"lo": opt_lo, "hi": opt_hi}
+
+    def step(carry, batch):
+        both, opt = carry
+        loss, grads = jax.value_and_grad(loss_fn)(both, batch)
+        new_lo, opt_lo2 = adam_update(grads["lo"], opt["lo"], both["lo"], lr)
+        new_hi, opt_hi2 = adam_update(grads["hi"], opt["hi"], both["hi"], lr)
+        return ({"lo": new_lo, "hi": new_hi}, {"lo": opt_lo2, "hi": opt_hi2}), loss
+
+    (both, opt), losses = jax.lax.scan(step, (both, opt), (pos, neg_t, neg_h))
+    return both["lo"], both["hi"], opt["lo"], opt["hi"], losses.mean()
+
+
+@dataclasses.dataclass
+class CompressionConfig:
+    strategy: str = "svd"  # kd | svd | svdp
+    method: str = "transe"
+    dim: int = 256
+    kd_low_dim: int = 192
+    svd_cols: int = 8
+    svd_rank: int = 5
+    svdp_alpha: float = 0.05
+    svdp_steps: int = 8
+    rounds: int = 100
+    local_epochs: int = 3
+    batch_size: int = 512
+    num_negatives: int = 64
+    lr: float = 1e-4
+    gamma: float = 8.0
+    eval_every: int = 5
+    patience: int = 3
+    max_eval_triples: int = 500
+    seed: int = 0
+
+
+def run_compression(
+    clients_data: list[ClientData],
+    num_global_entities: int,
+    cfg: CompressionConfig,
+    verbose: bool = False,
+):
+    """Run FedE-{KD,SVD,SVD+}; returns a FederatedResult-compatible record."""
+    from repro.federated.simulation import FederatedResult, FederatedConfig, _snapshot, _restore
+
+    clients = [
+        KGEClient(
+            d,
+            method=cfg.method,
+            dim=cfg.dim,
+            gamma=cfg.gamma,
+            batch_size=cfg.batch_size,
+            num_negatives=cfg.num_negatives,
+            lr=cfg.lr,
+            seed=cfg.seed,
+        )
+        for d in clients_data
+    ]
+    views = build_comm_views([d.local_to_global for d in clients_data], num_global_entities)
+    ledger = CommLedger()
+    eval_history: list[tuple[int, float, float]] = []
+    best = {"mrr": -1.0, "round": 0, "snap": None}
+    declines, prev_mrr, rounds_run = 0, -1.0, 0
+
+    if cfg.strategy == "kd":
+        lo_models = [
+            KGEModel(method=cfg.method, num_entities=d.num_entities,  # type: ignore[arg-type]
+                     num_relations=d.num_relations, dim=cfg.kd_low_dim)
+            for d in clients_data
+        ]
+        params_lo = [
+            init_kge_params(jax.random.PRNGKey(cfg.seed * 31 + i + 1), m)
+            for i, m in enumerate(lo_models)
+        ]
+        opt_lo = [adam_init(p) for p in params_lo]
+        per_entity = cfg.kd_low_dim
+    else:
+        per_entity = svd_params_per_entity(cfg.dim, cfg.svd_cols, cfg.svd_rank)
+
+    for t in range(cfg.rounds):
+        rounds_run = t + 1
+        uploads = []
+        if cfg.strategy == "kd":
+            for i, c in enumerate(clients):
+                for _ in range(cfg.local_epochs):
+                    stacked = [b for b in c.loader.epoch()]
+                    pos = jnp.asarray(np.stack([b[0] for b in stacked]))
+                    nt = jnp.asarray(np.stack([b[1] for b in stacked]))
+                    nh = jnp.asarray(np.stack([b[2] for b in stacked]))
+                    params_lo[i], c.params, opt_lo[i], c.opt_state, _ = _kd_train_epoch(
+                        params_lo[i], c.params, opt_lo[i], c.opt_state,
+                        pos, nt, nh, cfg.method, cfg.gamma, cfg.lr, 1.0,
+                    )
+                v = views[i]
+                uploads.append(Upload(
+                    client_id=i,
+                    entity_ids=v.shared_global.astype(np.int64),
+                    values=np.asarray(params_lo[i]["entity"])[v.shared_local],
+                ))
+                ledger.params_transmitted += v.num_shared * per_entity
+                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+            mean, _ = fede_aggregate(uploads, num_global_entities)
+            for i, v in enumerate(views):
+                params_lo[i]["entity"] = (
+                    params_lo[i]["entity"]
+                    .at[jnp.asarray(v.shared_local)]
+                    .set(jnp.asarray(mean[v.shared_global]))
+                )
+                ledger.params_transmitted += v.num_shared * per_entity
+                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+        else:  # svd / svdp
+            bases = [np.asarray(c.params["entity"]) for c in clients]
+            for i, c in enumerate(clients):
+                c.train_local(cfg.local_epochs)
+                v = views[i]
+                delta = np.asarray(c.params["entity"])[v.shared_local] - bases[i][v.shared_local]
+                u, s, vv = svd_compress(delta, cfg.svd_cols, cfg.svd_cols)  # full rank first
+                if cfg.strategy == "svdp":
+                    stacked = [b for b in c.loader.epoch()]
+                    pos = jnp.asarray(np.stack([b[0] for b in stacked]))
+                    nt = jnp.asarray(np.stack([b[1] for b in stacked]))
+                    nh = jnp.asarray(np.stack([b[2] for b in stacked]))
+                    # refine factors of the shared rows only
+                    u_j, s_j, v_j = _svdp_refine(
+                        jnp.asarray(bases[i][v.shared_local]),
+                        jnp.asarray(u), jnp.asarray(s), jnp.asarray(vv),
+                        c.params["relation"], pos, nt, nh,
+                        cfg.method, cfg.gamma, cfg.lr, cfg.svdp_alpha, cfg.svdp_steps,
+                    )
+                    u, s, vv = np.asarray(u_j), np.asarray(s_j), np.asarray(v_j)
+                u, s, vv = u[:, :, : cfg.svd_rank], s[:, : cfg.svd_rank], vv[:, :, : cfg.svd_rank]
+                restored = svd_restore(u, s, vv, cfg.dim)
+                uploads.append(Upload(
+                    client_id=i,
+                    entity_ids=v.shared_global.astype(np.int64),
+                    values=restored.astype(np.float32),
+                ))
+                ledger.params_transmitted += v.num_shared * per_entity
+                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+            mean_update, _ = fede_aggregate(uploads, num_global_entities)
+            for i, v in enumerate(views):
+                # Server re-compresses the aggregated update before download.
+                upd = mean_update[v.shared_global]
+                u, s, vv = svd_compress(upd, cfg.svd_cols, cfg.svd_rank)
+                upd_lossy = svd_restore(u, s, vv, cfg.dim)
+                new_rows = bases[i][v.shared_local] + upd_lossy
+                clients[i].set_entity_rows(v.shared_local, new_rows)
+                ledger.params_transmitted += v.num_shared * per_entity
+                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+        ledger.end_round()
+
+        if (t + 1) % cfg.eval_every == 0:
+            val = weighted_average(
+                [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
+            )
+            eval_history.append((t + 1, val["mrr"], val["hits10"]))
+            if verbose:
+                print(f"[{cfg.strategy}] round {t+1:4d} val MRR {val['mrr']:.4f}")
+            if val["mrr"] > best["mrr"]:
+                best = {"mrr": val["mrr"], "round": t + 1, "snap": _snapshot(clients)}
+            declines = declines + 1 if val["mrr"] < prev_mrr else 0
+            prev_mrr = val["mrr"]
+            if declines >= cfg.patience:
+                break
+
+    if best["snap"] is not None:
+        _restore(clients, best["snap"])
+    test = weighted_average([c.evaluate("test", cfg.max_eval_triples) for c in clients])
+    fed_cfg = FederatedConfig(method=cfg.method, protocol=f"fede_{cfg.strategy}",
+                              dim=cfg.dim, rounds=cfg.rounds,
+                              local_epochs=cfg.local_epochs, lr=cfg.lr, seed=cfg.seed)
+    return FederatedResult(
+        config=fed_cfg,
+        eval_history=eval_history,
+        ledger=ledger,
+        best_round=int(best["round"]),
+        val_mrr_cg=float(best["mrr"]),
+        test_mrr_cg=float(test["mrr"]),
+        test_hits10_cg=float(test["hits10"]),
+        rounds_run=rounds_run,
+    )

@@ -1,0 +1,141 @@
+"""TPU-native FedS: sparse embedding synchronization as an SPMD collective.
+
+This is the deployment path of the paper's protocol (DESIGN.md §3): clients
+are shards of the ``data`` mesh axis (cross-silo federation on a pod), and one
+FedS communication round becomes a single `shard_map`-wrapped collective:
+
+1. each shard computes entity-wise change scores vs its upload history
+   (fused Pallas kernel) and selects its static Top-K rows,
+2. the (indices, values) buffers are exchanged with ``lax.all_gather`` over
+   the client axis — fixed-size dense buffers, the TPU-idiomatic replacement
+   for the paper's ragged uploads,
+3. every shard reproduces the *personalized* server aggregation locally:
+   ``segment_sum`` scatter-adds every OTHER shard's uploads into a dense
+   (N, D) aggregate + (N,) priority-count vector (Eq. 3),
+4. downstream Top-K by priority (upload frequency) with a deterministic
+   jitter tie-break, then the fused Eq. 4 masked row update.
+
+Semantic deltas vs the host protocol (property-tested in
+tests/test_distributed.py): static K (ragged "fewer-than-K" handled by the
+priority>0 mask) and deterministic instead of random tie-breaking.
+
+Communication cost per round per shard: ``K·D + K`` words gathered from each
+peer — exactly the paper's upstream payload; the "download" is computed
+redundantly on-shard instead of transmitted, which on a pod is free (the
+all-gather already delivered the inputs) and removes the server round-trip
+entirely.  This is a beyond-paper optimization recorded in EXPERIMENTS.md
+§Perf: bidirectional client↔server traffic becomes one all-gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sparsify import change_scores, select_top_k
+from repro.kernels import ops as kernel_ops
+
+
+def sparse_sync_step(
+    emb: jnp.ndarray,  # (N, D) this shard's embedding table
+    hist: jnp.ndarray,  # (N, D) this shard's upload history
+    k: int,
+    axis_name: str = "data",
+    jitter: Optional[jnp.ndarray] = None,  # (N,) tie-break noise in [0, 1)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One FedS round as seen by one shard (call inside shard_map).
+
+    Returns (updated embeddings, updated history).
+    """
+    n, d = emb.shape
+    num_clients = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+
+    # -- upstream: entity-wise Top-K (Eq. 1-2)
+    scores = change_scores(emb, hist)
+    idx, _sign = select_top_k(scores, k)
+    vals = jnp.take(emb, idx, axis=0)
+    new_hist = hist.at[idx].set(vals)
+
+    # -- exchange: one all-gather of fixed-size buffers
+    all_idx = jax.lax.all_gather(idx, axis_name)  # (C, K)
+    all_vals = jax.lax.all_gather(vals, axis_name)  # (C, K, D)
+
+    # -- personalized aggregation (Eq. 3): exclude own upload
+    peer = (jnp.arange(num_clients) != me).astype(emb.dtype)  # (C,)
+    flat_idx = all_idx.reshape(-1)
+    flat_vals = (all_vals * peer[:, None, None]).reshape(-1, d)
+    flat_cnt = jnp.broadcast_to(peer[:, None], (num_clients, k)).reshape(-1)
+    agg = jax.ops.segment_sum(flat_vals, flat_idx, num_segments=n)  # (N, D)
+    pri = jax.ops.segment_sum(flat_cnt, flat_idx, num_segments=n)  # (N,)
+
+    # -- downstream personalized Top-K by priority weight
+    rank_key = pri + (jitter if jitter is not None else 0.0)
+    _, sel = jax.lax.top_k(rank_key, k)
+    sign = jnp.zeros((n,), jnp.int8).at[sel].set(1)
+    sign = jnp.where(pri > 0, sign, 0)  # "fewer than K available" mask
+
+    # -- Eq. 4 masked row update (fused kernel)
+    new_emb = kernel_ops.sparse_apply(emb, agg, pri, sign).astype(emb.dtype)
+    return new_emb, new_hist
+
+
+def full_sync_step(
+    emb: jnp.ndarray, axis_name: str = "data"
+) -> jnp.ndarray:
+    """Intermittent synchronization round: FedE mean across all shards."""
+    return jax.lax.pmean(emb, axis_name)
+
+
+def feds_round(
+    emb: jnp.ndarray,
+    hist: jnp.ndarray,
+    round_idx: jnp.ndarray,  # () int32
+    k: int,
+    sync_interval: int,
+    axis_name: str = "data",
+    jitter: Optional[jnp.ndarray] = None,
+):
+    """Dispatch sparse vs synchronization round under jit (lax.cond)."""
+
+    def sparse(args):
+        e, h = args
+        return sparse_sync_step(e, h, k, axis_name, jitter)
+
+    def full(args):
+        e, _h = args
+        mean = full_sync_step(e, axis_name)
+        # pmean output is axis-invariant; re-mark it varying so both cond
+        # branches have identical vma types under shard_map.
+        mean = jax.lax.pcast(mean, axis_name, to="varying")
+        return mean, mean  # history refreshed to the synchronized table
+
+    is_sync = (round_idx + 1) % (sync_interval + 1) == 0
+    return jax.lax.cond(is_sync, full, sparse, (emb, hist))
+
+
+def make_sharded_feds_round(mesh, k: int, sync_interval: int, axis_name: str = "data"):
+    """Build a jitted shard_map'd FedS round over ``mesh[axis_name]``.
+
+    The embedding/history tables are per-shard-private (one "client" replica
+    per data shard), expressed as a leading client axis sharded over
+    ``axis_name``: callers pass (C, N, D) global arrays.
+    """
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P()),
+        out_specs=(P(axis_name), P(axis_name)),
+    )
+    def _round(emb_c, hist_c, round_idx):
+        # emb_c: (1, N, D) — this shard's client table
+        new_emb, new_hist = feds_round(
+            emb_c[0], hist_c[0], round_idx[0], k, sync_interval, axis_name
+        )
+        return new_emb[None], new_hist[None]
+
+    return jax.jit(_round)

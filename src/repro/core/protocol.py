@@ -1,0 +1,145 @@
+"""Round-level protocol primitives for FedE / FedEP / FedS.
+
+These functions are the glue between the jit-level primitives
+(:mod:`repro.core.sparsify`, :mod:`repro.kernels.ops`) and the federated
+simulation loop (:mod:`repro.federated.simulation`).  Everything here operates
+on one communication round.
+
+Protocol variants (paper §IV-B):
+
+* ``single`` — no communication at all (local KGE only).
+* ``fedep``  — personalized FedE: full exchange every round, evaluation on
+  the personalized (local) embeddings.  ``FedEPL`` is ``fedep`` at a reduced
+  embedding dimension (Eq. 5-matched), selected purely via config.
+* ``feds``   — the paper: upstream/downstream entity-wise Top-K rounds with
+  intermittent full synchronization every ``s`` rounds.
+* ``feds_nosync`` — ablation (Fig. 2): FedS without the synchronization
+  mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import Upload
+from repro.core.sparsify import sparsity_k, upstream_sparsify
+from repro.kernels import ops as kernel_ops
+
+
+@dataclasses.dataclass
+class ClientCommView:
+    """Static communication-relevant view of one client.
+
+    ``shared_local``: local ids of entities shared with >=1 other client.
+    ``shared_global``: their global ids (same order).
+    """
+
+    client_id: int
+    shared_local: np.ndarray  # (Ns,) int32
+    shared_global: np.ndarray  # (Ns,) int32
+    global_to_row: dict  # global id -> row index in the shared arrays
+
+    @property
+    def num_shared(self) -> int:
+        return int(self.shared_local.shape[0])
+
+
+def build_comm_views(clients_local_to_global: list[np.ndarray], num_global: int):
+    """Compute each client's shared-entity view (paper: exclusive entities
+    are never communicated)."""
+    count = np.zeros(num_global, dtype=np.int64)
+    for l2g in clients_local_to_global:
+        count[l2g] += 1
+    shared = count >= 2
+    views = []
+    for cid, l2g in enumerate(clients_local_to_global):
+        mask = shared[l2g]
+        local_ids = np.nonzero(mask)[0].astype(np.int32)
+        global_ids = l2g[local_ids].astype(np.int32)
+        views.append(
+            ClientCommView(
+                client_id=cid,
+                shared_local=local_ids,
+                shared_global=global_ids,
+                global_to_row={int(g): i for i, g in enumerate(global_ids)},
+            )
+        )
+    return views
+
+
+# ------------------------------------------------------------------ upstream
+def sparse_upload(
+    entity_table: jnp.ndarray,  # client's full (N_c, D) table
+    history: jnp.ndarray,  # (Ns, D) history of SHARED rows
+    view: ClientCommView,
+    p: float,
+) -> tuple[Upload, jnp.ndarray]:
+    """Upstream Entity-Wise Top-K (paper §III-C).
+
+    Returns (Upload in global id space, refreshed history).
+    """
+    cur = entity_table[jnp.asarray(view.shared_local)]
+    k = sparsity_k(view.num_shared, p)
+    idx, values, _sign, new_history = upstream_sparsify(cur, history, k)
+    idx_np = np.asarray(idx)
+    return (
+        Upload(
+            client_id=view.client_id,
+            entity_ids=view.shared_global[idx_np].astype(np.int64),
+            values=np.asarray(values, dtype=np.float32),
+        ),
+        new_history,
+    )
+
+
+def full_upload(
+    entity_table: jnp.ndarray, view: ClientCommView
+) -> tuple[Upload, jnp.ndarray]:
+    """Synchronization-round upload: every shared entity, history refreshed."""
+    cur = entity_table[jnp.asarray(view.shared_local)]
+    return (
+        Upload(
+            client_id=view.client_id,
+            entity_ids=view.shared_global.astype(np.int64),
+            values=np.asarray(cur, dtype=np.float32),
+        ),
+        cur,
+    )
+
+
+# ---------------------------------------------------------------- downstream
+def apply_sparse_download(
+    entity_table: jnp.ndarray,
+    view: ClientCommView,
+    down_entity_ids: np.ndarray,  # (k',) global ids
+    down_values: np.ndarray,  # (k', D) aggregated sums A
+    down_priority: np.ndarray,  # (k',) counts P
+) -> jnp.ndarray:
+    """Eq. 4 on the selected rows, through the fused masked-row kernel."""
+    ns = view.num_shared
+    dim = entity_table.shape[1]
+    rows = np.asarray([view.global_to_row[int(g)] for g in down_entity_ids], dtype=np.int32)
+    agg = jnp.zeros((ns, dim), dtype=jnp.float32)
+    pri = jnp.zeros((ns,), dtype=jnp.float32)
+    sign = jnp.zeros((ns,), dtype=jnp.int8)
+    if rows.size:
+        agg = agg.at[rows].set(jnp.asarray(down_values, dtype=jnp.float32))
+        pri = pri.at[rows].set(jnp.asarray(down_priority, dtype=jnp.float32))
+        sign = sign.at[rows].set(1)
+    shared_rows = entity_table[jnp.asarray(view.shared_local)]
+    updated = kernel_ops.sparse_apply(shared_rows, agg, pri, sign)
+    return entity_table.at[jnp.asarray(view.shared_local)].set(
+        updated.astype(entity_table.dtype)
+    )
+
+
+def apply_full_download(
+    entity_table: jnp.ndarray,
+    view: ClientCommView,
+    global_mean: np.ndarray,  # (E, D) FedE-aggregated global table
+) -> jnp.ndarray:
+    """FedE / sync-round download: replace shared rows with the global mean."""
+    rows = jnp.asarray(global_mean[view.shared_global], dtype=entity_table.dtype)
+    return entity_table.at[jnp.asarray(view.shared_local)].set(rows)

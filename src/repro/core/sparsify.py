@@ -1,0 +1,84 @@
+"""Upstream Entity-Wise Top-K Sparsification (paper §III-C, Eq. 1-2).
+
+Entity-wise (row-wise) sparsification: whole embedding rows are either sent
+at full precision or not sent at all — never element-wise truncated.  That is
+the paper's core departure from parameter-wise Top-K sparsification in
+generic federated learning.
+
+All functions here are jit-safe (static K); the federated simulation and the
+TPU shard_map collective both build on them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+
+def sparsity_k(num_entities: int, p: float) -> int:
+    """K = N_c * p (Eq. 2), at least 1, at most N_c."""
+    return max(1, min(num_entities, int(round(num_entities * p))))
+
+
+def change_scores(
+    current: jnp.ndarray, history: jnp.ndarray, use_kernel: bool = True
+) -> jnp.ndarray:
+    """M = 1 - cos(E^t, E^h) per entity row (Eq. 1).
+
+    current/history: (N, D).  Returns (N,) change scores in [0, 2].
+    ``use_kernel`` routes through the fused Pallas kernel wrapper (which
+    falls back to the jnp reference off-TPU).
+    """
+    if use_kernel:
+        return kernel_ops.change_score(current, history)
+    num = (current * history).sum(axis=-1)
+    den = jnp.linalg.norm(current, axis=-1) * jnp.linalg.norm(history, axis=-1)
+    return 1.0 - num / jnp.maximum(den, 1e-12)
+
+
+def select_top_k(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-K entity indices by change score + 0/1 sign vector.
+
+    Returns (indices (k,) int32 in descending-score order, sign (N,) int8).
+    """
+    _, idx = jax.lax.top_k(scores, k)
+    sign = jnp.zeros(scores.shape[0], dtype=jnp.int8).at[idx].set(1)
+    return idx.astype(jnp.int32), sign
+
+
+def upstream_sparsify(
+    current: jnp.ndarray,
+    history: jnp.ndarray,
+    k: int,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full client-side upstream pass.
+
+    Returns ``(indices (k,), values (k, D), sign (N,), new_history (N, D))``.
+    ``new_history`` has the selected rows refreshed to ``current`` (paper:
+    "updating corresponding embeddings in E_h for selected Top-K entities").
+    """
+    scores = change_scores(current, history, use_kernel=use_kernel)
+    idx, sign = select_top_k(scores, k)
+    values = current[idx]
+    new_history = history.at[idx].set(values)
+    return idx, values, sign, new_history
+
+
+def quantize_rows(values: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise symmetric int8 quantization of selected embedding rows.
+
+    Beyond-paper extension (EXPERIMENTS.md §Repro): the paper keeps selected
+    rows at full precision; FedS+Q8 additionally quantizes the wire payload
+    (int8 + one f32 scale per row = ~4x fewer bytes per selected row).
+    Returns (q (k, D) int8, scale (k,) f32); dequantize with q * scale.
+    """
+    scale = jnp.max(jnp.abs(values), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(values / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[:, None]

@@ -1,0 +1,49 @@
+"""Intermittent Synchronization Mechanism (paper §III-E) + Eq. 5 analysis.
+
+Both clients and the server check whether the distance from the last
+synchronization round has reached the predefined interval ``s``; if so, the
+round is a full-exchange (standard FedE) round, otherwise a sparsified round.
+With the convention used in the paper's Eq. 5 a *cycle* is ``s`` sparsified
+rounds followed by 1 synchronization round (s+1 rounds total).
+"""
+from __future__ import annotations
+
+
+def is_sync_round(round_idx: int, interval: int) -> bool:
+    """True if ``round_idx`` is a full-synchronization round.
+
+    Round 0 is the first sparsified round; rounds s, 2(s+1)-? ... — we use the
+    cycle convention: rounds ``s, 2s+1, 3s+2, ...`` i.e.
+    ``(round_idx + 1) % (interval + 1) == 0``: every cycle has exactly
+    ``interval`` sparse rounds then one sync round, matching Eq. 5's
+    accounting of ``s`` sparse + 1 full exchange per cycle.
+    """
+    if interval <= 0:
+        return True  # degenerate: sync every round == plain FedE
+    return (round_idx + 1) % (interval + 1) == 0
+
+
+def comm_ratio_worst_case(p: float, s: int, dim: int) -> float:
+    """Eq. 5: ratio of parameters transmitted by FedS vs full-exchange FKGE.
+
+    R = (p*s + 1 + (2+p)*s / (2D)) / (s + 1)
+
+    Worst case (every client always finds K downstream candidates; sign
+    vectors accounted at full dtype width, as the paper does).
+    """
+    return (p * s + 1.0 + (2.0 + p) * s / (2.0 * dim)) / (s + 1.0)
+
+
+def cycle_params_feds(n_entities: int, dim: int, p: float, s: int) -> float:
+    """Absolute per-cycle parameter count transmitted by FedS for one client.
+
+    2*(N*D*p*s + N*D) swapped embeddings + 2*N*s sign vectors + N*p*s priority
+    entries (numerator of Eq. 5).
+    """
+    k = n_entities * p
+    return 2 * (k * dim * s + n_entities * dim) + 2 * n_entities * s + k * s
+
+
+def cycle_params_full(n_entities: int, dim: int, s: int) -> float:
+    """Per-cycle parameter count for a full-exchange method (denominator)."""
+    return 2 * n_entities * dim * (s + 1)

@@ -1,0 +1,13 @@
+"""Data substrate: synthetic KG generation, relation partitioning, loaders."""
+from repro.data.synthetic import KnowledgeGraph, generate_kg
+from repro.data.partition import ClientData, partition_by_relation
+from repro.data.loader import TripleLoader, sample_negatives
+
+__all__ = [
+    "KnowledgeGraph",
+    "generate_kg",
+    "ClientData",
+    "partition_by_relation",
+    "TripleLoader",
+    "sample_negatives",
+]

@@ -1,0 +1,75 @@
+"""Batch loading + negative sampling for KGE training.
+
+Host-side numpy pipeline (cheap relative to the jitted train step); batches
+are handed to JAX as int32 arrays of static shape, so the train step compiles
+once per (batch_size, num_negatives).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_negatives(
+    rng: np.random.Generator,
+    batch: np.ndarray,  # (B, 3)
+    num_entities: int,
+    num_negatives: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Uniform corruption of tails and heads.  Returns (neg_tails, neg_heads).
+
+    Follows FedE: negatives are drawn uniformly from the client's local
+    entity set; filtering of false negatives is handled statistically (the
+    self-adversarial loss down-weights easy/true negatives).
+    """
+    b = batch.shape[0]
+    neg_t = rng.integers(0, num_entities, size=(b, num_negatives), dtype=np.int32)
+    neg_h = rng.integers(0, num_entities, size=(b, num_negatives), dtype=np.int32)
+    return neg_t, neg_h
+
+
+class TripleLoader:
+    """Infinite shuffled batch iterator over a triple array (static shapes).
+
+    The final partial batch of every epoch is wrapped around (standard KGE
+    practice) so every yielded batch has exactly ``batch_size`` rows.
+    """
+
+    def __init__(
+        self,
+        triples: np.ndarray,
+        batch_size: int,
+        num_entities: int,
+        num_negatives: int = 64,
+        seed: int = 0,
+    ):
+        assert triples.shape[0] > 0
+        self.triples = triples
+        self.batch_size = int(min(batch_size, triples.shape[0]))
+        self.num_entities = num_entities
+        self.num_negatives = num_negatives
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(triples.shape[0])
+        self._pos = 0
+
+    @property
+    def batches_per_epoch(self) -> int:
+        return max(1, self.triples.shape[0] // self.batch_size)
+
+    def next_batch(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (pos (B,3), neg_tails (B,N), neg_heads (B,N))."""
+        n = self.triples.shape[0]
+        if self._pos + self.batch_size > n:
+            self._order = self.rng.permutation(n)
+            self._pos = 0
+        idx = self._order[self._pos : self._pos + self.batch_size]
+        self._pos += self.batch_size
+        pos = self.triples[idx]
+        neg_t, neg_h = sample_negatives(
+            self.rng, pos, self.num_entities, self.num_negatives
+        )
+        return pos, neg_t, neg_h
+
+    def epoch(self):
+        """Yield one epoch's worth of batches."""
+        for _ in range(self.batches_per_epoch):
+            yield self.next_batch()

@@ -1,0 +1,14 @@
+"""Federated runtime: clients, server orchestration, metrics, comm ledger."""
+from repro.federated.client import KGEClient
+from repro.federated.comm import CommLedger
+from repro.federated.metrics import weighted_average
+from repro.federated.simulation import FederatedConfig, FederatedResult, run_federated
+
+__all__ = [
+    "KGEClient",
+    "CommLedger",
+    "weighted_average",
+    "FederatedConfig",
+    "FederatedResult",
+    "run_federated",
+]

@@ -1,0 +1,42 @@
+"""Communication-cost ledger: the paper's P@CG / P@99 / P@98 / R@CG metrics.
+
+Counts are in *parameters* (float-equivalents), matching Eq. 5's accounting
+where sign vectors are counted at full dtype width.  Byte counts with int8
+sign vectors are tracked alongside (DESIGN.md §3 adaptation note).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CommLedger:
+    params_transmitted: float = 0.0  # Eq.5-style float-equivalent parameter count
+    bytes_int8_signs: float = 0.0  # realistic wire bytes (f32 payload, i8 signs)
+    rounds: int = 0
+    history: list = dataclasses.field(default_factory=list)  # (round, cum_params)
+
+    def log_upload_sparse(self, k: int, dim: int, n_entities: int) -> None:
+        self.params_transmitted += k * dim + n_entities  # values + sign vector
+        self.bytes_int8_signs += k * dim * 4 + n_entities * 1 + k * 4  # +indices i32
+
+    def log_download_sparse(self, k: int, dim: int, n_entities: int) -> None:
+        # values + priority vector + sign vector
+        self.params_transmitted += k * dim + k + n_entities
+        self.bytes_int8_signs += k * dim * 4 + k * 4 + n_entities * 1 + k * 4
+
+    def log_full_exchange(self, n_entities: int, dim: int) -> None:
+        """One direction of a full (sync / FedE) exchange."""
+        self.params_transmitted += n_entities * dim
+        self.bytes_int8_signs += n_entities * dim * 4
+
+    def end_round(self) -> None:
+        self.rounds += 1
+        self.history.append((self.rounds, self.params_transmitted))
+
+    def params_at_round(self, r: int) -> float:
+        """Cumulative params transmitted by the end of round r (1-indexed)."""
+        for rr, p in self.history:
+            if rr == r:
+                return p
+        return self.history[-1][1] if self.history else 0.0

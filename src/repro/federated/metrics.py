@@ -1,0 +1,28 @@
+"""Federated metric aggregation (paper §IV-B).
+
+"The overall metric value is derived by aggregating all clients' values
+through weighted average, with weights being the proportions of the triple
+size."
+"""
+from __future__ import annotations
+
+
+def weighted_average(per_client: list[dict]) -> dict:
+    """per_client: list of {"mrr", "hits10", "count"} dicts."""
+    total = sum(m["count"] for m in per_client)
+    if total == 0:
+        return {"mrr": 0.0, "hits10": 0.0, "count": 0}
+    mrr = sum(m["mrr"] * m["count"] for m in per_client) / total
+    hits = sum(m["hits10"] * m["count"] for m in per_client) / total
+    return {"mrr": mrr, "hits10": hits, "count": total}
+
+
+def first_round_reaching(history: list[tuple[int, float]], target: float) -> int | None:
+    """First (eval) round whose metric >= target; None if never reached.
+
+    ``history`` is [(round, metric), ...] in round order.
+    """
+    for r, v in history:
+        if v >= target:
+            return r
+    return None

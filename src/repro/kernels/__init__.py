@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for FedS hot spots.
+
+Layout per the repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
+BlockSpec kernel, :mod:`repro.kernels.ops` the jit'd public wrappers, and
+:mod:`repro.kernels.ref` the pure-jnp oracles the tests sweep against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

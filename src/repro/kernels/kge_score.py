@@ -1,0 +1,119 @@
+"""KGE triple-scoring Pallas kernels (TransE / RotatE negative scoring).
+
+The client-side compute hot spot of FedE-style training is scoring a batch of
+positive triples against N negatives: for TransE that is
+``gamma - ||h + r - t_neg||`` over a (B, N, D) tensor.  XLA materialises the
+(B, N, D) difference tensor in HBM; we instead tile (batch-block x neg-block)
+so the difference lives only in VMEM/VREGs.
+
+Tiling:
+* grid (B/BB, N/BN); per step the kernel sees h,r blocks (BB, D) and a
+  negatives block (BB, BN, D), writes scores (BB, BN),
+* D padded to a lane multiple with zeros (exact for the distance: zero-padded
+  coordinates contribute 0 to h + r - t when all three are padded),
+* BB, BN chosen by the wrapper so the negative block fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transe_kernel(gamma, h_ref, r_ref, t_ref, out_ref):
+    h = h_ref[...].astype(jnp.float32)  # (BB, D)
+    r = r_ref[...].astype(jnp.float32)  # (BB, D)
+    t = t_ref[...].astype(jnp.float32)  # (BB, BN, D)
+    d = (h + r)[:, None, :] - t
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=-1), 1e-24))
+    out_ref[...] = gamma - dist
+
+
+def _rotate_kernel(gamma, half, h_ref, p_ref, t_ref, out_ref):
+    h = h_ref[...].astype(jnp.float32)  # (BB, D)
+    phase = p_ref[...].astype(jnp.float32)  # (BB, half_padded)
+    t = t_ref[...].astype(jnp.float32)  # (BB, BN, D)
+    h_re, h_im = h[:, :half], h[:, half : 2 * half]
+    t_re, t_im = t[:, :, :half], t[:, :, half : 2 * half]
+    ph = phase[:, :half]
+    r_re, r_im = jnp.cos(ph), jnp.sin(ph)
+    d_re = (h_re * r_re - h_im * r_im)[:, None, :] - t_re
+    d_im = (h_re * r_im + h_im * r_re)[:, None, :] - t_im
+    dist = jnp.sqrt(d_re * d_re + d_im * d_im + 1e-12).sum(axis=-1)
+    out_ref[...] = gamma - dist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "block_b", "block_n", "interpret")
+)
+def transe_neg_score_pallas(
+    h: jnp.ndarray,  # (B, D)
+    r: jnp.ndarray,  # (B, D)
+    t_neg: jnp.ndarray,  # (B, N, D)
+    gamma: float,
+    block_b: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n, d = t_neg.shape
+    d_pad = (-d) % 128
+    b_pad = (-b) % block_b
+    n_pad = (-n) % block_n
+    h = jnp.pad(h, ((0, b_pad), (0, d_pad)))
+    r = jnp.pad(r, ((0, b_pad), (0, d_pad)))
+    t_neg = jnp.pad(t_neg, ((0, b_pad), (0, n_pad), (0, d_pad)))
+    bf, nf, df = t_neg.shape
+
+    out = pl.pallas_call(
+        functools.partial(_transe_kernel, gamma),
+        grid=(bf // block_b, nf // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_n, df), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bf, nf), jnp.float32),
+        interpret=interpret,
+    )(h, r, t_neg)
+    return out[:b, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "block_b", "block_n", "interpret")
+)
+def rotate_neg_score_pallas(
+    h: jnp.ndarray,  # (B, D)
+    phase: jnp.ndarray,  # (B, D/2)
+    t_neg: jnp.ndarray,  # (B, N, D)
+    gamma: float,
+    block_b: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, n, d = t_neg.shape
+    half = d // 2
+    d_pad = (-d) % 128
+    p_pad = (-phase.shape[-1]) % 128
+    b_pad = (-b) % block_b
+    n_pad = (-n) % block_n
+    h = jnp.pad(h, ((0, b_pad), (0, d_pad)))
+    phase = jnp.pad(phase, ((0, b_pad), (0, p_pad)))
+    t_neg = jnp.pad(t_neg, ((0, b_pad), (0, n_pad), (0, d_pad)))
+    bf, nf, df = t_neg.shape
+
+    out = pl.pallas_call(
+        functools.partial(_rotate_kernel, gamma, half),
+        grid=(bf // block_b, nf // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, phase.shape[-1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, block_n, df), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bf, nf), jnp.float32),
+        interpret=interpret,
+    )(h, phase, t_neg)
+    return out[:b, :n]

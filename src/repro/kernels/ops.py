@@ -1,0 +1,71 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy:
+* on TPU — compiled Pallas (Mosaic),
+* elsewhere (this container: CPU) — Pallas ``interpret=True`` when
+  ``REPRO_PALLAS_INTERPRET=1`` (used by the kernel test suite), otherwise the
+  pure-jnp reference (fast path for the federated simulation, identical
+  semantics — asserted by tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.change_score import change_score_pallas
+from repro.kernels.kge_score import rotate_neg_score_pallas, transe_neg_score_pallas
+from repro.kernels.sparse_apply import sparse_apply_pallas
+
+
+def _mode() -> str:
+    if jax.default_backend() == "tpu":
+        return "tpu"
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return "interpret"
+    return "ref"
+
+
+def change_score(current: jnp.ndarray, history: jnp.ndarray) -> jnp.ndarray:
+    """(N, D) x (N, D) -> (N,) fused 1-cosine change scores (Eq. 1)."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.change_score_ref(current, history)
+    return change_score_pallas(current, history, interpret=(mode == "interpret"))
+
+
+def transe_neg_score(h, r, t_neg, gamma: float) -> jnp.ndarray:
+    """(B,D),(B,D),(B,N,D) -> (B,N) TransE negative scores."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.transe_neg_score_ref(h, r, t_neg, gamma)
+    return transe_neg_score_pallas(h, r, t_neg, gamma, interpret=(mode == "interpret"))
+
+
+def rotate_neg_score(h, phase, t_neg, gamma: float) -> jnp.ndarray:
+    """(B,D),(B,D/2),(B,N,D) -> (B,N) RotatE negative scores."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.rotate_neg_score_ref(h, phase, t_neg, gamma)
+    return rotate_neg_score_pallas(h, phase, t_neg, gamma, interpret=(mode == "interpret"))
+
+
+def sparse_apply(emb, agg, priority, sign) -> jnp.ndarray:
+    """Masked Eq. 4 row update."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.sparse_apply_ref(emb, agg, priority, sign)
+    return sparse_apply_pallas(emb, agg, priority, sign, interpret=(mode == "interpret"))
+
+
+def ssd_chunk(x, b, c, dt, ld, h_prev):
+    """One Mamba2 SSD chunk: (y (B,L,H,P), h_new (B,H,N,P))."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.ssd_chunk_ref(x, b, c, dt, ld, h_prev)
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+    return ssd_chunk_pallas(x, b, c, dt, ld, h_prev,
+                            interpret=(mode == "interpret"))

@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth: kernel tests sweep shapes/dtypes
+and assert_allclose against these.  The ops wrappers also fall back to these
+on non-TPU backends when interpret mode is disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def change_score_ref(current: jnp.ndarray, history: jnp.ndarray) -> jnp.ndarray:
+    """1 - cosine(current_row, history_row) per row.  (N, D) -> (N,).
+
+    Uses rsqrt of the norm product (what the fused kernel computes) with an
+    epsilon inside the sqrt for zero rows.
+    """
+    dot = jnp.sum(current * history, axis=-1)
+    nc = jnp.sum(current * current, axis=-1)
+    nh = jnp.sum(history * history, axis=-1)
+    return 1.0 - dot * jax.lax.rsqrt(jnp.maximum(nc * nh, 1e-24))
+
+
+def transe_neg_score_ref(
+    h: jnp.ndarray,  # (B, D)
+    r: jnp.ndarray,  # (B, D)
+    t: jnp.ndarray,  # (B, N, D) negative tails
+    gamma: float,
+) -> jnp.ndarray:
+    """gamma - ||h + r - t||_2 per (batch, negative).  -> (B, N)."""
+    d = h[:, None, :] + r[:, None, :] - t
+    return gamma - jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=-1), 1e-24))
+
+
+def rotate_neg_score_ref(
+    h: jnp.ndarray,  # (B, D) interleaved-halves complex
+    phase: jnp.ndarray,  # (B, D/2)
+    t: jnp.ndarray,  # (B, N, D)
+    gamma: float,
+) -> jnp.ndarray:
+    """gamma - sum_j |h_j * e^{i phase_j} - t_j| .  -> (B, N)."""
+    half = h.shape[-1] // 2
+    h_re, h_im = h[..., :half], h[..., half:]
+    t_re, t_im = t[..., :half], t[..., half:]
+    r_re, r_im = jnp.cos(phase), jnp.sin(phase)
+    d_re = (h_re * r_re - h_im * r_im)[:, None, :] - t_re
+    d_im = (h_re * r_im + h_im * r_re)[:, None, :] - t_im
+    return gamma - jnp.sqrt(d_re * d_re + d_im * d_im + 1e-12).sum(axis=-1)
+
+
+def sparse_apply_ref(
+    emb: jnp.ndarray,  # (N, D) local embeddings E^t
+    agg: jnp.ndarray,  # (N, D) dense-scattered aggregate A^t (0 where unsent)
+    priority: jnp.ndarray,  # (N,) priority weights P^t (0 where unsent)
+    sign: jnp.ndarray,  # (N,) 0/1 selection
+) -> jnp.ndarray:
+    """Eq. 4 masked row update: selected rows -> (A + E) / (1 + P)."""
+    updated = (agg + emb) / (1.0 + priority)[:, None]
+    return jnp.where(sign[:, None] != 0, updated, emb)
+
+
+def ssd_chunk_ref(
+    x: jnp.ndarray,  # (B, L, H, P)
+    b: jnp.ndarray,  # (B, L, N)
+    c: jnp.ndarray,  # (B, L, N)
+    dt: jnp.ndarray,  # (B, L, H)
+    ld: jnp.ndarray,  # (B, L, H) log decay
+    h_prev: jnp.ndarray,  # (B, H, N, P)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One Mamba2 SSD chunk (intra + cross + state update), f32.
+
+    y[t] = sum_{j<=t} (c_t . b_j) dt_j exp(cum_t - cum_j) x_j
+         + c_t exp(cum_t) h_prev
+    h'   = exp(cum_L) h_prev + sum_j exp(cum_L - cum_j) dt_j b_j x_j^T
+    """
+    f = jnp.float32
+    x, b, c, dt, ld = (t.astype(f) for t in (x, b, c, dt, ld))
+    h_prev = h_prev.astype(f)
+    l = x.shape[1]
+    cum = jnp.cumsum(ld, axis=1)  # (B,L,H)
+    gap = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,L,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(tri[None, :, :, None], jnp.exp(gap), 0.0)
+    cb = jnp.einsum("btn,bjn->btj", c, b)  # (B,L,L)
+    w = cb[..., None] * decay * dt[:, None, :, :]  # (B,L,L,H)
+    y_intra = jnp.einsum("btjh,bjhp->bthp", w, x)
+    y_cross = jnp.einsum("btn,bth,bhnp->bthp", c, jnp.exp(cum), h_prev)
+    tail = jnp.exp(cum[:, -1:, :] - cum) * dt  # (B,L,H)
+    s_k = jnp.einsum("bln,blh,blhp->bhnp", b, tail, x)
+    h_new = h_prev * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_k
+    return y_intra + y_cross, h_new

@@ -1,0 +1,60 @@
+"""Masked Eq. 4 row-update Pallas kernel.
+
+Client-side download application: for the rows the server selected (sign=1),
+``E <- (A + E) / (1 + P)``; other rows pass through.  Fusing the mask, add,
+and divide into one pass avoids the gather -> update -> scatter round trip
+through HBM that a straightforward ``E.at[idx].set(...)`` lowers to.
+
+Tiling: row blocks (BR, D) in VMEM; priority/sign come in as (BR, 1) columns
+so every operand keeps a lane-aligned 2D layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sparse_apply_kernel(emb_ref, agg_ref, pri_ref, sign_ref, out_ref):
+    emb = emb_ref[...].astype(jnp.float32)  # (BR, D)
+    agg = agg_ref[...].astype(jnp.float32)  # (BR, D)
+    pri = pri_ref[...].astype(jnp.float32)  # (BR, 1)
+    sign = sign_ref[...]  # (BR, 1) int32
+    updated = (agg + emb) / (1.0 + pri)
+    out_ref[...] = jnp.where(sign != 0, updated, emb)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sparse_apply_pallas(
+    emb: jnp.ndarray,  # (N, D)
+    agg: jnp.ndarray,  # (N, D)
+    priority: jnp.ndarray,  # (N,)
+    sign: jnp.ndarray,  # (N,) any int dtype
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, d = emb.shape
+    d_pad = (-d) % 128
+    n_pad = (-n) % block_rows
+    emb_p = jnp.pad(emb, ((0, n_pad), (0, d_pad)))
+    agg_p = jnp.pad(agg, ((0, n_pad), (0, d_pad)))
+    pri_p = jnp.pad(priority.astype(jnp.float32), (0, n_pad))[:, None]
+    sign_p = jnp.pad(sign.astype(jnp.int32), (0, n_pad))[:, None]
+    n_full, d_full = emb_p.shape
+
+    out = pl.pallas_call(
+        _sparse_apply_kernel,
+        grid=(n_full // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d_full), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d_full), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d_full), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_full, d_full), jnp.float32),
+        interpret=interpret,
+    )(emb_p, agg_p, pri_p, sign_p)
+    return out[:n, :d].astype(emb.dtype)

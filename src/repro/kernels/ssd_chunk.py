@@ -1,0 +1,82 @@
+"""Mamba2 SSD chunk kernel — the SSM archs' compute hot spot.
+
+One chunk of the state-space-duality recurrence for one (batch, head)
+program: the intra-chunk attention-like masked matmul, the cross-chunk
+contribution from the carried state, and the state update — all resident in
+VMEM (L x L, L x N, L x P, N x P tiles; L=chunk<=256, N=state<=128, P=head
+dim <=128 all fit comfortably).
+
+Grid: (B, H).  b/c projections are shared across heads (Mamba2 design), so
+their blocks ignore the head index.  The jnp oracle is
+:func:`repro.kernels.ref.ssd_chunk_ref`; `repro/models/ssm.py` routes its
+chunk body through :func:`repro.kernels.ops.ssd_chunk`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dt_ref, ld_ref, h_ref, y_ref, hn_ref):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, P)
+    b = b_ref[0].astype(jnp.float32)  # (L, N)
+    c = c_ref[0].astype(jnp.float32)  # (L, N)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    ld = ld_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    h_prev = h_ref[0, 0].astype(jnp.float32)  # (N, P)
+    l = x.shape[0]
+
+    cum = jnp.cumsum(ld)  # (L,)
+    gap = cum[:, None] - cum[None, :]  # (L, L)
+    tri = jnp.tril(jnp.ones((l, l), jnp.bool_))
+    decay = jnp.where(tri, jnp.exp(gap), 0.0)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (L, L)
+    w = cb * decay * dt[None, :]
+    y_intra = jnp.dot(w, x, preferred_element_type=jnp.float32)  # (L, P)
+    y_cross = jnp.exp(cum)[:, None] * jnp.dot(
+        c, h_prev, preferred_element_type=jnp.float32
+    )
+    y_ref[0, :, 0, :] = y_intra + y_cross
+
+    tail = jnp.exp(cum[-1] - cum) * dt  # (L,)
+    s_k = jnp.dot((b * tail[:, None]).T, x, preferred_element_type=jnp.float32)
+    hn_ref[0, 0] = h_prev * jnp.exp(cum[-1]) + s_k
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jnp.ndarray,  # (B, L, H, P) f32
+    b: jnp.ndarray,  # (B, L, N)
+    c: jnp.ndarray,  # (B, L, N)
+    dt: jnp.ndarray,  # (B, L, H)
+    ld: jnp.ndarray,  # (B, L, H) log decay
+    h_prev: jnp.ndarray,  # (B, H, N, P)
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    y, hn = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(bs, h),
+        in_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, l, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, l, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, l, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bs, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, dt, ld, h_prev)
+    return y, hn

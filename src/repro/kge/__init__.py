@@ -1,0 +1,24 @@
+"""Knowledge-graph-embedding substrate: scoring models + losses.
+
+The three KGE methods the paper evaluates (TransE, RotatE, ComplEx), with the
+self-adversarial negative-sampling loss used by FedE/RotatE.
+"""
+from repro.kge.scoring import (
+    KGEModel,
+    complex_score,
+    init_kge_params,
+    kge_loss,
+    rotate_score,
+    score_triples,
+    transe_score,
+)
+
+__all__ = [
+    "KGEModel",
+    "init_kge_params",
+    "transe_score",
+    "rotate_score",
+    "complex_score",
+    "score_triples",
+    "kge_loss",
+]

@@ -1,0 +1,179 @@
+"""KGE scoring functions: TransE, RotatE, ComplEx.
+
+Conventions (matching FedE / the RotatE reference implementation):
+
+* entity embeddings ``E  : (num_entities, dim)``
+* relation embeddings ``R : (num_relations, rel_dim)``
+* For TransE ``rel_dim == dim``. For RotatE the entity embedding is a point
+  in C^{dim/2} stored as interleaved (re, im) halves and ``rel_dim == dim/2``
+  (a phase per complex coordinate). For ComplEx both entities and relations
+  live in C^{dim/2} (``rel_dim == dim``).
+* Scores are "higher is better".  TransE / RotatE produce
+  ``gamma - distance``; ComplEx produces the trilinear product.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Method = Literal["transe", "rotate", "complex"]
+
+# Initialisation hyper-parameters from the paper (Section IV-B):
+# gamma = 8, epsilon = 2; embedding range = (gamma + eps) / dim.
+DEFAULT_GAMMA = 8.0
+DEFAULT_EPSILON = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class KGEModel:
+    """Static description of a KGE scoring model."""
+
+    method: Method
+    num_entities: int
+    num_relations: int
+    dim: int  # entity embedding dimension (real parameter count per entity)
+    gamma: float = DEFAULT_GAMMA
+    epsilon: float = DEFAULT_EPSILON
+
+    @property
+    def rel_dim(self) -> int:
+        if self.method == "rotate":
+            return self.dim // 2
+        return self.dim
+
+    @property
+    def embedding_range(self) -> float:
+        return (self.gamma + self.epsilon) / self.dim
+
+
+def init_kge_params(key: jax.Array, model: KGEModel) -> dict:
+    """Uniform init in [-embedding_range, embedding_range] as in RotatE/FedE."""
+    k_e, k_r = jax.random.split(key)
+    rng = model.embedding_range
+    ent = jax.random.uniform(
+        k_e, (model.num_entities, model.dim), minval=-rng, maxval=rng
+    )
+    if model.method == "rotate":
+        # Phases in [-pi, pi].
+        rel = jax.random.uniform(
+            k_r, (model.num_relations, model.rel_dim), minval=-jnp.pi, maxval=jnp.pi
+        )
+    else:
+        rel = jax.random.uniform(
+            k_r, (model.num_relations, model.rel_dim), minval=-rng, maxval=rng
+        )
+    return {"entity": ent, "relation": rel}
+
+
+def _split_complex(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split the last dim into (re, im) halves."""
+    half = x.shape[-1] // 2
+    return x[..., :half], x[..., half:]
+
+
+def transe_score(
+    h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float
+) -> jnp.ndarray:
+    """gamma - ||h + r - t||_2 ; broadcasts over leading dims."""
+    return gamma - jnp.linalg.norm(h + r - t, axis=-1)
+
+
+def rotate_score(
+    h: jnp.ndarray, phase: jnp.ndarray, t: jnp.ndarray, gamma: float
+) -> jnp.ndarray:
+    """gamma - || h o r - t ||  with r = exp(i * phase), h,t in C^{d/2}."""
+    h_re, h_im = _split_complex(h)
+    t_re, t_im = _split_complex(t)
+    r_re, r_im = jnp.cos(phase), jnp.sin(phase)
+    d_re = h_re * r_re - h_im * r_im - t_re
+    d_im = h_re * r_im + h_im * r_re - t_im
+    # RotatE uses the sum of complex moduli (L2 over the (re,im) pair, L1 over
+    # coordinates).
+    dist = jnp.sqrt(d_re**2 + d_im**2 + 1e-12).sum(axis=-1)
+    return gamma - dist
+
+
+def complex_score(
+    h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float = 0.0
+) -> jnp.ndarray:
+    """Re(<h, r, conj(t)>)."""
+    del gamma
+    h_re, h_im = _split_complex(h)
+    r_re, r_im = _split_complex(r)
+    t_re, t_im = _split_complex(t)
+    return (
+        (h_re * r_re * t_re)
+        + (h_im * r_re * t_im)
+        + (h_re * r_im * t_im)
+        - (h_im * r_im * t_re)
+    ).sum(axis=-1)
+
+
+_SCORE_FNS = {
+    "transe": transe_score,
+    "rotate": rotate_score,
+    "complex": complex_score,
+}
+
+
+def score_triples(
+    params: dict,
+    heads: jnp.ndarray,
+    relations: jnp.ndarray,
+    tails: jnp.ndarray,
+    method: Method,
+    gamma: float = DEFAULT_GAMMA,
+) -> jnp.ndarray:
+    """Score index triples.  heads/relations/tails broadcast together.
+
+    ``heads``/``tails`` may have an extra negatives axis, e.g.
+    heads (B,), relations (B,), tails (B, N) -> scores (B, N).
+    """
+    h = params["entity"][heads]
+    r = params["relation"][relations]
+    t = params["entity"][tails]
+    if t.ndim == h.ndim + 1:  # negatives on the tail side
+        h = h[..., None, :]
+        r = r[..., None, :]
+    elif h.ndim == t.ndim + 1:  # negatives on the head side
+        t = t[..., None, :]
+        r = r[..., None, :]
+    return _SCORE_FNS[method](h, r, t, gamma)
+
+
+def kge_loss(
+    params: dict,
+    pos: jnp.ndarray,  # (B, 3) int32 (h, r, t)
+    neg_tails: jnp.ndarray,  # (B, N) int32 corrupted tails
+    neg_heads: jnp.ndarray,  # (B, N) int32 corrupted heads
+    method: Method,
+    gamma: float = DEFAULT_GAMMA,
+    adversarial_temperature: float = 1.0,
+) -> jnp.ndarray:
+    """Self-adversarial negative sampling loss (RotatE Eq. 5, used by FedE).
+
+    L = -log sigma(pos_score) - sum_i w_i log sigma(-neg_score_i)
+    with w_i = softmax(neg_score_i * temperature), stop-gradiented.
+    ComplEx uses the same loss on its trilinear scores (FedE convention).
+    Self-adversarial weighting is applied for transe/rotate (paper: temp 1),
+    uniform weighting for complex.
+    """
+    h, r, t = pos[:, 0], pos[:, 1], pos[:, 2]
+    pos_score = score_triples(params, h, r, t, method, gamma)  # (B,)
+    neg_t_score = score_triples(params, h, r, neg_tails, method, gamma)  # (B, N)
+    neg_h_score = score_triples(params, neg_heads, r, t, method, gamma)  # (B, N)
+    neg_score = jnp.concatenate([neg_t_score, neg_h_score], axis=-1)  # (B, 2N)
+
+    if method in ("transe", "rotate") and adversarial_temperature > 0:
+        w = jax.nn.softmax(
+            jax.lax.stop_gradient(neg_score) * adversarial_temperature, axis=-1
+        )
+    else:
+        w = jnp.full_like(neg_score, 1.0 / neg_score.shape[-1])
+
+    pos_loss = -jax.nn.log_sigmoid(pos_score)
+    neg_loss = -(w * jax.nn.log_sigmoid(-neg_score)).sum(axis=-1)
+    return (pos_loss + neg_loss).mean() / 2.0

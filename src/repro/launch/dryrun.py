@@ -1,0 +1,226 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer / inputs
+     (``jax.eval_shape`` — zero allocation),
+  2. jits the right step (train_step / prefill_step / serve_step) with
+     explicit NamedShardings from repro.sharding.specs,
+  3. ``.lower(...).compile()`` — a sharding mismatch, an unsupported
+     collective, or a per-chip OOM here is a bug in the system,
+  4. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the partitioned HLO into a JSON report consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST run before any other import (jax locks the device count on first
+# init).  The dry-run — and ONLY the dry-run — needs 512 placeholder devices.
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_lm
+from repro.sharding.specs import (
+    decode_state_specs,
+    input_specs_sharding,
+    param_specs,
+    strategy_for,
+)
+from repro.train.optimizer import AdamState
+from repro.train.steps import (
+    INPUT_SHAPES,
+    init_serve_state,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    shape_supported,
+)
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    strategy: str | None = None,
+    extra: dict | None = None,
+) -> dict:
+    """Lower + compile one (arch, shape, mesh). Returns the roofline record."""
+    cfg = get_config(arch)
+    if extra:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strategy = strategy or strategy_for(cfg, shape.kind)
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, cfg, mesh, strategy)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    in_specs = input_specs(cfg, shape)
+    ispecs = input_specs_sharding(in_specs, cfg, mesh)
+    ishard = {k: NamedSharding(mesh, v) for k, v in ispecs.items()}
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda p: AdamState(
+                step=jnp.zeros((), jnp.int32),
+                mu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                nu=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+            ),
+            params_shape,
+        )
+        ospecs = AdamState(step=P(), mu=pspecs, nu=pspecs)
+        oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
+        step = make_train_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, ishard),
+            out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+        )
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(params_shape, opt_shape, in_specs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pshard, ishard))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(params_shape, in_specs)
+    else:  # decode
+        long_ctx = shape.name == "long_500k"
+        enc_spec = in_specs.get("encoder_embeds")
+        state_shape = jax.eval_shape(
+            lambda p: init_serve_state(p, cfg, shape, encoder_embeds=enc_spec and
+                                       jnp.zeros(enc_spec.shape, enc_spec.dtype)),
+            params_shape,
+        )
+        sspecs = decode_state_specs(state_shape, cfg, mesh)
+        sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+        step = make_serve_step(cfg, long_context=long_ctx)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, ishard["token"], sshard),
+            out_shardings=(None, sshard),
+        )
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(params_shape, in_specs["token"], state_shape)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+    hlo = compiled.as_text()
+    from repro.launch.hlo_costs import analyze as hlo_analyze
+
+    walker = hlo_analyze(hlo)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": strategy,
+        "status": "OK",
+        "kind": shape.kind,
+        "num_devices": int(n_dev),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # loop-aware walker numbers (per device) — the roofline inputs
+        "flops_per_device": float(walker["flops"]),
+        "bytes_per_device": float(walker["bytes"]),
+        "collective_bytes_per_device": {
+            **{k: float(v) for k, v in walker["collectives"].items()},
+            "_total": float(walker["collective_bytes"]),
+        },
+        # raw XLA numbers for reference (while bodies counted once!)
+        "xla_flops_per_device": float(cost.get("flops", -1.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "tokens": shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default=None, choices=[None, "tp", "fsdp"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=multi, strategy=args.strategy)
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+                records.append(rec)
+                if rec["status"] == "OK":
+                    mem_gb = (rec["memory"]["argument_bytes"]
+                              + rec["memory"]["temp_bytes"]) / rec["num_devices"] / 2**30
+                    print(f"[OK]   {tag}  compile={rec['compile_s']}s  "
+                          f"flops/dev={rec['flops_per_device']:.3e}  "
+                          f"coll/dev={rec['collective_bytes_per_device']['_total']:.3e}B")
+                elif rec["status"] == "SKIP":
+                    print(f"[SKIP] {tag}  ({rec['reason'][:60]}...)")
+                else:
+                    print(f"[FAIL] {tag}  {rec['error'][:200]}")
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "OK" for r in records)
+    n_skip = sum(r["status"] == "SKIP" for r in records)
+    n_fail = sum(r["status"] == "FAIL" for r in records)
+    print(f"\ndry-run summary: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,435 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified
+empirically — a scan over 8 layers reports the same FLOPs as 1 layer), which
+makes it useless for scan-based models.  This walker parses the partitioned
+HLO text, computes per-computation costs bottom-up, and multiplies while-loop
+bodies by their trip counts (parsed from the loop-condition constant), giving:
+
+* ``flops``      — dot FLOPs (2 * output_elems * contraction) + 1 flop/elem
+  for elementwise/reduce ops (the dominant terms on both MXU and VPU),
+* ``bytes``      — an HBM-traffic model: for every non-free top-level
+  instruction, output bytes + operand bytes.  Fusion internals are *not*
+  counted (they live in registers/VMEM); while bodies are (each iteration
+  really re-touches memory).
+* ``collectives``— per-kind output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, trip-count multiplied.
+
+All shapes in the partitioned module are PER-DEVICE shapes, so every number
+here is per-device.  Methodology caveats are documented in EXPERIMENTS.md
+§Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# ops that are pure plumbing — no flops, no memory traffic of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier", "domain",
+    "get-dimension-size", "custom-call",  # custom-calls on CPU are tiny (topk handled below)
+}
+
+# Standalone elementwise/layout ops that the TARGET backend (XLA:TPU) fuses
+# into neighbouring producers/consumers: they contribute FLOPs (VPU work) but
+# no independent HBM round trip.  The CPU backend leaves many of these
+# unfused at top level; counting their bytes would model CPU lowering, not
+# the TPU target (measured: it inflates a 72B dense train step to an
+# arithmetic intensity of ~8 flop/byte — two orders off).
+_ASSUME_FUSED = {
+    "add", "subtract", "multiply", "divide", "power", "negate", "abs",
+    "maximum", "minimum", "compare", "select", "and", "or", "not", "xor",
+    "convert", "broadcast", "iota", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "rsqrt", "sqrt", "cbrt", "tanh", "sine", "cosine", "tan",
+    "logistic", "atan2", "is-finite", "clamp", "reduce-precision",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "remainder",
+    "transpose", "reshape", "map", "expm1", "log1p", "erf",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# type is matched non-greedily up to the first ` opcode(` token; HLO types
+# never contain parens-after-word, so the first such token IS the opcode.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$"
+)
+_COMMENT_RE = re.compile(r"/\*[^*]*\*/")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"([0-9]+)"\}')
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.collectives[k] += other.collectives[k] * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _shapes_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = _DTYPE_BYTES[dtype]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_elems(type_str: str) -> float:
+    total = 0.0
+    for _dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_operands(rest: str) -> tuple[list[str], str, str]:
+    """Split 'a, %b, %c), attr=...' -> (operand names, inner text, attr tail)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, tail = rest[:i], rest[i + 1 :]
+                ops = re.findall(r"%([\w.\-]+)", inner)
+                return ops, inner, tail
+    return re.findall(r"%([\w.\-]+)", rest), rest, ""
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[dict]] = {}
+        self._parse(hlo_text)
+        self._costs: dict[str, Cost] = {}
+        self._trip_cache: dict[str, float] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        comp = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc and "=" not in line.split("(")[0]:
+                comp = mc.group(1)
+                self.computations[comp] = []
+                continue
+            if comp is None:
+                continue
+            if line.strip() == "}":
+                comp = None
+                continue
+            line = _COMMENT_RE.sub("", line)
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            name, type_str, opcode, rest = mi.groups()
+            operands, inner, tail = _split_operands(rest)
+            called = re.findall(
+                r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)", tail
+            )
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", tail)
+            if branches:
+                called += re.findall(r"%?([\w.\-]+)", branches[0])
+            attrs = {}
+            mdot = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", tail)
+            if mdot:
+                attrs["lhs_contracting"] = [
+                    int(x) for x in mdot.group(1).split(",") if x
+                ]
+            self.computations[comp].append(
+                {
+                    "name": name,
+                    "type": type_str,
+                    "op": opcode,
+                    "operands": operands,
+                    "inner": inner,
+                    "called": called,
+                    "tail": tail,
+                }
+            )
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        return m.group(1) if m else "main"
+
+    # ------------------------------------------------------------- costing
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._costs:
+            return self._costs[comp_name]
+        total = Cost()
+        defs = {i["name"]: i for i in self.computations.get(comp_name, [])}
+        for inst in self.computations.get(comp_name, []):
+            op = inst["op"]
+            out_bytes = _shapes_bytes(inst["type"])
+            out_elems = _shape_elems(inst["type"])
+
+            if op == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w.\-]+)", inst["tail"])
+                mc = re.search(r"condition=%?([\w.\-]+)", inst["tail"])
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                mt = _TRIP_RE.search(inst["tail"])
+                if mt:  # XLA-annotated trip count — authoritative
+                    trips = float(mt.group(1))
+                else:  # fall back to the condition's compare constant
+                    trips = self._const_in_comp(cond) if cond else 1.0
+                if body:
+                    total.add(self.cost_of(body), trips)
+                if cond:
+                    total.add(self.cost_of(cond), trips)
+                continue
+            if op == "conditional":
+                branch_costs = [self.cost_of(c) for c in inst["called"]]
+                if branch_costs:
+                    # upper bound: most expensive branch
+                    total.add(max(branch_costs, key=lambda c: c.flops))
+                continue
+            if op in ("call",):
+                for c in inst["called"]:
+                    total.add(self.cost_of(c))
+                continue
+            if op == "fusion":
+                # flops from the fused computation; bytes only at the boundary.
+                # Pure-elementwise fusions are skipped entirely: the CPU
+                # backend splits elementwise chains into many small kLoop
+                # fusions that XLA:TPU would absorb into the neighbouring
+                # dot/reduce/DUS fusion — their traffic is already counted at
+                # the producer's output and the consumer's operand.
+                for c in inst["called"]:
+                    total.flops += self.cost_of(c).flops
+                if not self._fusion_is_pure_elementwise(inst):
+                    total.bytes += (self._fusion_output_bytes(inst, out_bytes)
+                                    + self._fusion_operand_bytes(inst, defs))
+                continue
+            if op == "dynamic-update-slice":
+                # in-place slice write: traffic = read+write of the UPDATE
+                # region, not the whole buffer (XLA aliases the operand)
+                upd = defs.get(inst["operands"][1]) if len(inst["operands"]) > 1 else None
+                upd_bytes = _shapes_bytes(upd["type"]) if upd else out_bytes
+                total.bytes += 2.0 * upd_bytes
+                continue
+            if op == "dot":
+                lhs = defs.get(inst["operands"][0]) if inst["operands"] else None
+                contr = 1
+                mdot = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst["tail"])
+                if lhs is not None and mdot:
+                    dims = _first_shape_dims(lhs["type"])
+                    for ci in [int(x) for x in mdot.group(1).split(",") if x]:
+                        if ci < len(dims):
+                            contr *= dims[ci]
+                total.flops += 2.0 * out_elems * contr
+                total.bytes += out_bytes + self._operand_bytes(inst, defs)
+                continue
+            for kind in _COLLECTIVES:
+                if op == kind or op == f"{kind}-start":
+                    total.collectives[kind] += out_bytes
+                    total.bytes += out_bytes + self._operand_bytes(inst, defs)
+                    break
+            else:
+                if op in _FREE_OPS or op.endswith("-done"):
+                    continue
+                # reductions / elementwise / data movement
+                if op in ("reduce", "reduce-window", "scatter", "select-and-scatter"):
+                    total.flops += self._operand_elems(inst, defs)
+                elif op not in ("copy", "transpose", "reshape", "broadcast",
+                                "concatenate", "slice", "dynamic-slice",
+                                "dynamic-update-slice", "pad", "gather",
+                                "iota", "convert", "rng", "rng-bit-generator",
+                                "compare", "select", "sort"):
+                    total.flops += out_elems  # elementwise-ish
+                if op not in _ASSUME_FUSED:
+                    total.bytes += out_bytes + self._operand_bytes(inst, defs)
+        self._costs[comp_name] = total
+        return total
+
+    def _const_in_comp(self, comp: str) -> float:
+        """Largest scalar integer constant in a computation.
+
+        jax scans lower to `while(...)` whose condition compares the
+        induction variable LT <trip count constant>; the trip count is the
+        (only) integer constant in the condition computation.  Fusion-wrapped
+        compares reference the constant from the condition's top level, so it
+        is always visible here.
+        """
+        if comp in self._trip_cache:
+            return self._trip_cache[comp]
+        best = 1.0
+        for inst in self.computations.get(comp, []):
+            if inst["op"] == "constant" and "[]" in inst["type"]:
+                m = re.match(r"^\s*(\-?[0-9]+)\s*$", inst["inner"])
+                if m:
+                    best = max(best, float(m.group(1)))
+        self._trip_cache[comp] = best
+        return best
+
+    def _fusion_is_pure_elementwise(self, inst: dict) -> bool:
+        called = inst["called"][0] if inst["called"] else None
+        body = self.computations.get(called, []) if called else []
+        if not body:
+            return False
+        allowed = _ASSUME_FUSED | _FREE_OPS | {"slice", "pad", "concatenate",
+                                               "reverse", "rev", "copy"}
+        return all(i["op"] in allowed for i in body)
+
+    def _fusion_output_bytes(self, inst: dict, out_bytes: float) -> float:
+        """If the fusion root is a dynamic-update-slice (possibly behind a
+        bitcast), the written bytes are the update region, not the whole
+        aliased buffer — the scan-backward 'accumulate grads into the stacked
+        (L, ...) buffer' pattern."""
+        called = inst["called"][0] if inst["called"] else None
+        body = self.computations.get(called, []) if called else []
+        if not body:
+            return out_bytes
+        by_name = {i["name"]: i for i in body}
+        root = body[-1]  # ROOT is last in HLO text order
+        seen = 0
+        passthrough = _ASSUME_FUSED | {"bitcast", "copy"}
+        while root["op"] in passthrough and root["operands"] and seen < 8:
+            nxt = by_name.get(root["operands"][0])
+            if nxt is None:
+                break
+            root, seen = nxt, seen + 1
+        if root["op"] == "dynamic-update-slice" and len(root["operands"]) > 1:
+            upd = by_name.get(root["operands"][1])
+            if upd is not None:
+                return min(out_bytes, 2.0 * _shapes_bytes(upd["type"]))
+        return out_bytes
+
+    def _fusion_operand_bytes(self, inst: dict, defs: dict) -> float:
+        """Boundary traffic of a fusion: operands count at the bytes ACTUALLY
+        read.  The scan-over-layers pattern passes the full stacked (L, ...)
+        weight tensors into in-loop fusions that immediately dynamic-slice
+        one layer out — per-iteration HBM traffic is the slice, not the
+        stack.  For each fused-computation parameter whose only uses are
+        dynamic-slice ops, count the slice output size instead."""
+        called = inst["called"][0] if inst["called"] else None
+        body = self.computations.get(called, []) if called else []
+        param_read: dict[int, float] = {}
+        if body:
+            by_name = {i["name"]: i for i in body}
+            params = {}
+            for i in body:
+                if i["op"] == "parameter":
+                    mi = re.match(r"^\s*([0-9]+)", i["inner"])
+                    if mi:
+                        params[i["name"]] = int(mi.group(1))
+            # effective uses: follow pass-through (bitcast/copy/elementwise-
+            # unary) chains so `param -> bitcast -> dynamic-slice` still
+            # counts as a sliced read.
+            passthrough = _ASSUME_FUSED | {"bitcast", "copy"}
+            direct_uses: dict[str, list[dict]] = {}
+            for i in body:
+                for o in i["operands"]:
+                    direct_uses.setdefault(o, []).append(i)
+
+            def effective_uses(name: str, alias: str, depth: int = 0):
+                out = []
+                for u in direct_uses.get(name, []):
+                    if u["op"] in passthrough and len(u["operands"]) == 1 and depth < 6:
+                        out += effective_uses(u["name"], alias, depth + 1)
+                    else:
+                        out.append((u, name))
+                return out
+
+            for pname, idx in params.items():
+                us = effective_uses(pname, pname)
+                if not us:
+                    continue
+                if all(u["op"] == "dynamic-slice" for u, _ in us):
+                    param_read[idx] = sum(_shapes_bytes(u["type"]) for u, _ in us)
+                elif all(
+                    u["op"] == "dynamic-update-slice" and u["operands"][0] == via
+                    for u, via in us
+                ):
+                    # aliased update target: only the update region is touched
+                    param_read[idx] = sum(
+                        _shapes_bytes(by_name[u["operands"][1]]["type"])
+                        for u, _ in us if u["operands"][1] in by_name
+                    )
+        total = 0.0
+        for pos, o in enumerate(inst["operands"]):
+            d = defs.get(o)
+            if d is None:
+                continue
+            if pos in param_read:
+                total += min(param_read[pos], _shapes_bytes(d["type"]))
+            else:
+                total += _shapes_bytes(d["type"])
+        return total
+
+    def _operand_bytes(self, inst: dict, defs: dict) -> float:
+        total = 0.0
+        for o in inst["operands"]:
+            d = defs.get(o)
+            if d is not None:
+                total += _shapes_bytes(d["type"])
+        return total
+
+    def _operand_elems(self, inst: dict, defs: dict) -> float:
+        total = 0.0
+        for o in inst["operands"]:
+            d = defs.get(o)
+            if d is not None:
+                total += _shape_elems(d["type"])
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    c = model.entry_cost()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collectives": dict(c.collectives),
+        "collective_bytes": c.collective_total,
+    }

@@ -1,0 +1,86 @@
+"""§Perf iteration tool: re-lower one (arch x shape) with config overrides
+and print the roofline deltas vs the recorded baseline.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch arctic-480b \
+      --shape prefill_32k --set moe_shard_dispatch=True --set moe_group_size=2048
+
+Also supports ``--dump-collectives`` to print the largest collective ops of
+the optimized HLO (the "profile" of the dry-run methodology).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+)
+
+import argparse
+import ast
+import json
+
+
+def parse_set(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--set", action="append", help="cfg override key=value")
+    ap.add_argument("--baseline", default="dryrun_baseline.jsonl")
+    ap.add_argument("--out", default=None, help="append optimized record here")
+    args = ap.parse_args()
+
+    from benchmarks.roofline import roofline_row
+    from repro.launch.dryrun import dryrun_one
+
+    extra = parse_set(args.set)
+    rec = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     strategy=args.strategy, extra=extra)
+    if rec["status"] != "OK":
+        print(json.dumps(rec, indent=2))
+        raise SystemExit(1)
+    row = roofline_row(rec)
+
+    base_row = None
+    if os.path.exists(args.baseline):
+        mesh = "2x16x16" if args.multi_pod else "16x16"
+        for line in open(args.baseline):
+            r = json.loads(line)
+            if (r.get("arch"), r.get("shape"), r.get("mesh")) == (
+                args.arch, args.shape, mesh,
+            ) and r["status"] == "OK":
+                base_row = roofline_row(r)
+
+    print(f"\n{args.arch} x {args.shape}  overrides={extra}")
+    hdr = f"{'term':14s} {'baseline':>12s} {'optimized':>12s} {'delta':>8s}"
+    print(hdr)
+    for key in ("t_compute_s", "t_memory_s", "t_collective_s",
+                "useful_ratio", "step_lower_bound_s"):
+        b = base_row[key] if base_row else float("nan")
+        o = row[key]
+        delta = (o - b) / b * 100 if base_row and b else float("nan")
+        print(f"{key:14s} {b:12.4e} {o:12.4e} {delta:+7.1f}%")
+    print(f"bottleneck: {base_row['bottleneck'] if base_row else '?'} -> "
+          f"{row['bottleneck']}")
+    print("collectives/dev:", {k: f"{v:.2e}" for k, v in
+                               rec["collective_bytes_per_device"].items()})
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps({**rec, "overrides": extra}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

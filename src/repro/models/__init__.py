@@ -1,0 +1,23 @@
+"""Model zoo: the ten assigned architectures as composable pure-JAX modules.
+
+No flax — params are pytrees; every block is an ``init_*`` + ``apply``
+function pair.  Stacks use ``lax.scan`` over stacked layer params so HLO size
+is depth-independent (essential for the 512-device dry-run compiles).
+"""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    init_lm,
+    forward_lm,
+    decode_lm,
+    init_decode_state,
+    lm_loss,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_lm",
+    "forward_lm",
+    "decode_lm",
+    "init_decode_state",
+    "lm_loss",
+]

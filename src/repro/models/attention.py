@@ -1,0 +1,439 @@
+"""Grouped-query attention with the assigned archs' feature matrix.
+
+Features (per DESIGN.md §5): GQA with arbitrary kv-head counts, optional
+qk-norm (qwen3), QKV bias (qwen2 family), RoPE / M-RoPE (qwen2-vl), sliding
+windows parameterized by a *traced* per-layer scalar (gemma3's 5:1
+local:global pattern lives inside one lax.scan body), causal or bidirectional
+(whisper encoder), cross-attention (whisper decoder), and a one-token decode
+path against a pre-filled KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, dense_init, rms_norm
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray  # (d, H*hd)
+    wk: jnp.ndarray  # (d, KV*hd)
+    wv: jnp.ndarray  # (d, KV*hd)
+    wo: jnp.ndarray  # (H*hd, d)
+    bq: jnp.ndarray  # (H*hd,) zeros when qkv_bias off
+    bk: jnp.ndarray
+    bv: jnp.ndarray
+    q_norm: jnp.ndarray  # (hd,) qk-norm scales (ones when off)
+    k_norm: jnp.ndarray
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> AttnParams:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(kq, d, cfg.effective_heads * hd, cfg.dtype),
+        wk=dense_init(kk, d, cfg.num_kv_heads * hd, cfg.dtype),
+        wv=dense_init(kv, d, cfg.num_kv_heads * hd, cfg.dtype),
+        wo=dense_init(ko, cfg.num_heads * hd, d, cfg.dtype),
+        bq=jnp.zeros((cfg.effective_heads * hd,), cfg.dtype),
+        bk=jnp.zeros((cfg.num_kv_heads * hd,), cfg.dtype),
+        bv=jnp.zeros((cfg.num_kv_heads * hd,), cfg.dtype),
+        q_norm=jnp.ones((hd,), cfg.dtype),
+        k_norm=jnp.ones((hd,), cfg.dtype),
+    )
+
+
+def _project_qkv(p: AttnParams, cfg: ModelConfig, x: jnp.ndarray):
+    """x (B, S, d) -> q (B, S, H, hd), k/v (B, S, KV, hd)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq)
+    k = jnp.einsum("bsd,dh->bsh", x, p.wk)
+    v = jnp.einsum("bsd,dh->bsh", x, p.wv)
+    if cfg.qkv_bias:
+        q, k, v = q + p.bq, k + p.bk, v + p.bv
+    q = q.reshape(b, s, cfg.effective_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p.q_norm, cfg.norm_eps)
+        k = rms_norm(k, p.k_norm, cfg.norm_eps)
+    return q, k, v
+
+
+def _rotary(cfg: ModelConfig, q, k, positions):
+    if positions is None:
+        return q, k
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _gqa_scores(q, k, q_groups: int):
+    """q (B,S,H,hd) x k (B,T,KV,hd) -> (B, KV, G, S, T) with H = KV*G."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, q_groups, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", q, k) / (hd**0.5)
+
+
+def _gqa_out(scores, v, wo, real_groups: int = 0):
+    """scores (B,KV,G,S,T), v (B,T,KV,hd) -> (B, S, d).
+
+    ``real_groups``: if the G axis was padded for sharding, slice back to the
+    real group count before the output projection (exact — padded heads'
+    context never reaches wo)."""
+    b, kvh, g, s, t = scores.shape
+    ctx = jnp.einsum("bkgst,btkh->bskgh", scores, v)
+    if real_groups and real_groups < g:
+        ctx = ctx[:, :, :, :real_groups]
+        g = real_groups
+    ctx = ctx.reshape(b, s, kvh * g * v.shape[-1])
+    return jnp.einsum("bsh,hd->bsd", ctx, wo)
+
+
+def _context_parallel(cfg, qr):
+    """shard_heads="context": shard the query-sequence dim over the model
+    axis.  Online softmax is per-row, so no cross-shard reduction appears;
+    only k/v (tiny for few-kv-head archs) are gathered.  No-op outside a
+    mesh or when S doesn't divide."""
+    if cfg.shard_heads != "context":
+        return qr
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return qr
+    if qr.shape[1] % mesh.shape["model"] != 0:
+        return qr
+    from jax.sharding import PartitionSpec as _P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    return jax.lax.with_sharding_constraint(
+        qr, _P(dp, "model", *([None] * (qr.ndim - 2)))
+    )
+
+
+def _pad_groups(cfg, q):
+    """(B,S,H,hd) -> (B,S,KV*Gp,hd) with zero-padded q groups (exact; see
+    _gqa_out).  Returns (q, effective_groups, real_groups).
+
+    With parameter-level padding (cfg.attn_pad_heads) q already carries the
+    padded head count from the projection; only the group bookkeeping is
+    returned."""
+    g = cfg.q_groups
+    if cfg.attn_pad_heads:
+        return q, cfg.effective_heads // max(cfg.num_kv_heads, 1), g
+    gp = cfg.pad_q_groups
+    if not gp or gp <= g:
+        return q, g, g
+    b, s, h, hd = q.shape
+    qg = q.reshape(b, s, cfg.num_kv_heads, g, hd)
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, gp - g), (0, 0)))
+    return qg.reshape(b, s, cfg.num_kv_heads * gp, hd), gp, g
+
+
+def _dense_attend(cfg, q, k, v, wo, window, causal, dtype):
+    """Naive full-matrix attention (small sequences / oracle for tests)."""
+    q, g_eff, g_real = _pad_groups(cfg, q)
+    scores = _gqa_scores(q, k, g_eff)  # (B,KV,G,S,T)
+    s, t = q.shape[1], k.shape[1]
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        # traced sliding window: attend iff (row - col) < window, window<=0 = full
+        in_win = (rows - cols) < jnp.maximum(window, 1)
+        mask &= jnp.where(window > 0, in_win, True)
+    scores = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    return _gqa_out(probs, v, wo, g_real)
+
+
+def _chunk_mask(rows, cols, t, causal, window, s, kc):
+    mask = cols < t  # drop padding
+    if causal:
+        mask = mask & (cols <= rows)
+    else:
+        mask = jnp.broadcast_to(mask, (s, kc))
+    if window is not None:
+        in_win = (rows - cols) < jnp.maximum(window, 1)
+        mask = mask & jnp.where(window > 0, in_win, True)
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _flash_core(qr, k, v, window, t, causal, kv_chunk):
+    """Flash attention with recompute-in-backward (no saved probabilities).
+
+    qr (B,S,KV,G,hd), k/v (B,Tp,KV,hd) already kc-padded; ``window`` is a
+    TRACED () int32 scalar (0 = full attention) so gemma3's per-layer
+    local:global pattern stays inside one lax.scan body.  Returns ctx
+    (B,S,KV,G,hd).  The backward pass recomputes each chunk's probabilities
+    from (q, k, lse) — O(S * kc) live memory in both directions, the
+    standard FlashAttention-2 residual scheme (saves only out + lse).
+    """
+    ctx, _lse = _flash_fwd_pass(qr, k, v, window, t, causal, kv_chunk)
+    return ctx
+
+
+def _flash_fwd_pass(qr, k, v, window, t, causal, kv_chunk):
+    b, s, kvh, g, hd = qr.shape
+    kc = kv_chunk
+    nc = k.shape[1] // kc
+    win = window
+    ks = jnp.moveaxis(k.reshape(b, nc, kc, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nc, kc, kvh, hd), 1, 0)
+    rows = jnp.arange(s)[:, None]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, j0 = inp
+        scores = (
+            jnp.einsum("bskgh,bjkh->bkgsj", qr, k_c).astype(jnp.float32) / hd**0.5
+        )
+        cols = j0 * kc + jnp.arange(kc)[None, :]
+        mask = _chunk_mask(rows, cols, t, causal, win, s, kc)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_c = jnp.exp(scores - m_new[..., None])
+        l_new = l * corr + p_c.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgsj,bjkh->bkgsh", p_c, v_c)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(nc)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).astype(qr.dtype)  # (B,KV,G,S,hd)
+    lse = m + jnp.log(l_safe)
+    return jnp.moveaxis(out, 3, 1), lse  # ctx (B,S,KV,G,hd)
+
+
+def _flash_fwd(qr, k, v, window, t, causal, kv_chunk):
+    ctx, lse = _flash_fwd_pass(qr, k, v, window, t, causal, kv_chunk)
+    return ctx, (qr, k, v, window, ctx, lse)
+
+
+def _flash_bwd(t, causal, kv_chunk, res, d_ctx):
+    qr, k, v, window, ctx, lse = res
+    b, s, kvh, g, hd = qr.shape
+    kc = kv_chunk
+    nc = k.shape[1] // kc
+    win = window
+    ks = jnp.moveaxis(k.reshape(b, nc, kc, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nc, kc, kvh, hd), 1, 0)
+    rows = jnp.arange(s)[:, None]
+    do = jnp.moveaxis(d_ctx.astype(jnp.float32), 1, 3)  # (B,KV,G,S,hd)
+    out = jnp.moveaxis(ctx.astype(jnp.float32), 1, 3)
+    delta = (do * out).sum(-1)  # (B,KV,G,S)
+
+    def body(dq, inp):
+        k_c, v_c, j0 = inp
+        scores = (
+            jnp.einsum("bskgh,bjkh->bkgsj", qr, k_c).astype(jnp.float32) / hd**0.5
+        )
+        cols = j0 * kc + jnp.arange(kc)[None, :]
+        mask = _chunk_mask(rows, cols, t, causal, win, s, kc)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        p = jnp.exp(scores - lse[..., None])  # (B,KV,G,S,kc)
+        dv_c = jnp.einsum("bkgsj,bkgsh->bjkh", p, do)
+        dp = jnp.einsum("bkgsh,bjkh->bkgsj", do, v_c.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) / hd**0.5
+        dq = dq + jnp.einsum("bkgsj,bjkh->bskgh", ds, k_c.astype(jnp.float32))
+        dk_c = jnp.einsum("bkgsj,bskgh->bjkh", ds, qr.astype(jnp.float32))
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, s, kvh, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, jnp.arange(nc)))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, nc * kc, kvh, hd)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, nc * kc, kvh, hd)
+    import numpy as _np
+    dwin = _np.zeros((), jax.dtypes.float0)  # int operand: zero cotangent
+    return dq.astype(qr.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dwin
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attend(cfg, q, k, v, wo, window, causal, dtype, kv_chunk: int = 1024):
+    """custom-VJP flash attention — the §Perf memory optimization: backward
+    recomputes probabilities instead of autodiff saving per-chunk f32 score
+    residuals.  ``window`` may be a traced () int32 (0/None = full)."""
+    q, g, g_real = _pad_groups(cfg, q)
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    t = k.shape[1]
+    kc = min(kv_chunk, t)
+    pad = (-t) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = _context_parallel(cfg, q.reshape(b, s, kvh, g, hd))
+    win = jnp.asarray(0 if window is None else window, jnp.int32)
+    ctx = _flash_core(qr, k, v, win, t, causal, kc)  # (B,S,KV,G,hd)
+    if g_real < g:
+        ctx = ctx[:, :, :, :g_real]
+        g = g_real
+    ctx = ctx.reshape(b, s, kvh * g * hd).astype(dtype)
+    return jnp.einsum("bsh,hd->bsd", ctx, wo)
+
+
+def _blocked_attend(cfg, q, k, v, wo, window, causal, dtype, kv_chunk: int = 1024,
+                    _unused=None):
+    """Flash-style online-softmax attention, scanned over KV chunks.
+
+    Memory is O(S * kv_chunk) instead of O(S^2): the only live score tensor
+    is (B, KV, G, S, kc).  Numerics match `_dense_attend` to fp32 tolerance
+    (asserted in tests/test_models_zoo.py).
+    """
+    q, g, g_real = _pad_groups(cfg, q)
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    t = k.shape[1]
+    kc = min(kv_chunk, t)
+    pad = (-t) % kc
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (t + pad) // kc
+    qr = _context_parallel(cfg, q.reshape(b, s, kvh, g, hd))
+    ks = jnp.moveaxis(k.reshape(b, nc, kc, kvh, hd), 1, 0)  # (NC,B,kc,KV,hd)
+    vs = jnp.moveaxis(v.reshape(b, nc, kc, kvh, hd), 1, 0)
+    rows = jnp.arange(s)[:, None]  # (S,1)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, j0 = inp
+        scores = (
+            jnp.einsum("bskgh,bjkh->bkgsj", qr, k_c).astype(jnp.float32) / hd**0.5
+        )  # (B,KV,G,S,kc)
+        cols = j0 * kc + jnp.arange(kc)[None, :]  # (1,kc) global col ids
+        mask = cols < t  # drop padding
+        if causal:
+            mask = mask & (cols <= rows)
+        else:
+            mask = jnp.broadcast_to(mask, (s, kc))
+        if window is not None:
+            in_win = (rows - cols) < jnp.maximum(window, 1)
+            mask = mask & jnp.where(window > 0, in_win, True)
+        # finite mask value (-1e30, not -inf) keeps the online-softmax update
+        # NaN-free for rows whose first valid column arrives in a later chunk
+        # (sliding windows); bogus all-masked accumulation is wiped by the
+        # corr -> 0 rescale when the first real column appears.
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p_c = jnp.exp(scores - m_new[..., None])
+        l_new = l * corr + p_c.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgsj,bjkh->bkgsh", p_c, v_c)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,S,hd)
+    ctx = jnp.moveaxis(out, 3, 1)  # (B,S,KV,G,hd)
+    if g_real < g:
+        ctx = ctx[:, :, :, :g_real]
+        g = g_real
+    ctx = ctx.reshape(b, s, kvh * g * hd).astype(dtype)
+    return jnp.einsum("bsh,hd->bsd", ctx, wo)
+
+
+# sequences at or above this length route through the blocked kernel
+BLOCKED_ATTN_THRESHOLD = 2048
+
+
+def attention(
+    p: AttnParams,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    positions: Optional[jnp.ndarray],  # (B, S) or (B, 3, S) for M-RoPE; None=no rope
+    window: Optional[jnp.ndarray] = None,  # () traced window size; <=0 -> full
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q, k = _rotary(cfg, q, k, positions)
+    if x.shape[1] >= BLOCKED_ATTN_THRESHOLD:
+        if cfg.flash_vjp:
+            return flash_attend(cfg, q, k, v, p.wo, window, causal, x.dtype)
+        return _blocked_attend(cfg, q, k, v, p.wo, window, causal, x.dtype)
+    return _dense_attend(cfg, q, k, v, p.wo, window, causal, x.dtype)
+
+
+def cross_attention(
+    p: AttnParams,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, S, d) decoder side
+    enc_k: jnp.ndarray,  # (B, T, KV, hd) precomputed encoder keys
+    enc_v: jnp.ndarray,  # (B, T, KV, hd)
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq).reshape(b, s, cfg.num_heads, hd)
+    scores = _gqa_scores(q, enc_k, cfg.q_groups)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    return _gqa_out(probs, enc_v, p.wo)
+
+
+def project_kv(p: AttnParams, cfg: ModelConfig, x: jnp.ndarray):
+    """Encoder-output -> (k, v) for cached cross-attention."""
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("btd,dh->bth", x, p.wk).reshape(b, t, cfg.num_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", x, p.wv).reshape(b, t, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def decode_attention(
+    p: AttnParams,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # (B, 1, d) the new token
+    k_cache: jnp.ndarray,  # (B, S, KV, hd)
+    v_cache: jnp.ndarray,  # (B, S, KV, hd)
+    pos: jnp.ndarray,  # (B,) current absolute position of the new token
+    window: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  The new token's k/v are written at ``pos`` (the
+    cache is treated as a ring of static length S).  Returns (out, k, v)
+    caches updated."""
+    b, _, _ = x.shape
+    s = k_cache.shape[1]
+    rope_pos = pos[:, None]  # (B, 1)
+    if cfg.mrope:
+        rope_pos = jnp.broadcast_to(pos[:, None, None], (b, 3, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    q, k_new = _rotary(cfg, q, k_new, rope_pos)
+    q, g_eff, g_real = _pad_groups(cfg, q)
+
+    slot = (pos % s).astype(jnp.int32)  # (B,)
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+
+    scores = _gqa_scores(q, k_cache, g_eff)  # (B,KV,G,1,S)
+    cols = jnp.arange(s)[None, :]
+    valid = cols <= pos[:, None]  # only written slots (pos >= cache fill)
+    if window is not None:
+        in_win = (pos[:, None] - cols) < jnp.maximum(window, 1)
+        valid &= jnp.where(window > 0, in_win, True)
+    scores = jnp.where(
+        valid[:, None, None, None, :], scores.astype(jnp.float32), -jnp.inf
+    )
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v_cache, p.wo, g_real)  # (B, 1, d)
+    return out, k_cache, v_cache

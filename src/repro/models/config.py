@@ -1,0 +1,150 @@
+"""Unified architecture configuration.
+
+One dataclass covers all six assigned arch families (dense / moe / ssm /
+hybrid / vlm / audio); family-specific fields default to "off".  Each
+``src/repro/configs/<id>.py`` instantiates this with the exact assigned
+dimensions and provides a ``smoke()`` reduced variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # ---- attention features
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    mrope: bool = False  # qwen2-vl 3-section multimodal RoPE
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w rotary halves
+    sliding_window: int = 0  # 0 = full attention
+    global_every: int = 0  # gemma3: every Nth layer is global (1-indexed period)
+
+    # ---- MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0  # qwen2-moe shared experts
+    moe_d_ff: int = 0  # per-expert hidden dim (d_ff used for dense/shared path)
+    dense_residual: bool = False  # arctic: parallel dense FFN residual
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01  # load-balance auxiliary loss
+
+    # ---- SSM (Mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    attn_every: int = 0  # zamba2: shared attention block every N layers
+
+    # ---- xLSTM
+    slstm_every: int = 0  # every Nth block is sLSTM (rest mLSTM); 0 = none
+
+    # ---- encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500  # whisper: 30 s of audio at 50 Hz post-conv
+
+    # ---- VLM stub frontend
+    num_patches: int = 0  # qwen2-vl: patch embeddings prepended to the text
+
+    # ---- misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: object = jnp.bfloat16
+    remat: bool = True  # activation-checkpoint each layer in train_step
+
+    # ---- §Perf optimization knobs (baseline = paper-faithful defaults)
+    flash_vjp: bool = False  # custom-VJP flash attention (recompute-in-bwd)
+    pad_q_groups: int = 0  # pad GQA groups at runtime (superseded by
+    #   attn_pad_heads; kept for ablation)
+    shard_heads: str = "auto"  # "auto": replicate q/kv projections when head
+    #   counts don't divide the model axis (right when attention is a small
+    #   share, e.g. MoE archs); "split": legacy flattened-dim sharding
+    #   (partial-sum all-reduces of scores); "context": sequence-shard the
+    #   queries over the model axis (context parallelism — right for
+    #   attention-heavy archs with few heads, e.g. gemma3)
+    attn_pad_heads: int = 0  # parameter-level head padding: wq/bq carry this
+    #   many heads; the extra heads' context is sliced off before wo, so they
+    #   receive zero gradient and never affect the function (exact).
+    moe_group_size: int = 0  # routing-group tokens (0 = whole sequence)
+    moe_pad_experts: int = 0  # pad the expert dim so it divides the mesh;
+    #   padded experts are router-masked to -inf (never routed — exact)
+    moe_shard_dispatch: bool = False  # sharding constraints on dispatch path
+    anchor_batch: bool = True  # constrain_batch after embedding (off for archs
+    #   where GSPMD's own batch x (data,model) layout wins, e.g. xlstm)
+
+    # citation for the assigned config (model card / paper)
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def effective_heads(self) -> int:
+        return self.attn_pad_heads or self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (for roofline MODEL_FLOPS)."""
+        d, v, hd = self.d_model, self.vocab_size, self.resolved_head_dim
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += v * d
+        att = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd + self.num_heads * hd * d
+
+        def ffn(ff):
+            return 3 * d * ff  # SwiGLU
+
+        per_layer = 0
+        if self.arch_type in ("dense", "vlm", "audio"):
+            per_layer = att + ffn(self.d_ff)
+        elif self.arch_type == "moe":
+            per_layer = att + self.num_experts * ffn(self.moe_d_ff) + d * self.num_experts
+            if self.num_shared_experts:
+                per_layer += self.num_shared_experts * ffn(self.moe_d_ff)
+            if self.dense_residual:
+                per_layer += ffn(self.d_ff)
+        elif self.arch_type == "ssm":
+            if self.slstm_every:
+                per_layer = 4 * d * d + ffn(self.d_ff if self.d_ff else 2 * d)
+            else:
+                per_layer = att + ffn(self.d_ff)
+        elif self.arch_type == "hybrid":
+            inner = self.ssm_expand * d
+            per_layer = 2 * d * inner + inner * d + inner * self.ssm_state * 2
+        n += self.num_layers * per_layer
+        if self.arch_type == "hybrid" and self.attn_every:
+            n += att + ffn(self.d_ff)  # one shared attention+ffn block
+        if self.is_encoder_decoder:
+            n += self.encoder_layers * (att + ffn(self.d_ff)) + self.num_layers * att
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts only routed-in experts."""
+        if self.arch_type != "moe":
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_expert = self.num_layers * self.num_experts * 3 * d * self.moe_d_ff
+        active_expert = (
+            self.num_layers * self.num_experts_per_tok * 3 * d * self.moe_d_ff
+        )
+        return int(full - all_expert + active_expert)

@@ -1,0 +1,96 @@
+"""Shared primitives: norms, linear init, rotary embeddings (RoPE + M-RoPE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    out = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-style)."""
+    std = d_in**-0.5
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- rotary
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., S, H, head_dim)
+    positions: jnp.ndarray,  # (..., S) int32
+    theta: float,
+) -> jnp.ndarray:
+    """Standard RoPE on half-split layout."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # (..., S, H, head_dim)
+    positions: jnp.ndarray,  # (..., 3, S) int32 — (temporal, height, width)
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL Multimodal RoPE (arXiv:2409.12191 §2.1).
+
+    The rotary half-dims are split into three sections; each section's angle
+    uses a different coordinate channel (t / h / w).  For pure text all three
+    channels carry the same 1-D position, which makes M-RoPE degenerate to
+    standard RoPE — property-tested in tests/test_models_zoo.py.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(head_dim, theta)  # (half,)
+    # section id per rotary dim: 0/1/2
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    # positions: (..., 3, S) -> per-rotary-dim coordinate channel
+    pos = jnp.moveaxis(positions, -2, -1)  # (..., S, 3)
+    pos_per_dim = jnp.take(pos, sec, axis=-1)  # (..., S, half)
+    angles = pos_per_dim.astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray):
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+TPU-native dispatch (MaxText/GSPMD style): tokens are routed to experts via
+one-hot dispatch/combine einsums with a static per-expert capacity — no
+ragged gathers, and the expert dimension shards cleanly over the ``model``
+mesh axis (expert parallelism).  Covers both assigned MoE archs:
+
+* qwen2-moe-a2.7b — 60 routed experts top-4 + 4 *shared* experts always on
+  [hf:Qwen/Qwen1.5-MoE-A2.7B],
+* arctic-480b — 128 routed experts top-2 + a parallel *dense residual* FFN
+  [hf:Snowflake/snowflake-arctic-base] (the dense branch lives in
+  transformer.py; this module provides the routed+shared paths).
+
+A switch-style load-balance auxiliary loss is returned for training.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+class MoEParams(NamedTuple):
+    router: jnp.ndarray  # (d, E)
+    w_gate: jnp.ndarray  # (E, d, ff)
+    w_up: jnp.ndarray  # (E, d, ff)
+    w_down: jnp.ndarray  # (E, ff, d)
+    shared_gate: jnp.ndarray  # (Se*ff_or_1, ...) shared experts fused as one SwiGLU
+    shared_up: jnp.ndarray
+    shared_down: jnp.ndarray
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> MoEParams:
+    d, ff = cfg.d_model, cfg.moe_d_ff
+    e = cfg.moe_pad_experts or cfg.num_experts
+    ks = jax.random.split(key, 7)
+    shared_ff = max(cfg.num_shared_experts * ff, 1)
+    return MoEParams(
+        router=dense_init(ks[0], d, e, jnp.float32),
+        w_gate=jax.vmap(lambda k: dense_init(k, d, ff, cfg.dtype))(
+            jax.random.split(ks[1], e)
+        ),
+        w_up=jax.vmap(lambda k: dense_init(k, d, ff, cfg.dtype))(
+            jax.random.split(ks[2], e)
+        ),
+        w_down=jax.vmap(lambda k: dense_init(k, ff, d, cfg.dtype))(
+            jax.random.split(ks[3], e)
+        ),
+        shared_gate=dense_init(ks[4], d, shared_ff, cfg.dtype),
+        shared_up=dense_init(ks[5], d, shared_ff, cfg.dtype),
+        shared_down=dense_init(ks[6], shared_ff, d, cfg.dtype),
+    )
+
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    """Static per-(group, expert) capacity, MXU-aligned (multiple of 8)."""
+    cap = int(
+        tokens_per_group
+        * cfg.num_experts_per_tok
+        * cfg.capacity_factor
+        / cfg.num_experts
+    )
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def apply_moe(
+    p: MoEParams, cfg: ModelConfig, x: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss ()).
+
+    Batch-grouped capacity dispatch (GSPMD/MaxText style): each batch row is
+    a routing group with static capacity C = S*k*cf/E, so the dispatch
+    tensor is (B, S, E, C) — sharded over ``data`` on B and ``model`` on E it
+    never materializes at global size.  Tokens overflowing an expert's
+    capacity within their group are dropped for that expert (standard switch
+    behaviour); shared experts always run.
+
+    §Perf knobs: ``cfg.moe_group_size`` subdivides the sequence into smaller
+    routing groups (dispatch-einsum FLOPs scale linearly with group size);
+    ``cfg.moe_shard_dispatch`` pins GSPMD shardings on the dispatch path so
+    the (groups, G, E, C) tensors never get replicated/all-reduced.
+    """
+    b_in, s_in, d = x.shape
+    g_sz = cfg.moe_group_size
+    regrouped = bool(g_sz) and g_sz < s_in and s_in % g_sz == 0
+    if regrouped:
+        # (B, S, d) -> (B * S/g, g, d): more, smaller routing groups
+        x = x.reshape(b_in * (s_in // g_sz), g_sz, d)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = moe_capacity(s, cfg)
+
+    e_eff = cfg.moe_pad_experts or e
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p.router)
+    if e_eff > e:
+        # padded experts never win the top-k (exact; see config note)
+        pad_mask = jnp.arange(e_eff) >= e
+        logits = jnp.where(pad_mask, -1e30, logits)
+    e = e_eff
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # Load-balance aux loss (Switch Transformer): E * sum_e f_e * P_e
+    occupancy = jax.nn.one_hot(top_e, e).sum(2)  # (B, S, E)
+    f = occupancy.mean((0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(f * probs.mean((0, 1)))
+
+    # Arrival order of each (token, choice) within its (group, expert).
+    choice_oh = jax.nn.one_hot(top_e, e, dtype=jnp.int32)  # (B, S, k, E)
+    flat_oh = choice_oh.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat_oh, axis=1) - flat_oh).reshape(b, s, k, e)
+    pos_of_choice = (pos_in_expert * choice_oh).sum(-1)  # (B, S, k)
+    keep = pos_of_choice < cap
+
+    # dispatch/combine (B, S, E, C)
+    slot_oh = jax.nn.one_hot(
+        jnp.where(keep, pos_of_choice, cap), cap + 1, dtype=x.dtype
+    )[..., :cap]  # (B, S, k, C); overflow row is all-zero
+    dispatch = jnp.einsum("bske,bskc->bsec", choice_oh.astype(x.dtype), slot_oh)
+    combine = jnp.einsum(
+        "bske,bskc,bsk->bsec",
+        choice_oh.astype(jnp.float32),
+        slot_oh.astype(jnp.float32),
+        top_p.astype(jnp.float32),
+    ).astype(x.dtype)
+
+    if cfg.moe_shard_dispatch:
+        # pin the dispatch path: groups over data, experts over model —
+        # prevents GSPMD from replicating the (B,S,E,C) tensors and
+        # all-reducing expert batches (§Perf, arctic collective fix)
+        from jax.sharding import PartitionSpec as _P
+
+        dispatch = jax.lax.with_sharding_constraint(
+            dispatch, _P("data", None, "model", None)
+        )
+        combine = jax.lax.with_sharding_constraint(
+            combine, _P("data", None, "model", None)
+        )
+
+    # expert batches per group: (B, E, C, d)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    if cfg.moe_shard_dispatch:
+        from jax.sharding import PartitionSpec as _P
+
+        xe = jax.lax.with_sharding_constraint(xe, _P("data", "model", None, None))
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p.w_gate))
+    u = jnp.einsum("becd,edf->becf", xe, p.w_up)
+    ye = jnp.einsum("becf,efd->becd", g * u, p.w_down)  # (B, E, C, d)
+    out = jnp.einsum("bsec,becd->bsd", combine, ye)
+
+    if cfg.num_shared_experts:
+        sg = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p.shared_gate))
+        su = jnp.einsum("bsd,df->bsf", x, p.shared_up)
+        out = out + jnp.einsum("bsf,fd->bsd", sg * su, p.shared_down)
+
+    if regrouped:
+        out = out.reshape(b_in, s_in, d)
+    return out, aux

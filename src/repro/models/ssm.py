@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant TPU formulation.
+
+The Mamba2 "state-space duality" recurrence per head (state size N, head dim
+P):
+
+    h_t = a_t * h_{t-1} + dt_t * B_t x_t^T      (h in R^{N x P})
+    y_t = C_t h_t + D * x_t
+
+with scalar-per-head decay ``a_t = exp(dt_t * A)`` (A < 0 learned).  A naive
+time scan is VPU-bound; the SSD insight (Dao & Gu 2024) is to compute it in
+chunks: within a chunk the output is an attention-like masked matmul
+(MXU-friendly); chunk-to-chunk states are passed by a short ``lax.scan`` over
+S/chunk steps.  This is the GPU algorithm's *structural* adaptation to the
+TPU: all heavy math becomes (chunk x chunk) / (chunk x N x P) einsums that
+map onto the MXU, and the sequential scan shrinks by the chunk factor.
+
+Decode path: one recurrence step on a carried (N x P) state — O(1) in
+sequence length, which is why the hybrid/ssm archs run ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+class MambaParams(NamedTuple):
+    in_proj: jnp.ndarray  # (d, 2*inner)  -> (x, z)
+    bc_proj: jnp.ndarray  # (d, 2*N*H? ) see init: (d, 2*n_state*n_groups=2*N)
+    dt_proj: jnp.ndarray  # (d, H)
+    dt_bias: jnp.ndarray  # (H,)
+    a_log: jnp.ndarray  # (H,) log(-A)
+    d_skip: jnp.ndarray  # (H,)
+    conv_w: jnp.ndarray  # (4, inner) depthwise causal conv kernel
+    out_proj: jnp.ndarray  # (inner, d)
+    norm: jnp.ndarray  # (inner,) gated RMSNorm scale
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(inner, num_heads, state) for the mamba block."""
+    inner = cfg.ssm_expand * cfg.d_model
+    heads = inner // cfg.ssm_head_dim
+    return inner, heads, cfg.ssm_state
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> MambaParams:
+    d = cfg.d_model
+    inner, heads, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return MambaParams(
+        in_proj=dense_init(ks[0], d, 2 * inner, cfg.dtype),
+        bc_proj=dense_init(ks[1], d, 2 * n, cfg.dtype),
+        dt_proj=dense_init(ks[2], d, heads, cfg.dtype),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        a_log=jnp.zeros((heads,), jnp.float32),  # A = -exp(a_log) = -1
+        d_skip=jnp.ones((heads,), jnp.float32),
+        conv_w=(jax.random.normal(ks[4], (4, inner)) * 0.1).astype(cfg.dtype),
+        out_proj=dense_init(ks[5], inner, d, cfg.dtype),
+        norm=jnp.ones((inner,), cfg.dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, kernel size K: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out)
+
+
+def apply_mamba(
+    p: MambaParams, cfg: ModelConfig, u: jnp.ndarray
+) -> jnp.ndarray:
+    """Full-sequence Mamba2 SSD.  u (B, S, d) -> (B, S, d)."""
+    b, s, d = u.shape
+    inner, heads, n = mamba_dims(cfg)
+    hd = cfg.ssm_head_dim
+    chunk = min(cfg.ssm_chunk, s)
+    # pad sequence to a chunk multiple
+    pad = (-s) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    sp = u.shape[1]
+    nc = sp // chunk
+
+    xz = jnp.einsum("bsd,de->bse", u, p.in_proj)
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, Sp, inner)
+    x = _causal_conv(x, p.conv_w)
+    bc = jnp.einsum("bsd,de->bse", u, p.bc_proj).astype(jnp.float32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # (B, Sp, N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p.dt_proj).astype(jnp.float32) + p.dt_bias
+    )  # (B, Sp, H)
+    a = -jnp.exp(p.a_log)  # (H,)
+    log_decay = dt * a  # (B, Sp, H)  = log a_t
+
+    xh = x.reshape(b, sp, heads, hd).astype(jnp.float32)  # (B,Sp,H,P)
+
+    # ---- chunked SSD: one lax.scan over chunks, carrying the (B,H,N,P)
+    # state.  Only ONE chunk's attention-like (B,L,L,H) tensor is live at a
+    # time (the all-chunks formulation would materialize (B,NC,L,L,H)).
+    xc = jnp.moveaxis(xh.reshape(b, nc, chunk, heads, hd), 1, 0)  # (NC,B,L,H,P)
+    bc_ = jnp.moveaxis(bmat.reshape(b, nc, chunk, n), 1, 0)  # (NC,B,L,N)
+    cc_ = jnp.moveaxis(cmat.reshape(b, nc, chunk, n), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, chunk, heads), 1, 0)  # (NC,B,L,H)
+    ldc = jnp.moveaxis(log_decay.reshape(b, nc, chunk, heads), 1, 0)
+
+    def chunk_fn(h_prev, inp):
+        # one SSD chunk — the compute hot spot; routed through the Pallas
+        # kernel wrapper (TPU: compiled kernel; CPU: jnp oracle).  Math:
+        # y[t] = sum_{j<=t} (C_t.B_j) dt_j exp(cum_t - cum_j) x_j
+        #        + C_t exp(cum_t) h_prev
+        # h'   = exp(cum_L) h_prev + sum_j exp(cum_L - cum_j) dt_j B_j x_j^T
+        x_k, b_k, c_k, dt_k, ld_k = inp
+        y, h_new = kernel_ops.ssd_chunk(x_k, b_k, c_k, dt_k, ld_k, h_prev)
+        return h_new, y
+
+    h0 = jnp.zeros((b, heads, n, hd), jnp.float32)
+    # remat the chunk body: backward recomputes the (B,L,L,H) intra-chunk
+    # tensors from the chunk inputs instead of autodiff stacking them for
+    # every chunk (the SSD analogue of flash attention's residual scheme)
+    _, y_chunks = jax.lax.scan(jax.checkpoint(chunk_fn), h0, (xc, bc_, cc_, dtc, ldc))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, sp, heads, hd)
+    y = y + xh * p.d_skip[None, None, :, None]
+    y = y.reshape(b, sp, inner).astype(u.dtype)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p.out_proj)
+    return out[:, :s]
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray  # (B, H, N, P) SSM state
+    conv: jnp.ndarray  # (B, K-1, inner) conv tail buffer
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    inner, heads, n = mamba_dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, heads, n, cfg.ssm_head_dim), jnp.float32),
+        conv=jnp.zeros((batch, 3, inner), dtype),
+    )
+
+
+def decode_mamba(
+    p: MambaParams, cfg: ModelConfig, u: jnp.ndarray, state: MambaState
+) -> tuple[jnp.ndarray, MambaState]:
+    """One-token decode.  u (B, 1, d) -> (B, 1, d); O(1) in sequence length."""
+    b = u.shape[0]
+    inner, heads, n = mamba_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    xz = jnp.einsum("bsd,de->bse", u, p.in_proj)
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,1,inner)
+    # conv over the (K-1)-token tail buffer + current token
+    window = jnp.concatenate([state.conv, x], axis=1)  # (B, K, inner)
+    xconv = jax.nn.silu((window * p.conv_w[None]).sum(axis=1, keepdims=True))
+    new_conv = window[:, 1:]
+
+    bc = jnp.einsum("bsd,de->bse", u, p.bc_proj).astype(jnp.float32)
+    bvec, cvec = jnp.split(bc[:, 0], 2, axis=-1)  # (B, N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p.dt_proj).astype(jnp.float32)[:, 0] + p.dt_bias
+    )  # (B, H)
+    a = -jnp.exp(p.a_log)
+    decay = jnp.exp(dt * a)  # (B, H)
+
+    xh = xconv.reshape(b, heads, hd).astype(jnp.float32)  # (B,H,P)
+    update = jnp.einsum("bn,bh,bhp->bhnp", bvec, dt, xh)
+    h_new = state.h * decay[:, :, None, None] + update
+    y = jnp.einsum("bn,bhnp->bhp", cvec, h_new)  # (B,H,P)
+    y = y + xh * p.d_skip[None, :, None]
+    y = y.reshape(b, 1, inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p.out_proj)
+    return out, MambaState(h=h_new, conv=new_conv)

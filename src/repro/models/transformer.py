@@ -1,0 +1,653 @@
+"""The unified LM stack: init / forward / decode for all six arch families.
+
+Layer params are *stacked* (leading L axis) and consumed by ``lax.scan`` so
+HLO size is depth-independent — an 80-layer qwen2-72b lowers as fast as a
+2-layer smoke model.  Heterogeneous stacks stay inside one scan body:
+
+* gemma3's 5:1 local:global pattern is a per-layer traced window size,
+* zamba2's shared attention block is a ``lax.cond`` on the layer index with
+  non-scanned (closure) params and a per-application KV cache,
+* xlstm's mLSTM/sLSTM mix is a per-layer flag selecting a cond branch over a
+  union param layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    AttnParams,
+    attention,
+    cross_attention,
+    decode_attention,
+    init_attention,
+    project_kv,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, embed_init, rms_norm
+from repro.models.moe import MoEParams, apply_moe, init_moe
+from repro.models.ssm import (
+    MambaParams,
+    MambaState,
+    apply_mamba,
+    decode_mamba,
+    init_mamba,
+    init_mamba_state,
+)
+from repro.models.xlstm import (
+    MLSTMParams,
+    MLSTMState,
+    SLSTMParams,
+    SLSTMState,
+    apply_mlstm,
+    apply_slstm,
+    decode_mlstm,
+    decode_slstm,
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+)
+
+
+# --------------------------------------------------------------------- util
+def _stack_init(init_fn, key: jax.Array, n: int):
+    """vmap an init over n layer keys -> stacked params."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def slstm_layer_ids(cfg: ModelConfig) -> list[int]:
+    """xlstm: which layer indices are sLSTM blocks (every Nth)."""
+    if not cfg.slstm_every:
+        return []
+    return [i for i in range(cfg.num_layers) if (i + 1) % cfg.slstm_every == 0]
+
+
+def hybrid_segments(cfg: ModelConfig) -> list[tuple[int, int, bool]]:
+    """zamba2: [(start, length, attn_after)] segments of mamba layers.
+
+    The shared attention block runs after every ``attn_every`` mamba layers;
+    a tail segment shorter than the period has no attention after it.
+    Segmenting (python loop over ~L/period scans) instead of a lax.cond in
+    one scan keeps the HLO cost analysis exact and never lowers a dead
+    branch.
+    """
+    per = cfg.attn_every or cfg.num_layers
+    segs = []
+    s0 = 0
+    while s0 < cfg.num_layers:
+        ln = min(per, cfg.num_layers - s0)
+        segs.append((s0, ln, ln == per))
+        s0 += ln
+    return segs
+
+
+def _tree_slice(tree, s0: int, ln: int):
+    return jax.tree.map(lambda a: a[s0 : s0 + ln], tree)
+
+
+def layer_windows(cfg: ModelConfig, long_context: bool = False) -> jnp.ndarray:
+    """Per-layer sliding-window sizes; 0 = full attention.
+
+    gemma3: 5 local (window) : 1 global (full) repeating.  With
+    ``long_context`` (the 500k decode shape) global layers fall back to the
+    arch's design-budget window instead of unbounded attention (DESIGN.md §5).
+    """
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.global_every > 0:
+        is_global = (idx + 1) % cfg.global_every == 0
+        global_win = 131072 if long_context else 0
+        return jnp.where(is_global, global_win, cfg.sliding_window).astype(jnp.int32)
+    return jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+
+
+class MLPParams(NamedTuple):
+    w_gate: jnp.ndarray
+    w_up: jnp.ndarray
+    w_down: jnp.ndarray
+
+
+def _init_mlp(key: jax.Array, cfg: ModelConfig) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return MLPParams(
+        w_gate=dense_init(k1, cfg.d_model, cfg.d_ff, cfg.dtype),
+        w_up=dense_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        w_down=dense_init(k3, cfg.d_ff, cfg.d_model, cfg.dtype),
+    )
+
+
+def _mlp(p: MLPParams, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p.w_gate))
+    u = jnp.einsum("bsd,df->bsf", x, p.w_up)
+    return jnp.einsum("bsf,fd->bsd", g * u, p.w_down)
+
+
+# --------------------------------------------------------------------- init
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, cfg.dtype)
+
+    if cfg.arch_type in ("dense", "vlm"):
+        params["layers"] = {
+            "attn": _stack_init(lambda k: init_attention(k, cfg), keys[2], cfg.num_layers),
+            "mlp": _stack_init(lambda k: _init_mlp(k, cfg), keys[3], cfg.num_layers),
+            "ln1": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+            "ln2": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+        }
+    elif cfg.arch_type == "moe":
+        params["layers"] = {
+            "attn": _stack_init(lambda k: init_attention(k, cfg), keys[2], cfg.num_layers),
+            "moe": _stack_init(lambda k: init_moe(k, cfg), keys[3], cfg.num_layers),
+            "ln1": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+            "ln2": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+        }
+        if cfg.dense_residual:
+            params["layers"]["dense_mlp"] = _stack_init(
+                lambda k: _init_mlp(k, cfg), keys[4], cfg.num_layers
+            )
+            params["layers"]["ln3"] = jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype)
+    elif cfg.arch_type == "hybrid":
+        params["layers"] = {
+            "mamba": _stack_init(lambda k: init_mamba(k, cfg), keys[2], cfg.num_layers),
+            "ln1": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+        }
+        params["shared_attn"] = init_attention(keys[3], cfg)
+        params["shared_mlp"] = _init_mlp(keys[4], cfg)
+        params["shared_ln1"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        params["shared_ln2"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    elif cfg.arch_type == "ssm":  # xlstm: separate stacks per block kind
+        n_s = len(slstm_layer_ids(cfg))
+        n_m = cfg.num_layers - n_s
+        params["layers"] = {
+            "mlstm": _stack_init(lambda k: init_mlstm(k, cfg), keys[2], max(n_m, 1)),
+            "slstm": _stack_init(lambda k: init_slstm(k, cfg), keys[3], max(n_s, 1)),
+            "ln_m": jnp.ones((max(n_m, 1), cfg.d_model), cfg.dtype),
+            "ln_s": jnp.ones((max(n_s, 1), cfg.d_model), cfg.dtype),
+        }
+    elif cfg.arch_type == "audio":  # whisper enc-dec
+        params["layers"] = {
+            "self_attn": _stack_init(lambda k: init_attention(k, cfg), keys[2], cfg.num_layers),
+            "cross_attn": _stack_init(lambda k: init_attention(k, cfg), keys[3], cfg.num_layers),
+            "mlp": _stack_init(lambda k: _init_mlp(k, cfg), keys[4], cfg.num_layers),
+            "ln1": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+            "ln2": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+            "ln3": jnp.ones((cfg.num_layers, cfg.d_model), cfg.dtype),
+        }
+        params["encoder"] = {
+            "attn": _stack_init(lambda k: init_attention(k, cfg), keys[5], cfg.encoder_layers),
+            "mlp": _stack_init(lambda k: _init_mlp(k, cfg), keys[6], cfg.encoder_layers),
+            "ln1": jnp.ones((cfg.encoder_layers, cfg.d_model), cfg.dtype),
+            "ln2": jnp.ones((cfg.encoder_layers, cfg.d_model), cfg.dtype),
+        }
+        params["enc_pos"] = (
+            jax.random.normal(keys[7], (cfg.encoder_seq_len, cfg.d_model)) * 0.02
+        ).astype(cfg.dtype)
+    else:
+        raise ValueError(cfg.arch_type)
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _encode(params: dict, cfg: ModelConfig, enc_in: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder: bidirectional attention over frame embeddings."""
+    x = enc_in + params["enc_pos"][None, : enc_in.shape[1]]
+    enc = params["encoder"]
+
+    def body(x, layer):
+        h = attention(
+            AttnParams(*layer["attn"]), cfg, rms_norm(x, layer["ln1"], cfg.norm_eps),
+            positions=None, causal=False,
+        )
+        x = x + h
+        x = x + _mlp(MLPParams(*layer["mlp"]), rms_norm(x, layer["ln2"], cfg.norm_eps))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        body, x,
+        {"attn": tuple(enc["attn"]), "mlp": tuple(enc["mlp"]),
+         "ln1": enc["ln1"], "ln2": enc["ln2"]},
+    )
+    return x
+
+
+def forward_lm(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) int32
+    positions: Optional[jnp.ndarray] = None,  # (B,S) or (B,3,S) for mrope
+    vision_embeds: Optional[jnp.ndarray] = None,  # (B, P, d) vlm stub
+    encoder_embeds: Optional[jnp.ndarray] = None,  # (B, T, d) audio stub
+    long_context: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (hidden (B,S,d), aux_loss ())."""
+    from repro.sharding.specs import constrain_batch
+
+    b, s = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    if cfg.anchor_batch:
+        x = constrain_batch(x)  # re-anchor batch sharding lost in vocab gather
+    if cfg.arch_type == "vlm" and vision_embeds is not None:
+        p = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, p:]], axis=1)
+    if positions is None:
+        pos1d = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        positions = (
+            jnp.broadcast_to(pos1d[:, None], (b, 3, s)) if cfg.mrope else pos1d
+        )
+
+    aux_total = jnp.zeros((), jnp.float32)
+    windows = layer_windows(cfg, long_context)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        lp = params["layers"]
+
+        def body(carry, layer):
+            x, aux = carry
+            h = attention(
+                AttnParams(*layer["attn"]), cfg,
+                rms_norm(x, layer["ln1"], cfg.norm_eps),
+                positions, window=layer["window"],
+            )
+            x = x + h
+            if cfg.arch_type == "moe":
+                mo, a = apply_moe(
+                    MoEParams(*layer["moe"]), cfg,
+                    rms_norm(x, layer["ln2"], cfg.norm_eps),
+                )
+                if cfg.dense_residual:
+                    mo = mo + _mlp(
+                        MLPParams(*layer["dense_mlp"]),
+                        rms_norm(x, layer["ln3"], cfg.norm_eps),
+                    )
+                x = x + mo
+                aux = aux + a
+            else:
+                x = x + _mlp(
+                    MLPParams(*layer["mlp"]), rms_norm(x, layer["ln2"], cfg.norm_eps)
+                )
+            return (x, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = {k: (tuple(v) if isinstance(v, tuple) or hasattr(v, "_fields") else v)
+              for k, v in lp.items()}
+        xs["window"] = windows
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), xs)
+
+    elif cfg.arch_type == "hybrid":
+        lp = params["layers"]
+        shared_attn = AttnParams(*params["shared_attn"])
+        shared_mlp = MLPParams(*params["shared_mlp"])
+        win = jnp.asarray(131072 if long_context else 0, jnp.int32)
+
+        def body(x, layer):
+            x = x + apply_mamba(
+                MambaParams(*layer["mamba"]), cfg,
+                rms_norm(x, layer["ln1"], cfg.norm_eps),
+            )
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+
+        def shared_block(x):
+            h = attention(
+                shared_attn, cfg,
+                rms_norm(x, params["shared_ln1"], cfg.norm_eps),
+                positions, window=win,
+            )
+            x = x + h
+            return x + _mlp(shared_mlp, rms_norm(x, params["shared_ln2"], cfg.norm_eps))
+
+        if cfg.remat:
+            shared_block = jax.checkpoint(shared_block)
+        for s0, ln, attn_after in hybrid_segments(cfg):
+            seg = _tree_slice({"mamba": tuple(lp["mamba"]), "ln1": lp["ln1"]}, s0, ln)
+            x, _ = jax.lax.scan(body, x, seg)
+            if attn_after:
+                x = shared_block(x)
+
+    elif cfg.arch_type == "ssm":
+        lp = params["layers"]
+
+        def m_body(x, layer):
+            x = x + apply_mlstm(
+                MLSTMParams(*layer["mlstm"]), cfg,
+                rms_norm(x, layer["ln"], cfg.norm_eps),
+            )
+            return x, None
+
+        if cfg.remat:
+            m_body = jax.checkpoint(m_body)
+
+        def s_block(x, sp, ln_s):
+            return x + apply_slstm(
+                SLSTMParams(*sp), cfg, rms_norm(x, ln_s, cfg.norm_eps)
+            )
+
+        if cfg.remat:
+            s_block = jax.checkpoint(s_block)
+        s_ids = slstm_layer_ids(cfg)
+        m_used = 0
+        seg_start = 0
+        for seg_i, s_layer in enumerate(s_ids + [cfg.num_layers]):
+            n_m = s_layer - seg_start  # mlstm layers before this slstm
+            if n_m > 0:
+                seg = _tree_slice(
+                    {"mlstm": tuple(lp["mlstm"]), "ln": lp["ln_m"]}, m_used, n_m
+                )
+                x, _ = jax.lax.scan(m_body, x, seg)
+                m_used += n_m
+            if s_layer < cfg.num_layers:
+                sp = _tree_slice(tuple(lp["slstm"]), seg_i, 1)
+                sp = jax.tree.map(lambda a: a[0], sp)
+                x = s_block(x, sp, lp["ln_s"][seg_i])
+            seg_start = s_layer + 1
+
+    elif cfg.arch_type == "audio":
+        assert encoder_embeds is not None, "audio arch needs encoder_embeds"
+        enc_out = _encode(params, cfg, encoder_embeds)
+        lp = params["layers"]
+
+        def body(carry, layer):
+            x, _ = carry
+            sa = AttnParams(*layer["self_attn"])
+            ca = AttnParams(*layer["cross_attn"])
+            x = x + attention(
+                sa, cfg, rms_norm(x, layer["ln1"], cfg.norm_eps), positions
+            )
+            ek, ev = project_kv(ca, cfg, enc_out)
+            x = x + cross_attention(
+                ca, cfg, rms_norm(x, layer["ln2"], cfg.norm_eps), ek, ev
+            )
+            x = x + _mlp(
+                MLPParams(*layer["mlp"]), rms_norm(x, layer["ln3"], cfg.norm_eps)
+            )
+            return (x, jnp.zeros((), jnp.float32)), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = {"self_attn": tuple(lp["self_attn"]), "cross_attn": tuple(lp["cross_attn"]),
+              "mlp": tuple(lp["mlp"]), "ln1": lp["ln1"], "ln2": lp["ln2"],
+              "ln3": lp["ln3"]}
+        (x, _), _ = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    hidden: jnp.ndarray,  # (B, S, d)
+    labels: jnp.ndarray,  # (B, S) int32, -1 = masked
+    aux: jnp.ndarray,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Chunked softmax cross-entropy — never materializes (B, S, V) in f32.
+
+    Scans over sequence chunks; per chunk the (B, c, V) logits live briefly
+    (sharded over the model axis on V under GSPMD).
+    """
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )  # (d, V)
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h_c, l_c = inp
+        logits = jnp.einsum("bsd,dv->bsv", h_c, unembed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l_c, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (l_c >= 0).astype(jnp.float32)
+        tot = tot + ((lse - gold) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls)
+    )
+    return tot / jnp.maximum(cnt, 1.0) + aux
+
+
+# ------------------------------------------------------------------- decode
+class DecodeState(NamedTuple):
+    """Family-union single-token decode state (unused fields are ())."""
+
+    pos: jnp.ndarray  # (B,) absolute position of the next token
+    k_cache: Any = ()  # (L, B, S, KV, hd) dense/moe/vlm
+    v_cache: Any = ()
+    mamba: Any = ()  # stacked MambaState (hybrid)
+    shared_k: Any = ()  # (A, B, S, KV, hd) zamba2 shared-attn caches
+    shared_v: Any = ()
+    mlstm: Any = ()  # stacked MLSTMState (ssm)
+    slstm: Any = ()  # stacked SLSTMState
+    cross_k: Any = ()  # (L, B, T, KV, hd) whisper cross-attn caches
+    cross_v: Any = ()
+
+
+def init_decode_state(
+    params: dict, cfg: ModelConfig, batch: int, cache_len: int,
+    encoder_embeds: Optional[jnp.ndarray] = None,
+) -> DecodeState:
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    pos = jnp.zeros((batch,), jnp.int32)
+    zeros_kv = lambda n: jnp.zeros((n, batch, cache_len, kv, hd), cfg.dtype)
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        return DecodeState(pos=pos, k_cache=zeros_kv(cfg.num_layers),
+                           v_cache=zeros_kv(cfg.num_layers))
+    if cfg.arch_type == "hybrid":
+        n_app = cfg.num_layers // cfg.attn_every
+        mamba = jax.vmap(lambda _: init_mamba_state(cfg, batch, cfg.dtype))(
+            jnp.arange(cfg.num_layers)
+        )
+        return DecodeState(pos=pos, mamba=mamba,
+                           shared_k=zeros_kv(max(n_app, 1)),
+                           shared_v=zeros_kv(max(n_app, 1)))
+    if cfg.arch_type == "ssm":
+        n_s = len(slstm_layer_ids(cfg))
+        n_m = cfg.num_layers - n_s
+        mst = jax.vmap(lambda _: init_mlstm_state(cfg, batch))(jnp.arange(max(n_m, 1)))
+        sst = jax.vmap(lambda _: init_slstm_state(cfg, batch))(jnp.arange(max(n_s, 1)))
+        return DecodeState(pos=pos, mlstm=mst, slstm=sst)
+    if cfg.arch_type == "audio":
+        assert encoder_embeds is not None
+        enc_out = _encode(params, cfg, encoder_embeds)
+        lp = params["layers"]
+        ck, cv = jax.vmap(
+            lambda ca: project_kv(AttnParams(*ca), cfg, enc_out)
+        )(tuple(lp["cross_attn"]))
+        return DecodeState(pos=pos, k_cache=zeros_kv(cfg.num_layers),
+                           v_cache=zeros_kv(cfg.num_layers),
+                           cross_k=ck, cross_v=cv)
+    raise ValueError(cfg.arch_type)
+
+
+def decode_lm(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) int32
+    state: DecodeState,
+    long_context: bool = False,
+) -> tuple[jnp.ndarray, DecodeState]:
+    """One-token decode step.  Returns (logits (B, V), new state)."""
+    from repro.sharding.specs import constrain_batch
+
+    x = params["embed"][token] * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    if cfg.anchor_batch:
+        x = constrain_batch(x)
+    pos = state.pos
+    windows = layer_windows(cfg, long_context)
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        lp = params["layers"]
+
+        def body(x, layer):
+            h, k_new, v_new = decode_attention(
+                AttnParams(*layer["attn"]), cfg,
+                rms_norm(x, layer["ln1"], cfg.norm_eps),
+                layer["k"], layer["v"], pos, window=layer["window"],
+            )
+            x = x + h
+            if cfg.arch_type == "moe":
+                mo, _ = apply_moe(
+                    MoEParams(*layer["moe"]), cfg,
+                    rms_norm(x, layer["ln2"], cfg.norm_eps),
+                )
+                if cfg.dense_residual:
+                    mo = mo + _mlp(
+                        MLPParams(*layer["dense_mlp"]),
+                        rms_norm(x, layer["ln3"], cfg.norm_eps),
+                    )
+                x = x + mo
+            else:
+                x = x + _mlp(
+                    MLPParams(*layer["mlp"]), rms_norm(x, layer["ln2"], cfg.norm_eps)
+                )
+            return x, (k_new, v_new)
+
+        xs = {k: (tuple(v) if hasattr(v, "_fields") else v) for k, v in lp.items()}
+        xs["k"], xs["v"] = state.k_cache, state.v_cache
+        xs["window"] = windows
+        x, (k_c, v_c) = jax.lax.scan(body, x, xs)
+        state = state._replace(k_cache=k_c, v_cache=v_c, pos=pos + 1)
+
+    elif cfg.arch_type == "hybrid":
+        shared_attn = AttnParams(*params["shared_attn"])
+        shared_mlp = MLPParams(*params["shared_mlp"])
+        win = jnp.asarray(131072 if long_context else 0, jnp.int32)
+        sk, sv = state.shared_k, state.shared_v
+
+        def body(x, layer):
+            out, mstate = decode_mamba(
+                MambaParams(*layer["mamba"]), cfg,
+                rms_norm(x, layer["ln1"], cfg.norm_eps),
+                MambaState(*layer["mstate"]),
+            )
+            return x + out, tuple(mstate)
+
+        lp = params["layers"]
+        new_mstates = []
+        app = 0
+        for s0, ln, attn_after in hybrid_segments(cfg):
+            seg = _tree_slice(
+                {"mamba": tuple(lp["mamba"]), "ln1": lp["ln1"],
+                 "mstate": tuple(state.mamba)}, s0, ln,
+            )
+            x, mstates = jax.lax.scan(body, x, seg)
+            new_mstates.append(mstates)
+            if attn_after:
+                h, k_new, v_new = decode_attention(
+                    shared_attn, cfg,
+                    rms_norm(x, params["shared_ln1"], cfg.norm_eps),
+                    sk[app], sv[app], pos, window=win,
+                )
+                x = x + h
+                x = x + _mlp(shared_mlp, rms_norm(x, params["shared_ln2"], cfg.norm_eps))
+                sk = sk.at[app].set(k_new)
+                sv = sv.at[app].set(v_new)
+                app += 1
+        mstates = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mstates)
+        state = state._replace(
+            mamba=MambaState(*mstates), shared_k=sk, shared_v=sv, pos=pos + 1
+        )
+
+    elif cfg.arch_type == "ssm":
+        lp = params["layers"]
+
+        def m_body(x, layer):
+            out, new = decode_mlstm(
+                MLSTMParams(*layer["mlstm"]), cfg,
+                rms_norm(x, layer["ln"], cfg.norm_eps),
+                MLSTMState(*layer["mst"]),
+            )
+            return x + out, tuple(new)
+
+        s_ids = slstm_layer_ids(cfg)
+        m_used, seg_start = 0, 0
+        new_msts, new_ssts = [], []
+        for seg_i, s_layer in enumerate(s_ids + [cfg.num_layers]):
+            n_m = s_layer - seg_start
+            if n_m > 0:
+                seg = _tree_slice(
+                    {"mlstm": tuple(lp["mlstm"]), "ln": lp["ln_m"],
+                     "mst": tuple(state.mlstm)}, m_used, n_m,
+                )
+                x, msts = jax.lax.scan(m_body, x, seg)
+                new_msts.append(msts)
+                m_used += n_m
+            if s_layer < cfg.num_layers:
+                sp = jax.tree.map(lambda a: a[seg_i], tuple(lp["slstm"]))
+                sst = jax.tree.map(lambda a: a[seg_i], tuple(state.slstm))
+                out, new_sst = decode_slstm(
+                    SLSTMParams(*sp), cfg,
+                    rms_norm(x, lp["ln_s"][seg_i], cfg.norm_eps),
+                    SLSTMState(*sst),
+                )
+                x = x + out
+                new_ssts.append(jax.tree.map(lambda a: a[None], tuple(new_sst)))
+            seg_start = s_layer + 1
+        msts = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_msts)
+        if new_ssts:
+            ssts = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssts)
+        else:
+            ssts = tuple(state.slstm)
+        state = state._replace(
+            mlstm=MLSTMState(*msts), slstm=SLSTMState(*ssts), pos=pos + 1
+        )
+
+    elif cfg.arch_type == "audio":
+        lp = params["layers"]
+
+        def body(x, layer):
+            sa = AttnParams(*layer["self_attn"])
+            ca = AttnParams(*layer["cross_attn"])
+            h, k_new, v_new = decode_attention(
+                sa, cfg, rms_norm(x, layer["ln1"], cfg.norm_eps),
+                layer["k"], layer["v"], pos,
+            )
+            x = x + h
+            x = x + cross_attention(
+                ca, cfg, rms_norm(x, layer["ln2"], cfg.norm_eps),
+                layer["ck"], layer["cv"],
+            )
+            x = x + _mlp(MLPParams(*layer["mlp"]), rms_norm(x, layer["ln3"], cfg.norm_eps))
+            return x, (k_new, v_new)
+
+        xs = {"self_attn": tuple(lp["self_attn"]), "cross_attn": tuple(lp["cross_attn"]),
+              "mlp": tuple(lp["mlp"]), "ln1": lp["ln1"], "ln2": lp["ln2"],
+              "ln3": lp["ln3"], "k": state.k_cache, "v": state.v_cache,
+              "ck": state.cross_k, "cv": state.cross_v}
+        x, (k_c, v_c) = jax.lax.scan(body, x, xs)
+        state = state._replace(k_cache=k_c, v_cache=v_c, pos=pos + 1)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)[:, 0]
+    return logits, state

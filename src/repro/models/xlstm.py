@@ -1,0 +1,301 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM trains in its parallel, attention-like stabilized form (quadratic in
+the sequence, MXU-friendly) and decodes with the O(1) recurrent form carrying
+a (head_dim x head_dim) matrix memory per head.  sLSTM is inherently
+sequential (hidden-state recurrence in the gates), so training uses a
+``lax.scan`` over time.
+
+Blocks follow the paper's pre-up-projection design: the sequence-mix cell
+lives inside a 2x up-projection (mLSTM) or is followed by a 4/3 gated FFN
+(sLSTM); ``cfg.d_ff == 0`` marks this family (no separate transformer FFN).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+# ------------------------------------------------------------------- mLSTM
+class MLSTMParams(NamedTuple):
+    up_proj: jnp.ndarray  # (d, 2*inner) -> (cell input, gate)
+    wq: jnp.ndarray  # (inner, inner)
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    w_if: jnp.ndarray  # (inner, 2*H) input+forget gate pre-activations
+    b_if: jnp.ndarray  # (2*H,)
+    norm: jnp.ndarray  # (inner,) per-head group norm scale
+    down_proj: jnp.ndarray  # (inner, d)
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    inner = 2 * cfg.d_model
+    heads = cfg.num_heads
+    return inner, heads, inner // heads
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> MLSTMParams:
+    d = cfg.d_model
+    inner, heads, _hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return MLSTMParams(
+        up_proj=dense_init(ks[0], d, 2 * inner, cfg.dtype),
+        wq=dense_init(ks[1], inner, inner, cfg.dtype),
+        wk=dense_init(ks[2], inner, inner, cfg.dtype),
+        wv=dense_init(ks[3], inner, inner, cfg.dtype),
+        w_if=dense_init(ks[4], inner, 2 * heads, jnp.float32),
+        b_if=jnp.concatenate([jnp.zeros((heads,)), 3.0 * jnp.ones((heads,))]),
+        norm=jnp.ones((inner,), cfg.dtype),
+        down_proj=dense_init(ks[5], inner, d, cfg.dtype),
+    )
+
+
+def apply_mlstm(
+    p: MLSTMParams, cfg: ModelConfig, x: jnp.ndarray, chunk: int = 256
+) -> jnp.ndarray:
+    """Chunkwise stabilized mLSTM.  x (B, S, d) -> (B, S, d).
+
+    The fully-parallel form materializes a (B, S, S, H) decay tensor —
+    prohibitive past a few K tokens.  The chunkwise form (xLSTM paper App. /
+    mlstm_kernels) carries (C, n, m) state across chunks via a lax.scan and
+    keeps only a (B, L, L, H) intra-chunk tensor live — the same structure as
+    our Mamba2 SSD.  Validated against the recurrent decode path in
+    tests/test_models_zoo.py.
+    """
+    b, s, d = x.shape
+    inner, heads, hd = _mlstm_dims(cfg)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    up = jnp.einsum("bsd,de->bse", x, p.up_proj)
+    cell_in, gate = jnp.split(up, 2, axis=-1)  # (B,S,inner)
+
+    q = jnp.einsum("bse,ef->bsf", cell_in, p.wq).reshape(b, s, heads, hd)
+    k = jnp.einsum("bse,ef->bsf", cell_in, p.wk).reshape(b, s, heads, hd)
+    v = jnp.einsum("bse,ef->bsf", cell_in, p.wv).reshape(b, s, heads, hd)
+    gates = jnp.einsum("bse,eg->bsg", cell_in.astype(jnp.float32), p.w_if) + p.b_if
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    def cpad(t, fill=0.0):
+        if pad == 0:
+            return t
+        cfgp = [(0, 0)] * t.ndim
+        cfgp[1] = (0, pad)
+        return jnp.pad(t, cfgp, constant_values=fill)
+
+    sp = s + pad
+    nc = sp // chunk
+    qf = jnp.moveaxis(cpad(q).astype(jnp.float32).reshape(b, nc, chunk, heads, hd), 1, 0)
+    kf = jnp.moveaxis(cpad(k).astype(jnp.float32).reshape(b, nc, chunk, heads, hd), 1, 0)
+    vf = jnp.moveaxis(cpad(v).astype(jnp.float32).reshape(b, nc, chunk, heads, hd), 1, 0)
+    i_c = jnp.moveaxis(cpad(i_pre, -1e9).reshape(b, nc, chunk, heads), 1, 0)
+    lf_c = jnp.moveaxis(cpad(logf).reshape(b, nc, chunk, heads), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_fn(carry, inp):
+        c_st, n_st, m_st = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        q_k, k_k, v_k, i_k, lf_k = inp
+        cumf = jnp.cumsum(lf_k, axis=1)  # (B,L,H) local cumulative log-forget
+        # stabilizer per position: max(intra max, cross)
+        dmat = cumf[:, :, None, :] - cumf[:, None, :, :] + i_k[:, None, :, :]
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)  # (B,L,L,H)
+        m_local = jnp.max(dmat, axis=2)  # (B,L,H)
+        m_cross = cumf + m_st[:, None, :]  # (B,L,H)
+        m_t = jnp.maximum(m_local, m_cross)
+        # intra-chunk weights
+        w = jnp.exp(dmat - m_t[:, :, None, :])  # (B,L,L,H)
+        scores = jnp.einsum("blhd,bjhd->bljh", q_k, k_k) / (hd**0.5)
+        wn = scores * w  # (B,L,L,H)
+        num = jnp.einsum("bljh,bjhd->blhd", wn, v_k)
+        den = wn.sum(axis=2)  # (B,L,H)
+        # cross-chunk contribution
+        cross_sc = jnp.exp(m_cross - m_t)  # (B,L,H)
+        num = num + cross_sc[..., None] * jnp.einsum(
+            "blhd,bhde->blhe", q_k / (hd**0.5), c_st
+        )
+        den = den + cross_sc * jnp.einsum("blhd,bhd->blh", q_k / (hd**0.5), n_st)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h_k = num / den[..., None]  # (B,L,H,hd)
+        # state update to end of chunk
+        g_tot = cumf[:, -1, :]  # (B,H)
+        decay_j = g_tot[:, None, :] - cumf + i_k  # (B,L,H)
+        m_new = jnp.maximum(g_tot + m_st, jnp.max(decay_j, axis=1))
+        sc_j = jnp.exp(decay_j - m_new[:, None, :])  # (B,L,H)
+        c_new = c_st * jnp.exp(g_tot + m_st - m_new)[:, :, None, None] + jnp.einsum(
+            "blh,blhd,blhe->bhde", sc_j, k_k, v_k
+        )
+        n_new = n_st * jnp.exp(g_tot + m_st - m_new)[:, :, None] + jnp.einsum(
+            "blh,blhd->bhd", sc_j, k_k
+        )
+        return (c_new, n_new, m_new), h_k
+
+    init = (
+        jnp.zeros((b, heads, hd, hd), jnp.float32),
+        jnp.zeros((b, heads, hd), jnp.float32),
+        jnp.full((b, heads), -1e9, jnp.float32),
+    )
+    # (no chunk-body remat here: measured +3% step bound for xlstm — its
+    # bottleneck is the sLSTM time scan, not the mLSTM chunk tensors)
+    _, hs = jax.lax.scan(chunk_fn, init, (qf, kf, vf, i_c, lf_c))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, sp, inner)[:, :s].astype(x.dtype)
+
+    h = rms_norm(h, p.norm, cfg.norm_eps)  # per-channel norm (group-norm stand-in)
+    h = h * jax.nn.silu(gate)
+    return jnp.einsum("bse,ed->bsd", h, p.down_proj)
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray  # (B, H, hd) normalizer
+    m: jnp.ndarray  # (B, H) stabilizer
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    inner, heads, hd = _mlstm_dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, heads, hd), jnp.float32),
+        m=jnp.full((batch, heads), -1e9, jnp.float32),
+    )
+
+
+def decode_mlstm(
+    p: MLSTMParams, cfg: ModelConfig, x: jnp.ndarray, state: MLSTMState
+) -> tuple[jnp.ndarray, MLSTMState]:
+    """One-token recurrent mLSTM step.  x (B, 1, d)."""
+    b = x.shape[0]
+    inner, heads, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p.up_proj)
+    cell_in, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", cell_in, p.wq).reshape(b, heads, hd)
+    k = jnp.einsum("bse,ef->bsf", cell_in, p.wk).reshape(b, heads, hd)
+    v = jnp.einsum("bse,ef->bsf", cell_in, p.wv).reshape(b, heads, hd)
+    gates = jnp.einsum("bse,eg->bsg", cell_in.astype(jnp.float32), p.w_if)[:, 0] + p.b_if
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)  # (B,H)
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    f_sc = jnp.exp(logf + state.m - m_new)
+    i_sc = jnp.exp(i_pre - m_new)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    c_new = state.c * f_sc[..., None, None] + i_sc[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :]
+    )
+    n_new = state.n * f_sc[..., None] + i_sc[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf / (hd**0.5), c_new)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qf / (hd**0.5), n_new)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).reshape(b, 1, inner).astype(x.dtype)
+    h = rms_norm(h, p.norm, cfg.norm_eps) * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", h, p.down_proj)
+    return out, MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+# ------------------------------------------------------------------- sLSTM
+class SLSTMParams(NamedTuple):
+    w_in: jnp.ndarray  # (d, 4*inner) input weights for (i, f, z, o)
+    r_in: jnp.ndarray  # (H, 4*hd, hd) block-diagonal recurrent weights
+    b: jnp.ndarray  # (4*inner,)
+    norm: jnp.ndarray  # (inner,)
+    ffn_gate: jnp.ndarray  # (inner, ff)
+    ffn_up: jnp.ndarray
+    ffn_down: jnp.ndarray  # (ff, d)
+    down_proj: jnp.ndarray  # (inner, d) unused (kept for symmetry) — zeros
+
+
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    inner = cfg.d_model
+    heads = cfg.num_heads
+    ff = max(int(4 * inner / 3) // 8 * 8, 8)
+    return inner, heads, inner // heads, ff
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> SLSTMParams:
+    d = cfg.d_model
+    inner, heads, hd, ff = _slstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return SLSTMParams(
+        w_in=dense_init(ks[0], d, 4 * inner, jnp.float32),
+        r_in=(jax.random.normal(ks[1], (heads, 4 * hd, hd)) * hd**-0.5).astype(
+            jnp.float32
+        ),
+        b=jnp.concatenate(
+            [jnp.zeros((inner,)), 3.0 * jnp.ones((inner,)), jnp.zeros((2 * inner,))]
+        ),
+        norm=jnp.ones((inner,), cfg.dtype),
+        ffn_gate=dense_init(ks[2], inner, ff, cfg.dtype),
+        ffn_up=dense_init(ks[3], inner, ff, cfg.dtype),
+        ffn_down=dense_init(ks[4], ff, d, cfg.dtype),
+        down_proj=jnp.zeros((inner, d), cfg.dtype),
+    )
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, inner)
+    n: jnp.ndarray  # (B, inner)
+    m: jnp.ndarray  # (B, inner)
+    h: jnp.ndarray  # (B, inner)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    inner = cfg.d_model
+    z = jnp.zeros((batch, inner), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full_like(z, -1e9), h=z)
+
+
+def _slstm_cell(
+    p: SLSTMParams, cfg: ModelConfig, wx: jnp.ndarray, state: SLSTMState
+) -> SLSTMState:
+    """One sLSTM time step.  wx (B, 4*inner) precomputed input projection."""
+    b = wx.shape[0]
+    inner, heads, hd, _ = _slstm_dims(cfg)
+    hh = state.h.reshape(b, heads, hd)
+    rec = jnp.einsum("bhd,hgd->bhg", hh, p.r_in).reshape(b, 4 * inner)
+    pre = wx + rec + p.b
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)  # (B, inner)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(logf + state.m - m_new)
+    c_new = f_sc * state.c + i_sc * jnp.tanh(z_pre)
+    n_new = f_sc * state.n + i_sc
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def apply_slstm(p: SLSTMParams, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Sequential sLSTM over the sequence + gated FFN.  x (B,S,d)->(B,S,d)."""
+    b, s, d = x.shape
+    inner, _, _, _ = _slstm_dims(cfg)
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p.w_in)  # (B,S,4*inner)
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, cfg, wx_t, state)
+        return new, new.h
+
+    init = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,inner)
+    h = rms_norm(h, p.norm, cfg.norm_eps)
+    g = jax.nn.silu(jnp.einsum("bse,ef->bsf", h, p.ffn_gate))
+    u = jnp.einsum("bse,ef->bsf", h, p.ffn_up)
+    return jnp.einsum("bsf,fd->bsd", g * u, p.ffn_down)
+
+
+def decode_slstm(
+    p: SLSTMParams, cfg: ModelConfig, x: jnp.ndarray, state: SLSTMState
+) -> tuple[jnp.ndarray, SLSTMState]:
+    """One-token sLSTM step.  x (B, 1, d)."""
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p.w_in)[:, 0]
+    new = _slstm_cell(p, cfg, wx, state)
+    h = rms_norm(new.h[:, None, :].astype(x.dtype), p.norm, cfg.norm_eps)
+    g = jax.nn.silu(jnp.einsum("bse,ef->bsf", h, p.ffn_gate))
+    u = jnp.einsum("bse,ef->bsf", h, p.ffn_up)
+    return jnp.einsum("bsf,fd->bsd", g * u, p.ffn_down), new

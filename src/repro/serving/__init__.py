@@ -1,0 +1,4 @@
+"""Serving substrate: slot-based continuous batching over serve_step."""
+from repro.serving.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,142 @@
+"""Continuous-batching serve engine (slot-based, single jitted step).
+
+A fixed batch of ``max_batch`` slots steps together through the jitted
+``serve_step``; per-slot host-side bookkeeping decides what each slot feeds:
+
+* **prefill phase** — the slot's next prompt token (logits discarded),
+* **decode phase**  — its previously sampled token,
+* **free**          — a pad token (output ignored).
+
+Slots are independent rows of the decode state (KV caches / SSM states are
+per-batch-row), so batching never changes any request's output — asserted by
+tests/test_serving.py against solo runs.  New requests join as slots free up
+(continuous batching), with no recompilation: shapes are static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_decode_state
+from repro.train.steps import make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: str
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos_in_prompt: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 4,
+        cache_len: int = 256,
+        greedy: bool = True,
+        seed: int = 0,
+        encoder_embeds=None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self._step = jax.jit(make_serve_step(cfg))
+        self.state = init_decode_state(
+            params, cfg, max_batch, cache_len, encoder_embeds=encoder_embeds
+        )
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.queue: deque[Request] = deque()
+        self.done: dict[str, list[int]] = {}
+        self._next_token = jnp.zeros((max_batch, 1), jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) >= 1
+        assert len(req.prompt) + req.max_new_tokens <= self.cache_len
+        self.queue.append(req)
+
+    def _reset_slot_state(self, b: int) -> None:
+        """Zero slot b's row of every per-batch state array + its position."""
+
+        def zero_row(a):
+            if hasattr(a, "ndim") and a.ndim >= 2 and a.shape[1] == self.max_batch:
+                return a.at[:, b].set(0)
+            return a
+
+        # stacked caches/states have layout (L, B, ...); pos is (B,)
+        self.state = jax.tree.map(zero_row, self.state)
+        self.state = self.state._replace(pos=self.state.pos.at[b].set(0))
+
+    def _admit(self) -> None:
+        for b, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                req = self.queue.popleft()
+                self.slots[b] = _Slot(req=req, pos_in_prompt=0)
+                self._reset_slot_state(b)
+                self._next_token = self._next_token.at[b, 0].set(req.prompt[0])
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> None:
+        """One engine tick: admit, run the jitted step, route per-slot."""
+        self._admit()
+        logits, self.state = self._step(self.params, self._next_token, self.state)
+        if self.greedy:
+            sampled = jnp.argmax(logits, axis=-1)
+        else:
+            self._key, sub = jax.random.split(self._key)
+            sampled = jax.random.categorical(sub, logits, axis=-1)
+        sampled = jax.device_get(sampled)
+
+        for b, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            req = slot.req
+            if slot.pos_in_prompt < len(req.prompt) - 1:
+                # still prefilling: feed the next prompt token
+                slot.pos_in_prompt += 1
+                self._next_token = self._next_token.at[b, 0].set(
+                    req.prompt[slot.pos_in_prompt]
+                )
+                continue
+            tok = int(sampled[b])
+            slot.generated.append(tok)
+            finished = len(slot.generated) >= req.max_new_tokens or (
+                req.eos_id is not None and tok == req.eos_id
+            )
+            if finished:
+                self.done[req.uid] = slot.generated
+                self.slots[b] = _Slot()
+            else:
+                self._next_token = self._next_token.at[b, 0].set(tok)
+
+    def run(self, requests: list[Request], max_ticks: int = 10_000) -> dict:
+        """Serve all requests to completion; returns {uid: generated tokens}."""
+        for r in requests:
+            self.submit(r)
+        ticks = 0
+        while (self.queue or any(not s.free for s in self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return dict(self.done)

@@ -1,0 +1,16 @@
+"""Sharding substrate: NamedSharding rule tables for params, inputs, states."""
+from repro.sharding.specs import (
+    batch_spec,
+    decode_state_specs,
+    input_specs_sharding,
+    param_specs,
+    strategy_for,
+)
+
+__all__ = [
+    "param_specs",
+    "batch_spec",
+    "input_specs_sharding",
+    "decode_state_specs",
+    "strategy_for",
+]

@@ -1,0 +1,264 @@
+"""Sharding rules: pytree-path-pattern -> PartitionSpec.
+
+Strategy table (DESIGN.md §6):
+
+* ``tp``   — tensor parallel: weights shard over ``model`` (heads / ffn /
+  vocab / experts); replicated over ``data``/``pod``; batch over
+  ``(pod, data)``.  Default for the small/medium archs.
+* ``fsdp`` — ``tp`` plus parameter/optimizer sharding over ``data`` on a
+  second weight axis (ZeRO-3 style; GSPMD inserts per-layer all-gathers).
+  Required for qwen2-72b / arctic-480b: TP-only Adam state alone would be
+  36 GB/chip, 2.3x over a v5e's 16 GB.
+
+Every rule degrades gracefully: an axis is only used if it divides the dim;
+otherwise that dim stays replicated (small archs like whisper-base simply
+replicate most weights — correct, and cheap at their size).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# archs whose parameter+optimizer footprint requires ZeRO/FSDP sharding
+FSDP_ARCHS = ("qwen2-72b", "arctic-480b")
+
+
+# small archs that run best fully sequence-parallel / replicated-trunk (§Perf)
+SP_ARCHS = ("gemma3-1b", "whisper-base")
+
+
+def strategy_for(cfg: ModelConfig, kind: str | None = None) -> str:
+    if cfg.name in FSDP_ARCHS:
+        # serving has no optimizer state: if the bf16 weights fit TP-resident
+        # (<= ~12 GB/chip), decode avoids FSDP's per-token weight re-gathers
+        # (measured: 9.9x on qwen2-72b decode_32k)
+        if kind == "decode" and cfg.param_count() * 2 / 16 <= 12e9:
+            return "tp"
+        return "fsdp"
+    if cfg.name in SP_ARCHS:
+        return "sp"
+    return "tp"
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape: tuple[int, ...], spec: list) -> P:
+    """Drop axes that don't divide their dim (graceful degradation)."""
+    out = []
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+# (regex on keystr path, ndim) -> axis template, aligned to the LAST ndim dims.
+# "M" = model axis, "D" = fsdp data axis (dropped under plain tp).
+# Templates are for the UNSTACKED layer shapes; stacked (leading L) dims get
+# None prepended automatically by alignment-to-last.
+_RULES: list[tuple[str, dict[int, list]]] = [
+    # embeddings: vocab over model (composes with FedS row sparsification)
+    (r"\['embed'\]$", {2: ["M", "D"]}),
+    (r"\['unembed'\]$", {2: ["D", "M"]}),
+    (r"\['enc_pos'\]$", {2: [None, None]}),
+    # attention projections
+    (r"\.wq$|\.wk$|\.wv$", {2: ["D", "M"], 3: [None, "D", "M"]}),
+    (r"\.wo$", {2: ["M", "D"], 3: [None, "M", "D"]}),
+    (r"\.bq$|\.bk$|\.bv$", {1: ["M"], 2: [None, "M"]}),
+    (r"\.q_norm$|\.k_norm$", {1: [None], 2: [None, None]}),
+    # dense MLP
+    (r"\.w_gate$|\.w_up$", {2: ["D", "M"], 3: [None, "D", "M"], 4: [None, "M", "D", None]}),
+    (r"\.w_down$", {2: ["M", "D"], 3: [None, "M", "D"], 4: [None, "M", None, "D"]}),
+    # MoE: experts over model (expert parallelism), d over fsdp axis
+    (r"\.router$", {2: [None, "M"], 3: [None, None, "M"]}),
+    (r"\.shared_gate$|\.shared_up$", {2: ["D", "M"], 3: [None, "D", "M"]}),
+    (r"\.shared_down$", {2: ["M", "D"], 3: [None, "M", "D"]}),
+    # Mamba: inner dim (heads) over model
+    (r"\.in_proj$|\.bc_proj$|\.dt_proj$", {2: ["D", "M"], 3: [None, "D", "M"]}),
+    (r"\.out_proj$|\.down_proj$", {2: ["M", "D"], 3: [None, "M", "D"]}),
+    (r"\.dt_bias$|\.a_log$|\.d_skip$", {1: ["M"], 2: [None, "M"]}),
+    (r"\.conv_w$", {2: [None, "M"], 3: [None, None, "M"]}),
+    # xLSTM
+    (r"\.up_proj$|\.w_in$", {2: ["D", "M"], 3: [None, "D", "M"]}),
+    (r"\.w_if$", {2: [None, "M"], 3: [None, None, "M"]}),
+    (r"\.r_in$", {3: ["M", None, None], 4: [None, "M", None, None]}),
+    (r"\.ffn_gate$|\.ffn_up$", {2: ["D", "M"], 3: [None, "D", "M"]}),
+    (r"\.ffn_down$", {2: ["M", "D"], 3: [None, "M", "D"]}),
+    # norms & everything defaulting to replication handled by fallback
+]
+
+
+def _spec_for_path(path_str: str, shape: tuple[int, ...], strategy: str):
+    if strategy == "sp":
+        # sequence-parallel small-model mode: trunk weights replicated (the
+        # model axis carries the sequence via shard_heads="context"); only
+        # the big vocab tables stay model-sharded.
+        if re.search(r"\['embed'\]$|\['unembed'\]$", path_str):
+            pass  # fall through to the embed rules below
+        else:
+            return [None] * len(shape)
+    for pat, by_ndim in _RULES:
+        if re.search(pat, path_str):
+            tmpl = by_ndim.get(len(shape))
+            if tmpl is None:
+                # align template to the LAST dims (stacked leading axes -> None)
+                base = by_ndim[max(by_ndim)]
+                tmpl = [None] * (len(shape) - len(base)) + list(base[-len(shape):])
+            out = []
+            for ax in tmpl:
+                if ax == "M":
+                    out.append("model")
+                elif ax == "D":
+                    out.append("data" if strategy == "fsdp" else None)
+                else:
+                    out.append(None)
+            return out
+    return [None] * len(shape)  # replicate (norms, scalars, small leftovers)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh, strategy: str | None = None):
+    """Pytree of PartitionSpec matching ``params`` (works on ShapeDtypeStructs)."""
+    strategy = strategy or strategy_for(cfg)
+    m_size = mesh.shape["model"]
+    # When the head counts don't divide the model axis, sharding the
+    # flattened (heads*hd) projection dim splits individual heads across
+    # devices and GSPMD partial-sums the attention scores (measured: a 34 TB
+    # all-reduce per arctic prefill step).  Replicate those projections
+    # instead — their matmuls are tiny next to the FFN/expert paths.
+    kv_ok = cfg.num_kv_heads % m_size == 0  # conservative: whole heads only
+    q_ok = cfg.effective_heads % m_size == 0
+    if cfg.shard_heads == "split":  # legacy hd-splitting (see config note)
+        kv_ok = q_ok = True
+
+    attn_paths = r"\['(attn|self_attn|cross_attn|shared_attn)'\]"
+
+    def one(path, leaf):
+        path_str = jax.tree_util.keystr(path)
+        spec = _spec_for_path(path_str, leaf.shape, strategy)
+        # scope the head-divisibility overrides to REAL attention blocks —
+        # xlstm's mLSTM also has wq/wk/wv leaves, but those are full
+        # (inner, inner) projections with no per-head sharding hazard
+        is_attn = re.search(attn_paths, path_str) is not None
+        if is_attn and not kv_ok and re.search(r"\.wk$|\.wv$|\.bk$|\.bv$", path_str):
+            spec = [a if a != "model" else None for a in spec]
+        if is_attn and not q_ok and re.search(r"\.wq$|\.bq$", path_str):
+            spec = [a if a != "model" else None for a in spec]
+        if is_attn and not q_ok and re.search(r"\.wo$", path_str):
+            # wo contracts over the head dim; sharding it would partial-sum
+            # with fractional heads — replicate the head dim instead
+            spec = [a if a != "model" else None for a in spec]
+        return _fit(mesh, leaf.shape, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ------------------------------------------------------------------- inputs
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    dp = _dp_axes(mesh)
+    if global_batch % _axis_size(mesh, dp) == 0:
+        return P(dp)
+    return P(None)
+
+
+def input_specs_sharding(
+    specs: dict[str, jax.ShapeDtypeStruct], cfg: ModelConfig, mesh: Mesh
+) -> dict[str, P]:
+    """PartitionSpec per model input: batch over (pod, data), rest replicated."""
+    out = {}
+    for name, s in specs.items():
+        bspec = batch_spec(mesh, s.shape[0])
+        out[name] = _fit(mesh, s.shape, [bspec[0] if bspec != P(None) else None]
+                         + [None] * (len(s.shape) - 1))
+    return out
+
+
+def decode_state_specs(state: Any, cfg: ModelConfig, mesh: Mesh):
+    """Sharding for DecodeState: batch over (pod,data) when divisible, else
+    the cache sequence dim over (pod,data); kv-heads over model when they
+    divide, else head_dim, else replicated."""
+    dp = _dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+    m_size = mesh.shape["model"]
+
+    def one(path, leaf):
+        shape = leaf.shape
+        path_str = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:
+            return P()
+        if ".pos" in path_str or leaf.ndim == 1:
+            return P(None)
+        if re.search(r"\.(k_cache|v_cache|shared_k|shared_v|cross_k|cross_v)", path_str):
+            # (L_or_A, B, S, KV, hd).  Axis priority: batch -> kv heads ->
+            # SEQUENCE -> head_dim.  Sequence-sharding beats hd-sharding for
+            # decode: a hd-sharded cache makes the score contraction partial
+            # and GSPMD all-gathers the whole cache every token (measured:
+            # 86 GB/token on qwen2-72b); seq-sharding only psums the tiny
+            # per-row softmax stats and (B,KV,G,1,hd) outputs.
+            l_, b, s, kv, hd = shape
+            spec = [None, None, None, None, None]
+            if b % dp_size == 0:
+                spec[1] = dp
+            elif s % dp_size == 0:
+                spec[2] = dp
+            if kv % m_size == 0:
+                spec[3] = "model"
+            elif spec[2] is None and s % m_size == 0:
+                spec[2] = "model"
+            elif spec[2] == dp and s % (dp_size * m_size) == 0:
+                spec[2] = dp + ("model",)
+            elif hd % m_size == 0:
+                spec[4] = "model"
+            return P(*spec)
+        # SSM / xLSTM states: (L, B, ...) — batch over dp, heads over model
+        spec = [None] * leaf.ndim
+        if shape[1] % dp_size == 0:
+            spec[1] = dp
+        if leaf.ndim >= 3 and shape[2] % m_size == 0:
+            spec[2] = "model"
+        return _fit(mesh, shape, spec)
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+# -------------------------------------------------------- in-graph anchors
+def constrain_batch(x):
+    """Anchor the leading (batch) dim to the (pod, data) axes inside jit.
+
+    GSPMD can lose the batch sharding through the vocab-sharded embedding
+    gather (measured: arctic/qwen2-72b prefill ran fully data-replicated —
+    16x redundant memory and compute).  No-op outside a mesh context or when
+    the batch doesn't divide.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return x
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if size <= 1 or x.shape[0] % size != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes, *([None] * (x.ndim - 1)))
+    )

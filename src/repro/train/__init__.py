@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train/serve steps, checkpointing."""
+from repro.train.optimizer import AdamState, adam_init, adam_update
+
+__all__ = ["AdamState", "adam_init", "adam_update"]

@@ -1,0 +1,47 @@
+"""Checkpointing: msgpack-serialized pytrees (no orbax in this container).
+
+Arrays are stored as (dtype, shape, raw bytes) keyed by their pytree keystr;
+restore requires a template pytree with the same structure (the usual
+init-then-restore pattern).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {}
+    for keypath, leaf in flat:
+        arr = np.asarray(leaf)
+        payload[jax.tree_util.keystr(keypath)] = (
+            str(arr.dtype), list(arr.shape), arr.tobytes()
+        )
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for keypath, leaf in flat:
+        key = jax.tree_util.keystr(keypath)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        dtype, shape, raw = payload[key]
+        arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
+        if tuple(shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {shape} vs {np.shape(leaf)}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

@@ -1,0 +1,66 @@
+"""Adam optimizer (Kingma & Ba 2014) for arbitrary pytrees, from scratch.
+
+No optax in this container; this is the single optimizer implementation used
+by both the KGE federated runtime and the LM training steps.  Bias-corrected
+Adam with optional global-norm clipping and decoupled weight decay (AdamW
+when ``weight_decay > 0``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    mu: Any  # first-moment pytree
+    nu: Any  # second-moment pytree
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adam_update(
+    grads: Any,
+    state: AdamState,
+    params: Any,
+    lr: float | jnp.ndarray,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: float | None = None,
+) -> tuple[Any, AdamState]:
+    """One Adam step.  Returns (new_params, new_state)."""
+    if clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = lr * mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay > 0.0:
+            delta = delta + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,151 @@
+"""Jittable train / prefill / decode steps + ShapeDtypeStruct input specs.
+
+These are the functions the launcher jits/lowers: one compile per
+(arch x input-shape x mesh).  ``input_specs`` returns ShapeDtypeStruct
+stand-ins (no allocation) for the dry-run; the same shapes drive the smoke
+tests with real arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    decode_lm,
+    forward_lm,
+    init_decode_state,
+    lm_loss,
+)
+from repro.train.optimizer import AdamState, adam_init, adam_update
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# archs that may run the 500k decode shape (sub-quadratic story, DESIGN.md §5)
+LONG_CONTEXT_ARCHS = ("zamba2-1.2b", "xlstm-350m", "gemma3-1b")
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-skipped) for an (arch, shape) pair."""
+    if shape.name == "long_500k" and cfg.name not in LONG_CONTEXT_ARCHS:
+        return False, (
+            "pure full-attention arch: 500k decode requires sub-quadratic "
+            "attention (run only for ssm/hybrid/sliding-window archs)"
+        )
+    return True, ""
+
+
+# ----------------------------------------------------------------- batches
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, dtype=jnp.int32
+) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this step."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((b, s), dtype),
+            "labels": sds((b, s), dtype),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), dtype)}
+    else:  # decode
+        specs = {"token": sds((b, 1), dtype)}
+    if cfg.arch_type == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = sds((b, cfg.num_patches, cfg.d_model), cfg.dtype)
+    if cfg.arch_type == "audio":
+        specs["encoder_embeds"] = sds((b, cfg.encoder_seq_len, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def make_inputs(cfg: ModelConfig, shape: InputShape, seed: int = 0) -> dict[str, Any]:
+    """Real (host) arrays matching input_specs — used by smoke tests/examples."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab_size, spec.dtype)
+        else:
+            out[name] = (jax.random.normal(sub, spec.shape) * 0.02).astype(spec.dtype)
+    return out
+
+
+# ------------------------------------------------------------------- steps
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4):
+    """(params, opt_state, batch) -> (params, opt_state, loss)."""
+
+    def loss_fn(params, batch):
+        hidden, aux = forward_lm(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"),
+        )
+        return lm_loss(params, cfg, hidden, batch["labels"], aux)
+
+    def train_step(params, opt_state: AdamState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = adam_update(grads, opt_state, params, lr, clip_norm=1.0)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch) -> last-position logits (B, V)."""
+
+    def prefill_step(params, batch):
+        hidden, _ = forward_lm(
+            params, cfg, batch["tokens"],
+            vision_embeds=batch.get("vision_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"),
+        )
+        unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return jnp.einsum("bd,dv->bv", hidden[:, -1], unembed)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, long_context: bool = False):
+    """(params, token, state) -> (logits (B, V), new state)."""
+
+    def serve_step(params, token, state):
+        return decode_lm(params, cfg, token, state, long_context=long_context)
+
+    return serve_step
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig):
+    from repro.models.transformer import init_lm
+
+    params = init_lm(key, cfg)
+    return params, adam_init(params)
+
+
+def init_serve_state(
+    params, cfg: ModelConfig, shape: InputShape, encoder_embeds=None
+):
+    state = init_decode_state(
+        params, cfg, shape.global_batch, shape.seq_len, encoder_embeds
+    )
+    # decode against a FULL cache: next token lands at position seq_len - 1
+    return state._replace(
+        pos=jnp.full((shape.global_batch,), shape.seq_len - 1, jnp.int32)
+    )

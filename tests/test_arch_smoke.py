@@ -1,0 +1,128 @@
+"""Per-assigned-architecture smoke tests (brief deliverable f).
+
+For each of the 10 assigned archs: instantiate the REDUCED same-family
+variant (<=2 layers, d_model <= 512, <= 4 experts), run one forward/train
+step and one decode step on CPU, and assert output shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.train.steps import (
+    InputShape,
+    init_serve_state,
+    init_train_state,
+    make_inputs,
+    make_serve_step,
+    make_train_step,
+)
+
+TRAIN_SHAPE = InputShape("smoke_train", seq_len=32, global_batch=2, kind="train")
+DECODE_SHAPE = InputShape("smoke_decode", seq_len=32, global_batch=2, kind="decode")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_limits(arch):
+    """The reduced variant respects the brief's smoke limits."""
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    # family must match the full config
+    assert cfg.arch_type == get_config(arch).arch_type
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    batch = make_inputs(cfg, TRAIN_SHAPE)
+    step = jax.jit(make_train_step(cfg, lr=1e-3))
+    new_params, new_opt, loss = step(params, opt, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    # params actually moved and stayed finite
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                                    - b.astype(jnp.float32)).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0.0
+    finite = jax.tree.map(
+        lambda a: bool(jnp.isfinite(a.astype(jnp.float32)).all()), new_params
+    )
+    assert all(jax.tree.leaves(finite)), f"{arch}: non-finite params after step"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_serve_step(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    enc = None
+    if cfg.arch_type == "audio":
+        enc = jnp.zeros(
+            (DECODE_SHAPE.global_batch, cfg.encoder_seq_len, cfg.d_model), cfg.dtype
+        )
+    state = init_serve_state(params, cfg, DECODE_SHAPE, encoder_embeds=enc)
+    step = jax.jit(make_serve_step(cfg))
+    token = jnp.zeros((DECODE_SHAPE.global_batch, 1), jnp.int32)
+    logits, new_state = step(params, token, state)
+    assert logits.shape == (DECODE_SHAPE.global_batch, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert int(new_state.pos[0]) == int(state.pos[0]) + 1
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_dims_match_assignment(arch):
+    """The FULL config must carry the exact assigned dimensions."""
+    assigned = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, None, 151936),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    }
+    L, d, h, kv, ff, v = assigned[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_expert_counts():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.num_experts, q.num_experts_per_tok, q.moe_d_ff) == (60, 4, 1408)
+    a = get_config("arctic-480b")
+    assert (a.num_experts, a.num_experts_per_tok) == (128, 2)
+    assert a.dense_residual
+
+
+def test_zamba_ssm_state():
+    z = get_config("zamba2-1.2b")
+    assert z.ssm_state == 64 and z.arch_type == "hybrid"
+
+
+def test_param_counts_in_range():
+    """Analytic param counts land near the model names' scales."""
+    import math
+
+    expect = {
+        "qwen2-72b": (72e9, 0.20),
+        "arctic-480b": (480e9, 0.25),
+        "gemma3-1b": (1e9, 0.8),  # 1b-class (vocab-heavy)
+        "qwen3-0.6b": (0.6e9, 0.6),
+        "whisper-base": (74e6, 0.8),
+        "xlstm-350m": (350e6, 0.8),
+    }
+    for arch, (target, tol) in expect.items():
+        n = get_config(arch).param_count()
+        assert abs(math.log(n / target)) < math.log(1 + tol) + 0.35, (arch, n, target)

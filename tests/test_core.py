@@ -1,0 +1,177 @@
+"""Unit + property tests for the FedS core (sparsify / aggregate / sync)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregate import Upload, fede_aggregate, personalized_aggregate
+from repro.core.sparsify import change_scores, select_top_k, sparsity_k, upstream_sparsify
+from repro.core.sync import (
+    comm_ratio_worst_case,
+    cycle_params_feds,
+    cycle_params_full,
+    is_sync_round,
+)
+
+
+# ----------------------------------------------------------------- sparsify
+def test_change_scores_zero_for_unchanged():
+    e = jax.random.normal(jax.random.PRNGKey(0), (20, 8))
+    s = np.asarray(change_scores(e, e))
+    np.testing.assert_allclose(s, 0.0, atol=1e-5)
+
+
+def test_change_scores_order():
+    """Rows rotated further from history must score higher."""
+    base = jnp.ones((3, 4))
+    cur = jnp.stack([
+        jnp.array([1.0, 1, 1, 1]),        # unchanged
+        jnp.array([1.0, 1, 1, -1]),       # some change
+        jnp.array([-1.0, -1, -1, -1]),    # opposite
+    ])
+    s = np.asarray(change_scores(cur, base))
+    assert s[0] < s[1] < s[2]
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 100), p=st.floats(0.05, 1.0))
+def test_sparsity_k_bounds(n, p):
+    k = sparsity_k(n, p)
+    assert 1 <= k <= n
+
+
+def test_select_top_k_semantics():
+    scores = jnp.array([0.1, 0.9, 0.3, 0.7, 0.0])
+    idx, sign = select_top_k(scores, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    np.testing.assert_array_equal(np.asarray(sign), [0, 1, 0, 1, 0])
+    assert int(sign.sum()) == 2
+
+
+def test_upstream_sparsify_history_refresh():
+    key = jax.random.PRNGKey(0)
+    cur = jax.random.normal(key, (10, 6))
+    hist = jax.random.normal(jax.random.PRNGKey(1), (10, 6))
+    idx, values, sign, new_hist = upstream_sparsify(cur, hist, k=4)
+    idx_np = np.asarray(idx)
+    # selected rows: history refreshed to current; values are the current rows
+    np.testing.assert_allclose(np.asarray(new_hist)[idx_np], np.asarray(cur)[idx_np])
+    np.testing.assert_allclose(np.asarray(values), np.asarray(cur)[idx_np])
+    # unselected rows: history untouched
+    unsel = np.setdiff1d(np.arange(10), idx_np)
+    np.testing.assert_allclose(np.asarray(new_hist)[unsel], np.asarray(hist)[unsel])
+
+
+# ---------------------------------------------------------------- aggregate
+def _mk_upload(cid, ids, dim=4, val=None):
+    ids = np.asarray(ids, dtype=np.int64)
+    vals = np.full((len(ids), dim), float(cid + 1), np.float32) if val is None else val
+    return Upload(client_id=cid, entity_ids=ids, values=vals)
+
+
+def test_personalized_aggregate_excludes_own_upload():
+    # entity 0 uploaded by clients 0 and 1; client 0's download of entity 0
+    # must only contain client 1's value.
+    uploads = [_mk_upload(0, [0]), _mk_upload(1, [0]), _mk_upload(2, [5])]
+    ents = [np.array([0, 5]), np.array([0, 5]), np.array([0, 5])]
+    rng = np.random.default_rng(0)
+    downs = personalized_aggregate(uploads, ents, sparsity_p=1.0, rng=rng)
+    d0 = downs[0]
+    row = list(d0.entity_ids).index(0)
+    np.testing.assert_allclose(d0.agg_values[row], 2.0)  # only client 1 (val 2)
+    assert d0.priority[row] == 1
+
+
+def test_personalized_aggregate_priority_ranking():
+    # entity 7 uploaded by 3 peers, entity 8 by 1 peer; K=1 must pick entity 7.
+    uploads = [
+        _mk_upload(0, []),
+        _mk_upload(1, [7, 8]),
+        _mk_upload(2, [7]),
+        _mk_upload(3, [7]),
+    ]
+    ents = [np.array([7, 8]), np.array([7]), np.array([7]), np.array([7])]
+    rng = np.random.default_rng(0)
+    downs = personalized_aggregate(uploads, ents, sparsity_p=0.5, rng=rng)
+    assert list(downs[0].entity_ids) == [7]
+    assert downs[0].priority[0] == 3
+    np.testing.assert_allclose(downs[0].agg_values[0], 2 + 3 + 4)
+
+
+def test_personalized_aggregate_fewer_than_k():
+    """When fewer aggregated entities exist than K, all are sent."""
+    uploads = [_mk_upload(0, [1]), _mk_upload(1, [1])]
+    ents = [np.array([1, 2, 3, 4]), np.array([1])]
+    downs = personalized_aggregate(uploads, ents, 1.0, np.random.default_rng(0))
+    assert list(downs[0].entity_ids) == [1]  # entities 2,3,4 had no uploads
+
+
+def test_fede_aggregate_mean():
+    uploads = [
+        _mk_upload(0, [0, 1], val=np.array([[1, 1], [2, 2]], np.float32)),
+        _mk_upload(1, [1], val=np.array([[4, 4]], np.float32)),
+    ]
+    mean, count = fede_aggregate(uploads, num_global_entities=3)
+    np.testing.assert_allclose(mean[0], 1.0)
+    np.testing.assert_allclose(mean[1], 3.0)  # (2+4)/2
+    np.testing.assert_allclose(mean[2], 0.0)
+    assert list(count) == [1, 2, 0]
+
+
+# --------------------------------------------------------------------- sync
+def test_sync_cycle_structure():
+    s = 4
+    rounds = [is_sync_round(t, s) for t in range(10)]
+    # cycle: 4 sparse rounds then 1 sync round
+    assert rounds == [False] * 4 + [True] + [False] * 4 + [True]
+
+
+def test_sync_interval_zero_is_always_sync():
+    assert all(is_sync_round(t, 0) for t in range(5))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.floats(0.1, 0.9),
+    s=st.integers(1, 10),
+    dim=st.integers(16, 512),
+    n=st.integers(50, 2000),
+)
+def test_eq5_matches_cycle_accounting(p, s, dim, n):
+    """Eq. 5 must equal the explicit per-cycle parameter ledger."""
+    ratio = comm_ratio_worst_case(p, s, dim)
+    explicit = cycle_params_feds(n, dim, p, s) / cycle_params_full(n, dim, s)
+    np.testing.assert_allclose(ratio, explicit, rtol=1e-9)
+
+
+def test_eq5_paper_values():
+    """Appendix VI-C: p=0.7, s=4, D=256 -> 0.7642; p=0.4 -> FedEPL dim 135."""
+    r = comm_ratio_worst_case(0.7, 4, 256)
+    np.testing.assert_allclose(r, 0.7642, atol=5e-4)
+    # paper: "the embedding dimension is calculated by rounding up"
+    import math
+
+    r2 = comm_ratio_worst_case(0.4, 4, 256)
+    assert math.ceil(256 * r2) == 135
+
+
+# --------------------------------------------------------------- FedS+Q8
+def test_quantize_rows_roundtrip():
+    from repro.core.sparsify import dequantize_rows, quantize_rows
+
+    v = jax.random.normal(jax.random.PRNGKey(0), (12, 32)) * 3.0
+    q, sc = quantize_rows(v)
+    assert q.dtype == jnp.int8
+    back = dequantize_rows(q, sc)
+    # symmetric int8: error bounded by half a quantization step per row
+    step = np.asarray(sc)[:, None]
+    assert (np.abs(np.asarray(back) - np.asarray(v)) <= step * 0.5 + 1e-7).all()
+
+
+def test_quantize_rows_zero_row():
+    from repro.core.sparsify import dequantize_rows, quantize_rows
+
+    v = jnp.zeros((3, 8))
+    q, sc = quantize_rows(v)
+    np.testing.assert_array_equal(np.asarray(dequantize_rows(q, sc)), 0.0)

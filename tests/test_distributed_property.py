@@ -1,0 +1,86 @@
+"""Property test: SPMD FedS == host protocol over randomized instances.
+
+Runs several randomized tie-break-free instances in ONE subprocess (4 fake
+devices) and asserts elementwise agreement of the updated tables.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.distributed import make_sharded_feds_round
+from repro.core.aggregate import Upload, personalized_aggregate
+from repro.core.sparsify import change_scores, select_top_k
+
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+results = []
+for seed in range(5):
+    rng = np.random.default_rng(seed)
+    C, D = 4, 8 + 4 * seed
+    N = 24 + 8 * seed
+    K = 4 + seed
+    emb = jnp.asarray(rng.normal(size=(C, N, D)), jnp.float32)
+    # tie-break-free: each client's top-K rows are a random, possibly
+    # overlapping K-subset; priorities are then deterministic per entity.
+    hist = np.asarray(emb).copy()
+    chosen = []
+    for c in range(C):
+        idx = rng.choice(N, size=K, replace=False)
+        chosen.append(idx)
+        hist[c, idx] += 1.0 + rng.random((K, D))
+    hist = jnp.asarray(hist)
+
+    rnd = make_sharded_feds_round(mesh, k=K, sync_interval=1000)
+    spmd_emb, _ = rnd(emb, hist, jnp.zeros((1,), jnp.int32))
+
+    uploads = []
+    for c in range(C):
+        idx, _ = select_top_k(change_scores(emb[c], hist[c]), K)
+        uploads.append(Upload(client_id=c, entity_ids=np.asarray(idx, np.int64),
+                              values=np.asarray(emb[c])[np.asarray(idx)]))
+    downs = personalized_aggregate(uploads, [np.arange(N)] * C, K / N,
+                                   np.random.default_rng(0))
+    host = np.asarray(emb).copy()
+    # count candidates per client: if > K the tie-break could differ; the
+    # construction keeps candidates <= K whenever priorities are unique.
+    ok_instance = True
+    for c, d in enumerate(downs):
+        if len(d.entity_ids) > K:
+            ok_instance = False
+        for i, e in enumerate(d.entity_ids.tolist()):
+            host[c, e] = (d.agg_values[i] + host[c, e]) / (1 + d.priority[i])
+    # only compare when the host selection was unambiguous (<= K candidates)
+    cand_counts = []
+    for c in range(C):
+        others = set()
+        for cc in range(C):
+            if cc != c:
+                others |= set(chosen[cc].tolist())
+        cand_counts.append(len(others))
+    if max(cand_counts) <= K:
+        results.append(float(np.abs(np.asarray(spmd_emb) - host).max()))
+print(json.dumps(results))
+"""
+
+
+def test_spmd_randomized_agreement():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _WORKER], capture_output=True,
+                         text=True, env=env, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert res.returncode == 0, res.stderr[-2000:]
+    errs = json.loads(res.stdout.strip().splitlines()[-1])
+    # at least some instances are unambiguous; all of those must agree
+    for e in errs:
+        assert e < 1e-4, errs

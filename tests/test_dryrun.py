@@ -1,0 +1,101 @@
+"""Dry-run machinery tests.
+
+The full 512-device sweep runs via ``python -m repro.launch.dryrun --all``
+(results in dryrun_results.jsonl / EXPERIMENTS.md); here we verify the
+machinery itself in a SUBPROCESS (so this pytest process keeps 1 device):
+one small arch x shape on the production mesh, plus unit tests of the
+sharding rule tables that don't need devices.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.train.steps import INPUT_SHAPES, input_specs, shape_supported
+
+ROOT = os.path.dirname(os.path.dirname(__file__))
+
+_WORKER = r"""
+import sys, json
+sys.path.insert(0, "src")
+from repro.launch.dryrun import dryrun_one
+rec = dryrun_one("qwen3-0.6b", "decode_32k", multi_pod=False)
+rec2 = dryrun_one("whisper-base", "train_4k", multi_pod=True)
+print(json.dumps([rec, rec2]))
+"""
+
+
+@pytest.fixture(scope="module")
+def dryrun_records():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _WORKER], capture_output=True, text=True,
+        cwd=ROOT, env=env, timeout=1200,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_dryrun_compiles_and_reports(dryrun_records):
+    rec, rec2 = dryrun_records
+    assert rec["status"] == "OK"
+    assert rec["num_devices"] == 256
+    assert rec["flops_per_device"] > 0
+    assert rec["bytes_per_device"] > 0
+    assert rec["collective_bytes_per_device"]["_total"] >= 0
+    assert rec2["status"] == "OK"
+    assert rec2["num_devices"] == 512
+    assert rec2["mesh"] == "2x16x16"
+
+
+def test_skip_long_context_for_full_attention():
+    cfg = get_config("qwen2-72b")
+    ok, reason = shape_supported(cfg, INPUT_SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in reason
+    ok, _ = shape_supported(get_config("zamba2-1.2b"), INPUT_SHAPES["long_500k"])
+    assert ok
+
+
+def test_input_specs_cover_modalities():
+    vlm = input_specs(get_config("qwen2-vl-7b"), INPUT_SHAPES["train_4k"])
+    assert "vision_embeds" in vlm and vlm["vision_embeds"].shape[1] == 256
+    audio = input_specs(get_config("whisper-base"), INPUT_SHAPES["train_4k"])
+    assert "encoder_embeds" in audio and audio["encoder_embeds"].shape[1] == 1500
+    dense = input_specs(get_config("qwen3-0.6b"), INPUT_SHAPES["decode_32k"])
+    assert dense["token"].shape == (128, 1)
+
+
+def test_param_spec_rules_divisibility():
+    """Sharding specs never assign an axis that doesn't divide the dim."""
+    import numpy as np
+    from repro.launch.mesh import make_debug_mesh  # needs >=4 devices? no — spec-only
+    from repro.models.transformer import init_lm
+    from repro.sharding.specs import param_specs
+
+    # Build an abstract mesh-like object is overkill: use a real 1-device
+    # mesh shape table via jax.sharding.Mesh with fake devices is not
+    # possible here; instead check against the production mesh axis sizes.
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        devices = np.empty((16, 16), dtype=object)
+
+    for arch in ("qwen2-72b", "arctic-480b", "gemma3-1b", "xlstm-350m"):
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(lambda k, c=cfg: init_lm(k, c), jax.random.PRNGKey(0))
+        specs = param_specs(shapes, cfg, FakeMesh(), None)
+
+        def check(path, leaf, spec):
+            for dim, axis in zip(leaf.shape, tuple(spec)):
+                if axis is None:
+                    continue
+                size = 16 if isinstance(axis, str) else 256
+                assert dim % 16 == 0, (arch, path, leaf.shape, spec)
+
+        jax.tree_util.tree_map_with_path(
+            lambda p, l, s: check(p, l, s), shapes, specs
+        )

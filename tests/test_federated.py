@@ -1,0 +1,103 @@
+"""Integration tests for the federated runtime (FedS vs FedEP protocols)."""
+import numpy as np
+import pytest
+
+from repro.core.sync import comm_ratio_worst_case
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.comm import CommLedger
+from repro.federated.metrics import first_round_reaching, weighted_average
+from repro.federated.simulation import FederatedConfig, run_federated
+
+
+@pytest.fixture(scope="module")
+def small_fed():
+    kg = generate_kg(num_entities=250, num_relations=12, num_triples=2500, seed=0)
+    clients = partition_by_relation(kg, 3, seed=0)
+    return kg, clients
+
+
+def _cfg(**kw):
+    base = dict(
+        method="transe", dim=32, rounds=6, local_epochs=1, batch_size=128,
+        num_negatives=16, lr=5e-3, sparsity_p=0.4, sync_interval=2,
+        eval_every=2, max_eval_triples=60, seed=0,
+    )
+    base.update(kw)
+    return FederatedConfig(**base)
+
+
+def test_feds_runs_and_logs(small_fed):
+    kg, clients = small_fed
+    res = run_federated(clients, kg.num_entities, _cfg(protocol="feds"))
+    assert res.rounds_run == 6
+    assert res.ledger.rounds == 6
+    assert len(res.eval_history) == 3
+    assert res.test_mrr_cg > 0
+
+
+def test_feds_transmits_less_than_fedep(small_fed):
+    """Per-round parameter counts: FedS strictly below FedEP, and within the
+    Eq. 5 worst-case bound."""
+    kg, clients = small_fed
+    feds = run_federated(clients, kg.num_entities, _cfg(protocol="feds"))
+    fedep = run_federated(clients, kg.num_entities, _cfg(protocol="fedep"))
+    assert feds.ledger.params_transmitted < fedep.ledger.params_transmitted
+    ratio = feds.ledger.params_transmitted / fedep.ledger.params_transmitted
+    bound = comm_ratio_worst_case(0.4, 2, 32)
+    assert ratio <= bound * 1.02  # worst case + slack for round-boundary effects
+
+
+def test_single_protocol_no_comm(small_fed):
+    kg, clients = small_fed
+    res = run_federated(clients, kg.num_entities, _cfg(protocol="single", rounds=4))
+    assert res.ledger.params_transmitted == 0
+
+
+def test_feds_nosync_never_syncs(small_fed):
+    """Ablation variant transmits even less (no full-exchange rounds)."""
+    kg, clients = small_fed
+    nosync = run_federated(clients, kg.num_entities, _cfg(protocol="feds_nosync"))
+    feds = run_federated(clients, kg.num_entities, _cfg(protocol="feds"))
+    assert nosync.ledger.params_transmitted < feds.ledger.params_transmitted
+
+
+def test_learning_improves_mrr(small_fed):
+    """FedS training must substantially beat the round-5 validation MRR."""
+    kg, clients = small_fed
+    res = run_federated(
+        clients, kg.num_entities,
+        _cfg(protocol="feds", rounds=30, local_epochs=3, num_negatives=32,
+             lr=1e-2, eval_every=5, patience=5, max_eval_triples=60),
+    )
+    first = res.eval_history[0][1]
+    assert res.val_mrr_cg > 2 * first
+    assert res.val_mrr_cg > 0.05
+
+
+# ------------------------------------------------------------------ ledger
+def test_ledger_accounting():
+    led = CommLedger()
+    led.log_upload_sparse(k=10, dim=8, n_entities=50)   # 80 + 50
+    led.log_download_sparse(k=10, dim=8, n_entities=50)  # 80 + 10 + 50
+    led.end_round()
+    assert led.params_transmitted == 270
+    led.log_full_exchange(n_entities=50, dim=8)  # 400
+    led.end_round()
+    assert led.params_transmitted == 670
+    assert led.params_at_round(1) == 270
+    assert led.params_at_round(2) == 670
+
+
+def test_weighted_average():
+    out = weighted_average([
+        {"mrr": 0.5, "hits10": 0.8, "count": 10},
+        {"mrr": 0.1, "hits10": 0.2, "count": 30},
+    ])
+    np.testing.assert_allclose(out["mrr"], 0.2)
+    np.testing.assert_allclose(out["hits10"], 0.35)
+
+
+def test_first_round_reaching():
+    hist = [(2, 0.1), (4, 0.3), (6, 0.5)]
+    assert first_round_reaching(hist, 0.25) == 4
+    assert first_round_reaching(hist, 0.9) is None

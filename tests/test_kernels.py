@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle.
+
+Sweeps shapes (including non-aligned N and D) and dtypes, per the brief.
+Also asserts the ops-layer dispatch (ref fallback) is bit-compatible with the
+kernels so the federated simulation and the TPU path compute the same thing.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.change_score import change_score_pallas
+from repro.kernels.kge_score import rotate_neg_score_pallas, transe_neg_score_pallas
+from repro.kernels.sparse_apply import sparse_apply_pallas
+
+
+SHAPES_ND = [(8, 16), (100, 64), (257, 130), (512, 256), (33, 100)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_ND)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_change_score_kernel(shape, dtype):
+    n, d = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * d))
+    cur = jax.random.normal(k1, (n, d)).astype(dtype)
+    hist = (jax.random.normal(k2, (n, d)) * 0.5 + cur.astype(jnp.float32)).astype(dtype)
+    got = change_score_pallas(cur, hist, block_rows=64, interpret=True)
+    want = ref.change_score_ref(cur.astype(jnp.float32), hist.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,n,d", [(4, 8, 32), (7, 33, 64), (16, 128, 100)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_transe_kernel(b, n, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * n + d), 3)
+    h = jax.random.normal(ks[0], (b, d)).astype(dtype)
+    r = jax.random.normal(ks[1], (b, d)).astype(dtype)
+    t = jax.random.normal(ks[2], (b, n, d)).astype(dtype)
+    got = transe_neg_score_pallas(h, r, t, gamma=8.0, block_b=4, block_n=32, interpret=True)
+    want = ref.transe_neg_score_ref(
+        h.astype(jnp.float32), r.astype(jnp.float32), t.astype(jnp.float32), 8.0
+    )
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,n,d", [(4, 8, 32), (6, 20, 64)])
+def test_rotate_kernel(b, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    h = jax.random.normal(ks[0], (b, d))
+    phase = jax.random.uniform(ks[1], (b, d // 2), minval=-3.14, maxval=3.14)
+    t = jax.random.normal(ks[2], (b, n, d))
+    got = rotate_neg_score_pallas(h, phase, t, gamma=8.0, block_b=2, block_n=8, interpret=True)
+    want = ref.rotate_neg_score_ref(h, phase, t, 8.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(16, 8), (100, 64), (257, 100)])
+def test_sparse_apply_kernel(shape):
+    n, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    emb = jax.random.normal(ks[0], (n, d))
+    agg = jax.random.normal(ks[1], (n, d))
+    pri = jax.random.randint(ks[2], (n,), 0, 5).astype(jnp.float32)
+    sign = (jax.random.uniform(ks[3], (n,)) < 0.4).astype(jnp.int8)
+    got = sparse_apply_pallas(emb, agg, pri, sign, block_rows=32, interpret=True)
+    want = ref.sparse_apply_ref(emb, agg, pri, sign)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 200),
+    d=st.integers(4, 150),
+    frac=st.floats(0.05, 0.95),
+)
+def test_sparse_apply_property(n, d, frac):
+    """Property: unselected rows pass through untouched; selected rows obey Eq. 4."""
+    ks = jax.random.split(jax.random.PRNGKey(n * 1000 + d), 4)
+    emb = jax.random.normal(ks[0], (n, d))
+    agg = jax.random.normal(ks[1], (n, d))
+    pri = jax.random.randint(ks[2], (n,), 1, 7).astype(jnp.float32)
+    sign = (jax.random.uniform(ks[3], (n,)) < frac).astype(jnp.int8)
+    out = np.asarray(ref.sparse_apply_ref(emb, agg, pri, sign))
+    emb_n, agg_n, pri_n, sign_n = map(np.asarray, (emb, agg, pri, sign))
+    unsel = sign_n == 0
+    np.testing.assert_array_equal(out[unsel], emb_n[unsel])
+    sel = ~unsel
+    expect = (agg_n[sel] + emb_n[sel]) / (1.0 + pri_n[sel])[:, None]
+    np.testing.assert_allclose(out[sel], expect, rtol=1e-6)
+
+
+def test_ops_dispatch_ref_equals_interpret(monkeypatch):
+    """ops.change_score must give the same numbers in ref and interpret modes."""
+    from repro.kernels import ops
+
+    cur = jax.random.normal(jax.random.PRNGKey(0), (60, 48))
+    hist = jax.random.normal(jax.random.PRNGKey(1), (60, 48))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    a = np.asarray(ops.change_score(cur, hist))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    b = np.asarray(ops.change_score(cur, hist))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,l,h,n,p", [(2, 8, 3, 4, 8), (1, 16, 2, 8, 16),
+                                        (2, 12, 4, 16, 32)])
+def test_ssd_chunk_kernel(b, l, h, n, p):
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(b * l + h), 6)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.4
+    bb = jax.random.normal(ks[1], (b, l, n)) * 0.4
+    cc = jax.random.normal(ks[2], (b, l, n)) * 0.4
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, l, h)))
+    ld = -jnp.abs(jax.random.normal(ks[4], (b, l, h))) * 0.3
+    hp = jax.random.normal(ks[5], (b, h, n, p)) * 0.2
+    y0, h0 = ref.ssd_chunk_ref(x, bb, cc, dt, ld, hp)
+    y1, h1 = ssd_chunk_pallas(x, bb, cc, dt, ld, hp, interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_chunk_sequential_equivalence():
+    """Two chained chunks == one double-length chunk (state passing)."""
+    b, l, h, n, p = 1, 6, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, 2 * l, h, p)) * 0.4
+    bb = jax.random.normal(ks[1], (b, 2 * l, n)) * 0.4
+    cc = jax.random.normal(ks[2], (b, 2 * l, n)) * 0.4
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, 2 * l, h)))
+    ld = -jnp.abs(jax.random.normal(ks[4], (b, 2 * l, h))) * 0.3
+    h0 = jnp.zeros((b, h, n, p))
+    y_full, h_full = ref.ssd_chunk_ref(x, bb, cc, dt, ld, h0)
+    y1, h1 = ref.ssd_chunk_ref(x[:, :l], bb[:, :l], cc[:, :l], dt[:, :l], ld[:, :l], h0)
+    y2, h2 = ref.ssd_chunk_ref(x[:, l:], bb[:, l:], cc[:, l:], dt[:, l:], ld[:, l:], h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, :l]), np.asarray(y1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_full[:, l:]), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,139 @@
+"""KGE scoring + synthetic data/partition tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import partition_by_relation, shared_entity_mask
+from repro.data.synthetic import generate_kg, split_triples
+from repro.data.loader import TripleLoader
+from repro.kge.scoring import (
+    KGEModel,
+    init_kge_params,
+    kge_loss,
+    rotate_score,
+    score_triples,
+    transe_score,
+)
+
+
+# ---------------------------------------------------------------------- kge
+def test_transe_score_translation_property():
+    """Exact translation h + r = t gives the maximum score gamma."""
+    h = jnp.array([[1.0, 2.0, 3.0]])
+    r = jnp.array([[0.5, -1.0, 0.0]])
+    t = h + r
+    s = transe_score(h, r, t, gamma=8.0)
+    np.testing.assert_allclose(np.asarray(s), 8.0, atol=1e-6)
+
+
+def test_rotate_rotation_preserves_modulus():
+    """|h o r| == |h| for any phase — rotation is unitary per coordinate."""
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (5, 8))
+    phase = jax.random.uniform(jax.random.PRNGKey(1), (5, 4), minval=-3, maxval=3)
+    t = jnp.zeros((5, 8))
+    # score = gamma - sum |h o r - 0| = gamma - sum|h o r| = gamma - sum|h|
+    s = rotate_score(h, phase, t, gamma=0.0)
+    h_re, h_im = h[..., :4], h[..., 4:]
+    expect = -jnp.sqrt(h_re**2 + h_im**2 + 1e-12).sum(-1)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(expect), rtol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["transe", "rotate", "complex"])
+def test_score_triples_shapes(method):
+    model = KGEModel(method=method, num_entities=20, num_relations=5, dim=16)
+    params = init_kge_params(jax.random.PRNGKey(0), model)
+    h = jnp.arange(4)
+    r = jnp.zeros(4, jnp.int32)
+    t = jnp.arange(4, 8)
+    assert score_triples(params, h, r, t, method).shape == (4,)
+    t_neg = jnp.zeros((4, 7), jnp.int32)
+    assert score_triples(params, h, r, t_neg, method).shape == (4, 7)
+
+
+@pytest.mark.parametrize("method", ["transe", "rotate", "complex"])
+def test_kge_loss_decreases(method):
+    """A few gradient steps on a tiny KG must reduce the loss."""
+    from repro.train.optimizer import adam_init, adam_update
+
+    model = KGEModel(method=method, num_entities=30, num_relations=4, dim=16)
+    params = init_kge_params(jax.random.PRNGKey(0), model)
+    opt = adam_init(params)
+    rng = np.random.default_rng(0)
+    pos = jnp.asarray(rng.integers(0, [30, 4, 30], size=(16, 3)), jnp.int32)
+    nt = jnp.asarray(rng.integers(0, 30, size=(16, 8)), jnp.int32)
+    nh = jnp.asarray(rng.integers(0, 30, size=(16, 8)), jnp.int32)
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p: kge_loss(p, pos, nt, nh, method)
+    ))
+    l0, _ = grad_fn(params)
+    for _ in range(30):
+        _, g = grad_fn(params)
+        params, opt = adam_update(g, opt, params, 1e-2)
+    l1, _ = grad_fn(params)
+    assert float(l1) < float(l0)
+
+
+# --------------------------------------------------------------------- data
+def test_generate_kg_deterministic():
+    a = generate_kg(num_entities=100, num_relations=8, num_triples=500, seed=3)
+    b = generate_kg(num_entities=100, num_relations=8, num_triples=500, seed=3)
+    np.testing.assert_array_equal(a.triples, b.triples)
+    assert a.triples[:, 0].max() < 100
+    assert a.triples[:, 1].max() < 8
+    assert len({tuple(t) for t in a.triples.tolist()}) == a.num_triples  # unique
+
+
+def test_split_ratios():
+    kg = generate_kg(num_entities=200, num_relations=10, num_triples=2000, seed=0)
+    tr, va, te = split_triples(kg)
+    assert abs(tr.shape[0] / kg.num_triples - 0.8) < 0.02
+    assert tr.shape[0] + va.shape[0] + te.shape[0] == kg.num_triples
+
+
+@settings(max_examples=10, deadline=None)
+@given(nc=st.integers(2, 8))
+def test_partition_covers_all_triples(nc):
+    kg = generate_kg(num_entities=150, num_relations=24, num_triples=1500, seed=1)
+    clients = partition_by_relation(kg, nc, seed=0)
+    total = sum(c.train.shape[0] + c.valid.shape[0] + c.test.shape[0] for c in clients)
+    assert total == kg.num_triples
+    # relations are disjoint across clients
+    rel_sets = [set(np.concatenate([c.train, c.valid, c.test])[:, 1].tolist())
+                for c in clients]
+    for i in range(nc):
+        for j in range(i + 1, nc):
+            assert not (rel_sets[i] & rel_sets[j])
+
+
+def test_partition_local_ids_valid():
+    kg = generate_kg(num_entities=150, num_relations=12, num_triples=1200, seed=2)
+    clients = partition_by_relation(kg, 3, seed=0)
+    for c in clients:
+        allt = np.concatenate([c.train, c.valid, c.test])
+        assert allt[:, 0].max() < c.num_entities
+        assert allt[:, 2].max() < c.num_entities
+        # local->global mapping is injective
+        assert len(np.unique(c.local_to_global)) == c.num_entities
+
+
+def test_shared_entity_mask():
+    kg = generate_kg(num_entities=150, num_relations=12, num_triples=1200, seed=2)
+    clients = partition_by_relation(kg, 3, seed=0)
+    mask = shared_entity_mask(clients, kg.num_entities)
+    # dense synthetic graphs share most entities across relation partitions
+    assert mask.sum() > 0.5 * kg.num_entities
+
+
+def test_loader_static_shapes():
+    kg = generate_kg(num_entities=100, num_relations=8, num_triples=700, seed=0)
+    tr, _, _ = split_triples(kg)
+    loader = TripleLoader(tr, batch_size=64, num_entities=100, num_negatives=5, seed=0)
+    seen = 0
+    for pos, nt, nh in loader.epoch():
+        assert pos.shape == (64, 3) and nt.shape == (64, 5) and nh.shape == (64, 5)
+        seen += 1
+    assert seen == loader.batches_per_epoch

@@ -1,0 +1,54 @@
+"""Roofline math + dry-run record plumbing tests."""
+import json
+
+from benchmarks.roofline import roofline_row
+from repro.launch.mesh import TPU_V5E
+
+
+def _rec(flops=1e12, byts=3e11, coll=1e10, kind="train", n=256,
+         active=1e9, tokens=1e6):
+    return {
+        "arch": "x", "shape": "train_4k", "mesh": "16x16", "strategy": "tp",
+        "kind": kind, "num_devices": n,
+        "flops_per_device": flops, "bytes_per_device": byts,
+        "collective_bytes_per_device": {"_total": coll},
+        "memory": {"argument_bytes": 2**30 * n, "temp_bytes": 2**30 * n},
+        "active_param_count": active, "tokens": tokens,
+    }
+
+
+def test_roofline_terms():
+    r = roofline_row(_rec())
+    assert abs(r["t_compute_s"] - 1e12 / TPU_V5E["peak_flops_bf16"]) < 1e-12
+    assert abs(r["t_memory_s"] - 3e11 / TPU_V5E["hbm_bw"]) < 1e-12
+    assert abs(r["t_collective_s"] - 1e10 / TPU_V5E["ici_bw"]) < 1e-12
+    assert r["bottleneck"] == "memory"
+    assert r["step_lower_bound_s"] == r["t_memory_s"]
+    assert abs(r["mem_gb_per_dev"] - 2.0) < 1e-9
+
+
+def test_roofline_model_flops_multiplier():
+    train = roofline_row(_rec(kind="train"))
+    dec = roofline_row(_rec(kind="decode"))
+    assert abs(train["model_flops"] / dec["model_flops"] - 3.0) < 1e-9
+
+
+def test_dryrun_jsonl_schema():
+    """Every OK record in the shipped results has the roofline fields."""
+    import os
+
+    path = "dryrun_results.jsonl"
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("no dryrun results in workspace")
+    n_ok = 0
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] != "OK":
+            continue
+        n_ok += 1
+        roofline_row(r)  # must not raise
+        assert r["flops_per_device"] > 0
+        assert r["num_devices"] in (256, 512)
+    assert n_ok > 0

@@ -1,0 +1,60 @@
+"""Continuous-batching engine: batching must not change any request's output."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_lm
+from repro.serving.engine import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), dtype=jnp.float32)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _solo(cfg, params, req):
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=64)
+    return eng.run([req])[req.uid]
+
+
+def test_batched_matches_solo(model):
+    cfg, params = model
+    reqs = [
+        Request("a", prompt=[1, 2, 3], max_new_tokens=6),
+        Request("b", prompt=[7, 8], max_new_tokens=4),
+        Request("c", prompt=[5, 6, 9, 11], max_new_tokens=5),
+        Request("d", prompt=[2], max_new_tokens=3),
+        Request("e", prompt=[10, 4], max_new_tokens=6),
+    ]
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64)
+    batched = eng.run([dataclasses.replace(r) for r in reqs])
+    assert set(batched) == {r.uid for r in reqs}
+    for r in reqs:
+        solo = _solo(cfg, params, dataclasses.replace(r))
+        assert batched[r.uid] == solo, (r.uid, batched[r.uid], solo)
+
+
+def test_continuous_batching_slot_reuse(model):
+    cfg, params = model
+    # 5 requests through 2 slots forces at least one slot reuse
+    reqs = [Request(f"r{i}", prompt=[i + 1, i + 2], max_new_tokens=3)
+            for i in range(5)]
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64)
+    out = eng.run(reqs)
+    assert len(out) == 5
+    assert all(len(v) == 3 for v in out.values())
+
+
+def test_eos_stops_generation(model):
+    cfg, params = model
+    # discover the first greedy token, then use it as eos
+    probe = _solo(cfg, params, Request("p", prompt=[1, 2], max_new_tokens=1))
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=64)
+    out = eng.run([Request("q", prompt=[1, 2], max_new_tokens=8, eos_id=probe[0])])
+    assert out["q"] == [probe[0]]

@@ -1,0 +1,58 @@
+"""Structural unit tests: layer segmentation, windows, comm views."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.protocol import build_comm_views
+from repro.models.transformer import hybrid_segments, layer_windows, slstm_layer_ids
+
+
+def test_hybrid_segments_zamba():
+    cfg = get_config("zamba2-1.2b")  # 38 layers, attn every 6
+    segs = hybrid_segments(cfg)
+    assert sum(ln for _, ln, _ in segs) == 38
+    assert [a for _, _, a in segs] == [True] * 6 + [False]  # 6 full + tail of 2
+    assert segs[-1][1] == 2
+
+
+def test_slstm_ids_xlstm():
+    cfg = get_config("xlstm-350m")  # 24 layers, every 6th sLSTM
+    ids = slstm_layer_ids(cfg)
+    assert ids == [5, 11, 17, 23]
+
+
+def test_layer_windows_gemma():
+    cfg = get_config("gemma3-1b")
+    w = np.asarray(layer_windows(cfg))
+    assert w.shape == (26,)
+    # 5 local : 1 global repeating
+    assert (w[np.arange(26) % 6 == 5] == 0).all()
+    assert (w[np.arange(26) % 6 != 5] == 512).all()
+    wl = np.asarray(layer_windows(cfg, long_context=True))
+    assert (wl[np.arange(26) % 6 == 5] == 131072).all()  # design-budget window
+
+
+def test_layer_windows_full_attention():
+    cfg = get_config("qwen2-72b")
+    assert (np.asarray(layer_windows(cfg)) == 0).all()
+
+
+def test_build_comm_views_excludes_exclusive_entities():
+    l2g = [np.array([0, 1, 2, 3]), np.array([2, 3, 4]), np.array([3, 9])]
+    views = build_comm_views(l2g, num_global=10)
+    # entity 0,1 only on client 0; 4 only on client 1; 9 only on client 2
+    assert views[0].shared_global.tolist() == [2, 3]
+    assert views[1].shared_global.tolist() == [2, 3]
+    assert views[2].shared_global.tolist() == [3]
+    assert views[0].shared_local.tolist() == [2, 3]
+
+
+def test_effective_heads_and_padding_config():
+    cfg = get_config("arctic-480b")
+    assert cfg.num_heads == 56 and cfg.effective_heads == 64
+    q = get_config("qwen2-vl-7b")
+    assert q.num_heads == 28 and q.effective_heads == 32
+    m = get_config("qwen2-moe-a2.7b")
+    assert m.num_experts == 60 and m.moe_pad_experts == 64
