@@ -1,0 +1,139 @@
+"""Microbenchmark: numpy reference round vs jitted RoundEngine round.
+
+One full sparse FedS communication round (upstream Top-K -> Eq. 3 -> downstream
+Top-K -> Eq. 4) at FB15k-237-scale entity counts (E=14541, D=256, C=3 by
+default; REPRO_BENCH_FAST=1 shrinks to a smoke size).  Three rows:
+
+* ``engine.reference_round`` — the ragged numpy host protocol
+  (``personalized_aggregate`` + per-client apply), the paper-faithful path,
+* ``engine.batched_round`` — RoundEngine including host gather/scatter of the
+  client tables (what the simulation pays per round),
+* ``engine.batched_core`` — the jitted round alone on resident device state
+  (what a deployment that keeps state on-device pays).
+
+Derived column: speedup vs the reference round.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import personalized_aggregate
+from repro.core.codec import IdentityCodec
+from repro.core.engine import RoundEngine
+from repro.core.protocol import apply_sparse_download, build_comm_views, sparse_upload
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+NUM_GLOBAL = 2000 if FAST else 14541  # FB15k-237 entity count
+DIM = 64 if FAST else 256  # paper dim
+NUM_CLIENTS = 3  # FB15k-237-R3
+SUBSET = 0.6  # per-client entity coverage
+SPARSITY = 0.4  # paper p
+
+
+def _make_instance(rng):
+    l2g = [
+        np.sort(
+            rng.choice(NUM_GLOBAL, size=int(NUM_GLOBAL * SUBSET), replace=False)
+        ).astype(np.int64)
+        for _ in range(NUM_CLIENTS)
+    ]
+    views = build_comm_views(l2g, NUM_GLOBAL)
+    tables = [
+        jnp.asarray(rng.normal(size=(len(l), DIM)), jnp.float32) for l in l2g
+    ]
+    hist_tables = [
+        t + jnp.asarray(rng.normal(size=t.shape) * 0.5, jnp.float32)
+        for t in tables
+    ]
+    return views, tables, hist_tables
+
+
+def _reference_round(tables, hists, views, tie_rng):
+    uploads, new_hists = [], []
+    for t, h, v in zip(tables, hists, views):
+        up, hh = sparse_upload(t, h, v, SPARSITY)
+        uploads.append(up)
+        new_hists.append(hh)
+    downs = personalized_aggregate(
+        uploads, [v.shared_global for v in views], SPARSITY, tie_rng
+    )
+    out = [
+        apply_sparse_download(t, v, d.entity_ids, d.agg_values, d.priority)
+        for t, v, d in zip(tables, views, downs)
+    ]
+    jax.block_until_ready(out)
+    return out, new_hists
+
+
+def run(out=print):
+    rng = np.random.default_rng(0)
+    views, tables, hist_tables = _make_instance(rng)
+    ns = [v.num_shared for v in views]
+    out(f"\n== RoundEngine: one sparse FedS round, E={NUM_GLOBAL} D={DIM} "
+        f"C={NUM_CLIENTS} Ns={ns} p={SPARSITY} ==")
+
+    # ---- reference (numpy host protocol)
+    hists = [
+        jnp.asarray(np.asarray(h)[v.shared_local])
+        for h, v in zip(hist_tables, views)
+    ]
+    _reference_round(tables, hists, views, np.random.default_rng(0))  # warm jits
+    iters_ref = 1 if not FAST else 2
+    t0 = time.perf_counter()
+    for _ in range(iters_ref):
+        _reference_round(tables, hists, views, np.random.default_rng(0))
+    us_ref = (time.perf_counter() - t0) / iters_ref * 1e6
+
+    # ---- batched engine, including host gather/scatter
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, SPARSITY, codec=IdentityCodec())
+    hist_b = engine.gather(hist_tables)
+
+    def engine_round():
+        emb_b = engine.gather(tables)
+        new_emb, new_hist, dc = engine.sparse_round(emb_b, hist_b)
+        new_tables = engine.scatter(new_emb, tables)
+        jax.block_until_ready((new_tables, new_hist, dc))
+        return new_emb
+
+    engine_round()  # warm
+    iters_eng = 5
+    t0 = time.perf_counter()
+    for _ in range(iters_eng):
+        engine_round()
+    us_eng = (time.perf_counter() - t0) / iters_eng * 1e6
+
+    # ---- jitted core alone (device-resident state)
+    emb_b = engine.gather(tables)
+    jax.block_until_ready(engine.sparse_round(emb_b, hist_b))
+    t0 = time.perf_counter()
+    for _ in range(iters_eng):
+        jax.block_until_ready(engine.sparse_round(emb_b, hist_b))
+    us_core = (time.perf_counter() - t0) / iters_eng * 1e6
+
+    rows = [
+        ("engine.reference_round", us_ref, "1.0x"),
+        ("engine.batched_round", us_eng, f"{us_ref / us_eng:.1f}x"),
+        ("engine.batched_core", us_core, f"{us_ref / us_core:.1f}x"),
+    ]
+    for name, us, derived in rows:
+        out(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def check_claims(rows):
+    by = {r[0]: r[1] for r in rows}
+    speedup = by["engine.reference_round"] / by["engine.batched_core"]
+    ok = speedup > 3.0
+    return [
+        f"[{'PASS' if ok else 'WARN'}] jitted engine round {speedup:.1f}x vs "
+        f"numpy reference (expect >3x at FB15k-237 scale)"
+    ]
+
+
+if __name__ == "__main__":
+    run()

@@ -15,8 +15,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,table1,table2,table3,table4,"
-                         "table5,table6,fig2,sweep,q8,roofline")
+                    help="comma list: kernels,engine,table1,table2,table3,"
+                         "table4,table5,table6,fig2,sweep,q8,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -31,6 +31,13 @@ def main() -> None:
         from benchmarks import kernels_micro
 
         csv_rows += [tuple(r) for r in kernels_micro.run()]
+
+    if want("engine"):
+        from benchmarks import engine_round
+
+        rows = engine_round.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += engine_round.check_claims(rows)
 
     suites = [
         ("table1", "table1_compression"),

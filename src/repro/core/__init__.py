@@ -9,6 +9,10 @@ This package is the paper's contribution:
 * :mod:`repro.core.protocol` — FedE / FedEP / FedEPL / FedS round logic
 * :mod:`repro.core.compression` — FedE-KD / FedE-SVD / FedE-SVD+ baselines
   (the paper's negative finding, Table I)
+* :mod:`repro.core.engine` — the unified jitted round: batched client state,
+  shared host/SPMD implementation (RoundEngine)
+* :mod:`repro.core.codec` — pluggable wire codecs (identity / int8 rows)
+  owning payload transform + ledger accounting
 * :mod:`repro.core.distributed` — TPU-native sparse-sync collective
   (shard_map + lax collectives, static-K masked buffers)
 """
@@ -24,9 +28,16 @@ from repro.core.aggregate import (
     personalized_aggregate,
     fede_aggregate,
 )
+from repro.core.codec import IdentityCodec, Int8RowCodec, WireCodec, get_codec
+from repro.core.engine import RoundEngine
 from repro.core.sync import is_sync_round, comm_ratio_worst_case
 
 __all__ = [
+    "RoundEngine",
+    "WireCodec",
+    "IdentityCodec",
+    "Int8RowCodec",
+    "get_codec",
     "change_scores",
     "select_top_k",
     "upstream_sparsify",

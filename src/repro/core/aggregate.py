@@ -21,19 +21,27 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.sparsify import sparsity_k
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(frozen=True)
 class Upload:
-    """One client's upstream message (global entity id space)."""
+    """One client's upstream message (global entity id space).
+
+    Frozen: protocol messages are immutable once constructed — wire
+    transforms (e.g. the int8 codec) must build a new message with
+    ``dataclasses.replace`` instead of overwriting the payload another
+    consumer may still reference.
+    """
 
     client_id: int
     entity_ids: np.ndarray  # (k,) int — GLOBAL ids of uploaded entities
     values: np.ndarray  # (k, D) float32 embeddings
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Download:
-    """Server -> client message for one client."""
+    """Server -> client message for one client (immutable, like Upload)."""
 
     client_id: int
     entity_ids: np.ndarray  # (k',) int GLOBAL ids (k' <= K)
@@ -60,7 +68,7 @@ def personalized_aggregate(
     downloads: list[Download] = []
     for c in range(num_clients):
         ents = client_entities[c]
-        k = max(1, min(len(ents), int(round(len(ents) * sparsity_p))))
+        k = sparsity_k(len(ents), sparsity_p)
         cand_ids: list[int] = []
         cand_pri: list[int] = []
         for e in ents.tolist():

@@ -1,0 +1,100 @@
+"""Pluggable wire codecs for FedS protocol payloads.
+
+A :class:`WireCodec` owns BOTH sides of putting selected embedding rows on
+the wire:
+
+* the value transform — ``roundtrip`` is encode+decode fused, i.e. "the rows
+  as the receiver sees them".  It is jit-safe (pure jnp) so the batched
+  :class:`repro.core.engine.RoundEngine` can apply it inside the compiled
+  round, and the numpy reference path can apply it to ragged per-client
+  payloads.
+* the :class:`repro.federated.comm.CommLedger` accounting for both protocol
+  legs, so the byte/parameter math for a codec lives in exactly one place
+  instead of inline branches in the simulation loop.
+
+Ledger conventions (match the paper's Eq. 5 accounting): ``params`` are
+float-equivalent parameter counts (an int8 element counts as 1/4 parameter);
+``bytes`` are realistic wire bytes with int8 sign vectors.  The per-entity
+sign vector is transmitted on every leg, including empty downloads — the
+receiver cannot know the download was empty without it.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+
+from repro.core.sparsify import dequantize_rows, quantize_rows
+
+if TYPE_CHECKING:  # avoid a core -> federated import cycle at runtime
+    from repro.federated.comm import CommLedger
+
+
+class WireCodec:
+    """Interface: value round-trip + per-leg ledger accounting."""
+
+    name = "abstract"
+    # False when roundtrip is the identity — lets ragged host paths skip the
+    # per-message device round-trip entirely.
+    transforms_values = True
+
+    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
+        """(k, D) rows -> (k, D) rows as decoded by the receiver (jit-safe)."""
+        raise NotImplementedError
+
+    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        """Account one client's upstream leg (k selected rows)."""
+        raise NotImplementedError
+
+    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        """Account one client's downstream leg (k aggregated rows)."""
+        raise NotImplementedError
+
+
+class IdentityCodec(WireCodec):
+    """Full-precision f32 rows on the wire — the paper's FedS protocol."""
+
+    name = "identity"
+    transforms_values = False
+
+    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
+        return values
+
+    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        ledger.log_upload_sparse(k, dim, num_shared)
+
+    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        ledger.log_download_sparse(k, dim, num_shared)
+
+
+class Int8RowCodec(WireCodec):
+    """FedS+Q8: row-wise symmetric int8 payloads + one f32 scale per row.
+
+    Beyond-paper extension (EXPERIMENTS.md §Repro): precision is reduced only
+    on the wire, never in the training state.  Upstream leg: int8 values
+    (dim/4 param-equivalents per row) + f32 scale + i32 index per row + the
+    (num_shared,) sign vector.  Downstream leg additionally carries the f32
+    priority count per row.
+    """
+
+    name = "int8-rows"
+
+    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
+        return dequantize_rows(*quantize_rows(values))
+
+    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        ledger.params_transmitted += k * dim / 4 + k + num_shared
+        ledger.bytes_int8_signs += k * dim + k * 4 + num_shared + k * 4
+
+    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        ledger.params_transmitted += k * dim / 4 + 2 * k + num_shared
+        # int8 values + (scale, priority) f32 pair + i32 index per row + sign
+        ledger.bytes_int8_signs += k * (dim + 8) + k * 4 + num_shared
+
+
+def get_codec(name: str) -> WireCodec:
+    """Codec registry for config-level selection."""
+    codecs = {c.name: c for c in (IdentityCodec, Int8RowCodec)}
+    if name not in codecs:
+        raise ValueError(f"unknown wire codec {name!r}; known: {sorted(codecs)}")
+    return codecs[name]()

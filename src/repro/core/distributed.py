@@ -19,6 +19,12 @@ Semantic deltas vs the host protocol (property-tested in
 tests/test_distributed.py): static K (ragged "fewer-than-K" handled by the
 priority>0 mask) and deterministic instead of random tie-breaking.
 
+The aggregation and downstream-selection primitives (``segment_aggregate``,
+``downstream_sign``) are shared with :mod:`repro.core.engine`, whose
+RoundEngine runs the same round over heterogeneous batched client state —
+this module keeps the homogeneous shard-per-client collective where each
+shard holds the full (N, D) table.
+
 Communication cost per round per shard: ``K·D + K`` words gathered from each
 peer — exactly the paper's upstream payload; the "download" is computed
 redundantly on-shard instead of transmitted, which on a pod is free (the
@@ -35,6 +41,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.engine import (
+    axis_size,
+    downstream_sign,
+    pcast_varying,
+    segment_aggregate,
+    shard_map,
+)
 from repro.core.sparsify import change_scores, select_top_k
 from repro.kernels import ops as kernel_ops
 
@@ -51,7 +64,7 @@ def sparse_sync_step(
     Returns (updated embeddings, updated history).
     """
     n, d = emb.shape
-    num_clients = jax.lax.axis_size(axis_name)
+    num_clients = axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
 
     # -- upstream: entity-wise Top-K (Eq. 1-2)
@@ -69,14 +82,11 @@ def sparse_sync_step(
     flat_idx = all_idx.reshape(-1)
     flat_vals = (all_vals * peer[:, None, None]).reshape(-1, d)
     flat_cnt = jnp.broadcast_to(peer[:, None], (num_clients, k)).reshape(-1)
-    agg = jax.ops.segment_sum(flat_vals, flat_idx, num_segments=n)  # (N, D)
-    pri = jax.ops.segment_sum(flat_cnt, flat_idx, num_segments=n)  # (N,)
+    agg, pri = segment_aggregate(flat_idx, flat_vals, flat_cnt, n)
 
     # -- downstream personalized Top-K by priority weight
     rank_key = pri + (jitter if jitter is not None else 0.0)
-    _, sel = jax.lax.top_k(rank_key, k)
-    sign = jnp.zeros((n,), jnp.int8).at[sel].set(1)
-    sign = jnp.where(pri > 0, sign, 0)  # "fewer than K available" mask
+    sign = downstream_sign(pri, rank_key, k)
 
     # -- Eq. 4 masked row update (fused kernel)
     new_emb = kernel_ops.sparse_apply(emb, agg, pri, sign).astype(emb.dtype)
@@ -110,8 +120,10 @@ def feds_round(
         mean = full_sync_step(e, axis_name)
         # pmean output is axis-invariant; re-mark it varying so both cond
         # branches have identical vma types under shard_map.
-        mean = jax.lax.pcast(mean, axis_name, to="varying")
-        return mean, mean  # history refreshed to the synchronized table
+        mean = pcast_varying(mean, axis_name)
+        # history refreshes to the PRE-sync rows — what this shard uploaded —
+        # matching repro.core.protocol.full_upload and the batched engine.
+        return mean, e
 
     is_sync = (round_idx + 1) % (sync_interval + 1) == 0
     return jax.lax.cond(is_sync, full, sparse, (emb, hist))
@@ -126,7 +138,7 @@ def make_sharded_feds_round(mesh, k: int, sync_interval: int, axis_name: str = "
     """
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P()),
         out_specs=(P(axis_name), P(axis_name)),

@@ -1,0 +1,321 @@
+"""Unified FedS round engine: one jitted program over batched client state.
+
+This module is the single implementation of the paper's communication round
+(upstream entity-wise Top-K -> personalized aggregation Eq. 3 -> downstream
+Top-K -> Eq. 4 apply) that both deployment shapes share:
+
+* **host** — all clients' shared-entity rows are stacked into padded
+  ``(C, Ns_max, D)`` buffers with validity masks and the whole round runs as
+  one ``jax.jit`` program on a single device (the federated simulation path),
+* **pod**  — the same per-shard function runs under ``shard_map`` over the
+  client axis of a mesh; the only cross-client exchange is ONE ``all_gather``
+  of the fixed-size ``(k_max,)`` index / ``(k_max, D)`` value / mask buffers
+  (EXPERIMENTS.md §Perf: the server round-trip is computed redundantly
+  on-shard, which is free once the gather delivered the inputs).
+
+Heterogeneity (clients with different shared-entity counts and different
+``K``) is expressed with static shapes: rows are padded to ``Ns_max`` and
+masked by ``valid``; Top-K always selects ``k_max`` slots and masks slots
+``>= k_c`` per client.  Change scoring runs through the fused Pallas kernel
+across the flattened client axis — one kernel launch for all clients.
+
+Semantic deltas vs the numpy reference (:mod:`repro.core.aggregate`), as
+already documented for :mod:`repro.core.distributed`: static K and a
+deterministic jitter tie-break instead of random tie-breaking.  The host
+reference path stays available as ``engine="reference"`` in the simulation
+and is what the property tests compare against.
+
+Wire payloads go through a pluggable :class:`repro.core.codec.WireCodec`
+(identity or int8 rows), applied inside the jitted round.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codec import IdentityCodec, WireCodec
+from repro.core.sparsify import change_scores, sparsity_k
+from repro.kernels import ops as kernel_ops
+
+# --------------------------------------------------------------------------
+# jax version compatibility: shard_map moved to the jax namespace after 0.4;
+# older versions also lack lax.pcast (used to align vma types across lax.cond
+# branches) — there check_rep=False makes the rep check a no-op instead.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+
+
+def pcast_varying(x, axis_name: str):
+    """Mark a replicated value as axis-varying (no-op on jax without pcast)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis_name, to="varying")
+    return x
+
+
+def axis_size(axis_name: str) -> int:
+    """Static mesh-axis size inside shard_map, on either jax generation."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # constant-folded on jax <= 0.4.x
+
+
+def make_client_mesh(num_devices: int, axis_name: str = "clients"):
+    """A 1-D mesh over ``num_devices`` for the client axis."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh((num_devices,), (axis_name,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((num_devices,), (axis_name,))
+
+
+# --------------------------------------------------------------------------
+# shared primitives (also used by repro.core.distributed)
+def segment_aggregate(
+    ids: jnp.ndarray,  # (M,) int segment ids
+    vals: jnp.ndarray,  # (M, D) contribution rows (already masked/weighted)
+    weights: jnp.ndarray,  # (M,) contribution counts (0 for masked slots)
+    num_segments: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 3 scatter-add: dense (S, D) aggregate + (S,) priority counts."""
+    agg = jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+    pri = jax.ops.segment_sum(weights, ids, num_segments=num_segments)
+    return agg, pri
+
+
+def downstream_sign(
+    pri: jnp.ndarray,  # (N,) priority counts
+    rank_key: jnp.ndarray,  # (N,) priority + tie-break jitter
+    k: int,
+) -> jnp.ndarray:
+    """Static downstream Top-K selection as a (N,) int8 sign vector.
+
+    Rows with zero priority are never selected (the paper's "fewer than K
+    available" rule).
+    """
+    _, sel = jax.lax.top_k(rank_key, k)
+    sign = jnp.zeros(pri.shape[0], jnp.int8).at[sel].set(1)
+    return jnp.where(pri > 0, sign, 0)
+
+
+# --------------------------------------------------------------------------
+# the batched round (runs plain-jit on host, or per-shard under shard_map)
+def _batched_sparse_round(
+    emb: jnp.ndarray,  # (C_local, Ns_max, D) shared-entity rows
+    hist: jnp.ndarray,  # (C_local, Ns_max, D) upload history
+    gid: jnp.ndarray,  # (C_local, Ns_max) global entity id; padding -> num_global
+    valid: jnp.ndarray,  # (C_local, Ns_max) bool row validity
+    k: jnp.ndarray,  # (C_local,) per-client K
+    jitter: jnp.ndarray,  # (C_local, Ns_max) tie-break noise in [0, 1)
+    *,
+    k_max: int,
+    num_global: int,
+    codec: WireCodec,
+    axis_name: Optional[str],
+):
+    cl, ns, d = emb.shape
+    validf = valid.astype(emb.dtype)
+    slot = jnp.arange(k_max)[None, :]
+
+    # -- upstream Top-K (Eq. 1-2): one fused kernel call across all clients
+    scores = change_scores(
+        emb.reshape(cl * ns, d), hist.reshape(cl * ns, d)
+    ).reshape(cl, ns)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    _, up_idx = jax.lax.top_k(scores, k_max)  # (cl, k_max)
+    up_mask = (slot < k[:, None]) & jnp.take_along_axis(valid, up_idx, axis=1)
+    up_maskf = up_mask.astype(emb.dtype)
+
+    vals = jnp.take_along_axis(emb, up_idx[:, :, None], axis=1)  # (cl, k_max, d)
+    vals = codec.roundtrip(vals.reshape(-1, d)).reshape(cl, k_max, d)
+
+    uploaded = jax.vmap(lambda i, m: jnp.zeros((ns,), emb.dtype).at[i].add(m))(
+        up_idx, up_maskf
+    )  # (cl, ns) 0/1 — which of my rows went upstream this round
+    new_hist = jnp.where(uploaded[:, :, None] > 0, emb, hist)
+    # this client's wire-coded uploads scattered back to row positions, for
+    # the Eq. 3 own-contribution subtraction below
+    own_wire = jax.vmap(
+        lambda i, v, m: jnp.zeros((ns, d), emb.dtype).at[i].add(v * m[:, None])
+    )(up_idx, vals, up_maskf)
+
+    # -- exchange: one all-gather of fixed-size buffers (no-op on host)
+    up_gid = jnp.where(up_mask, jnp.take_along_axis(gid, up_idx, axis=1), num_global)
+    if axis_name is not None:
+        up_gid = jax.lax.all_gather(up_gid, axis_name).reshape(-1, k_max)
+        vals = jax.lax.all_gather(vals, axis_name).reshape(-1, k_max, d)
+        up_maskf = jax.lax.all_gather(up_maskf, axis_name).reshape(-1, k_max)
+
+    # -- Eq. 3 over the global entity space (+1 padding segment)
+    agg, cnt = segment_aggregate(
+        up_gid.reshape(-1),
+        (vals * up_maskf[:, :, None]).reshape(-1, d),
+        up_maskf.reshape(-1),
+        num_global + 1,
+    )
+
+    # -- personalized views: subtract the own wire-coded contribution
+    agg_rows = agg[gid] - own_wire
+    pri_rows = (cnt[gid] - uploaded) * validf
+    # downstream leg crosses the wire too
+    agg_rows = codec.roundtrip(agg_rows.reshape(-1, d)).reshape(cl, ns, d)
+
+    # -- downstream Top-K by priority; jitter < 1 never reorders priorities
+    rank = jnp.where(valid, pri_rows + jitter, -1.0)
+    _, dn_idx = jax.lax.top_k(rank, k_max)
+    dn_mask = (slot < k[:, None]) & (
+        jnp.take_along_axis(pri_rows, dn_idx, axis=1) > 0
+    )
+    sign = jax.vmap(lambda i, m: jnp.zeros((ns,), jnp.int8).at[i].add(m))(
+        dn_idx, dn_mask.astype(jnp.int8)
+    )
+    down_count = dn_mask.sum(axis=1).astype(jnp.int32)
+
+    # -- Eq. 4 masked row update, fused over the flattened client axis
+    new_emb = kernel_ops.sparse_apply(
+        emb.reshape(-1, d),
+        agg_rows.reshape(-1, d),
+        pri_rows.reshape(-1),
+        sign.reshape(-1),
+    ).reshape(cl, ns, d).astype(emb.dtype)
+    return new_emb, new_hist, down_count
+
+
+def _batched_sync_round(
+    emb: jnp.ndarray,  # (C_local, Ns_max, D)
+    gid: jnp.ndarray,
+    valid: jnp.ndarray,
+    *,
+    num_global: int,
+    axis_name: Optional[str],
+):
+    """Intermittent synchronization (§III-E): FedE mean over owning clients.
+
+    Returns (synchronized rows, refreshed history).  History is the PRE-sync
+    rows — the protocol refreshes it with what was uploaded, matching
+    :func:`repro.core.protocol.full_upload`.
+    """
+    cl, ns, d = emb.shape
+    validf = valid.astype(emb.dtype)
+    ids = jnp.where(valid, gid, num_global).reshape(-1)
+    total, cnt = segment_aggregate(
+        ids, (emb * validf[:, :, None]).reshape(-1, d), validf.reshape(-1),
+        num_global + 1,
+    )
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+        cnt = jax.lax.psum(cnt, axis_name)
+    mean = total / jnp.maximum(cnt, 1.0)[:, None]
+    new_emb = jnp.where(valid[:, :, None], mean[gid], emb)
+    return new_emb, emb
+
+
+# --------------------------------------------------------------------------
+class RoundEngine:
+    """Compiled FedS communication rounds over batched client state.
+
+    Built once per federation from the static comm views; per round the
+    caller gathers each client's current entity table into the padded batch,
+    runs :meth:`sparse_round` / :meth:`sync_round`, and scatters the result
+    back.  With ``mesh=None`` the round is a single-device jit; with a mesh
+    it is ``shard_map``-ped over the client axis (C must be divisible by the
+    mesh size).
+    """
+
+    def __init__(
+        self,
+        views: Sequence,  # list[repro.core.protocol.ClientCommView]
+        num_global_entities: int,
+        dim: int,
+        sparsity_p: float,
+        codec: Optional[WireCodec] = None,
+        mesh=None,
+        axis_name: str = "clients",
+    ):
+        self.views = list(views)
+        self.num_global = int(num_global_entities)
+        self.dim = int(dim)
+        self.codec = codec if codec is not None else IdentityCodec()
+        self.num_clients = len(self.views)
+        ns = [v.num_shared for v in self.views]
+        self.ns_max = max(1, max(ns, default=0))
+        self.k_per_client = np.asarray(
+            [sparsity_k(n, sparsity_p) for n in ns], np.int32
+        )
+        self.k_max = max(1, int(self.k_per_client.max(initial=0)))
+
+        gid = np.full((self.num_clients, self.ns_max), self.num_global, np.int32)
+        valid = np.zeros((self.num_clients, self.ns_max), bool)
+        for c, v in enumerate(self.views):
+            gid[c, : v.num_shared] = v.shared_global
+            valid[c, : v.num_shared] = True
+        self._gid = jnp.asarray(gid)
+        self._valid = jnp.asarray(valid)
+        self._k = jnp.asarray(self.k_per_client)
+
+        axis = axis_name if mesh is not None else None
+        sparse_core = functools.partial(
+            _batched_sparse_round, k_max=self.k_max, num_global=self.num_global,
+            codec=self.codec, axis_name=axis,
+        )
+        sync_core = functools.partial(
+            _batched_sync_round, num_global=self.num_global, axis_name=axis,
+        )
+        if mesh is None:
+            self._sparse = jax.jit(sparse_core)
+            self._sync = jax.jit(sync_core)
+        else:
+            p = jax.sharding.PartitionSpec(axis_name)
+            self._sparse = jax.jit(shard_map(
+                sparse_core, mesh=mesh,
+                in_specs=(p, p, p, p, p, p), out_specs=(p, p, p),
+            ))
+            self._sync = jax.jit(shard_map(
+                sync_core, mesh=mesh, in_specs=(p, p, p), out_specs=(p, p),
+            ))
+
+    # ------------------------------------------------------- host transfers
+    def gather(self, tables: Sequence) -> jnp.ndarray:
+        """Stack each client's shared-entity rows into (C, Ns_max, D)."""
+        out = np.zeros((self.num_clients, self.ns_max, self.dim), np.float32)
+        for c, (v, t) in enumerate(zip(self.views, tables)):
+            if v.num_shared:
+                out[c, : v.num_shared] = np.asarray(t, np.float32)[v.shared_local]
+        return jnp.asarray(out)
+
+    def scatter(self, batch: jnp.ndarray, tables: Sequence) -> list:
+        """Write the updated shared rows back into each client's full table."""
+        out = []
+        for c, (v, t) in enumerate(zip(self.views, tables)):
+            if v.num_shared:
+                rows = batch[c, : v.num_shared].astype(t.dtype)
+                t = t.at[jnp.asarray(v.shared_local)].set(rows)
+            out.append(t)
+        return out
+
+    # --------------------------------------------------------------- rounds
+    def sparse_round(
+        self,
+        emb: jnp.ndarray,  # (C, Ns_max, D)
+        hist: jnp.ndarray,  # (C, Ns_max, D)
+        jitter: Optional[jnp.ndarray] = None,  # (C, Ns_max) in [0, 1)
+    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """One sparse FedS round.  Returns (emb', hist', down_count (C,))."""
+        if jitter is None:
+            jitter = jnp.zeros((self.num_clients, self.ns_max), jnp.float32)
+        # halve after the f32 cast: float64 values in [1-2^-25, 1) round to
+        # exactly 1.0f, which would tie with the next priority level
+        jitter = jnp.asarray(jitter, jnp.float32) * 0.5
+        return self._sparse(emb, hist, self._gid, self._valid, self._k, jitter)
+
+    def sync_round(self, emb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """One full-synchronization round.  Returns (emb', hist')."""
+        return self._sync(emb, self._gid, self._valid)

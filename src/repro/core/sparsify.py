@@ -17,8 +17,8 @@ from repro.kernels import ops as kernel_ops
 
 
 def sparsity_k(num_entities: int, p: float) -> int:
-    """K = N_c * p (Eq. 2), at least 1, at most N_c."""
-    return max(1, min(num_entities, int(round(num_entities * p))))
+    """K = N_c * p (Eq. 2), at least 1, at most N_c (0 when N_c == 0)."""
+    return min(num_entities, max(1, int(round(num_entities * p))))
 
 
 def change_scores(

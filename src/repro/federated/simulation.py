@@ -3,21 +3,26 @@
 Drives any of the protocol variants over a list of clients:
 
 * local training (``local_epochs`` epochs per round),
-* upstream communication (sparse Top-K or full),
-* server aggregation (personalized Eq. 3 or FedE averaging),
-* downstream communication + client update (Eq. 4 or replacement),
+* one communication round — by default through the jitted batched
+  :class:`repro.core.engine.RoundEngine` (upstream Top-K, Eq. 3 personalized
+  aggregation, downstream Top-K, Eq. 4 apply as ONE compiled program over all
+  clients); ``engine="reference"`` keeps the ragged numpy host protocol,
+  which the property tests compare against,
+* wire payloads and their cost accounting via a pluggable
+  :class:`repro.core.codec.WireCodec` (identity or FedS+Q8 int8 rows),
 * periodic validation with early stopping (patience on consecutive declines),
 * a communication ledger for P@CG / P@99 / P@98 / R@CG.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import fede_aggregate, personalized_aggregate
+from repro.core.codec import get_codec
+from repro.core.engine import RoundEngine
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
@@ -25,7 +30,7 @@ from repro.core.protocol import (
     full_upload,
     sparse_upload,
 )
-from repro.core.sparsify import dequantize_rows, quantize_rows, sparsity_k
+from repro.core.sparsify import sparsity_k
 from repro.core.sync import is_sync_round
 from repro.data.partition import ClientData
 from repro.federated.client import KGEClient
@@ -47,6 +52,7 @@ class FederatedConfig:
     gamma: float = 8.0
     sparsity_p: float = 0.4
     quantize_upload: bool = False  # FedS+Q8: int8 rows on the wire (beyond-paper)
+    engine: str = "batched"  # batched (jitted RoundEngine) | reference (numpy)
     sync_interval: int = 4
     eval_every: int = 5
     patience: int = 3
@@ -86,6 +92,10 @@ def run_federated(
     cfg: FederatedConfig,
     verbose: bool = False,
 ) -> FederatedResult:
+    if cfg.engine not in ("batched", "reference"):
+        raise ValueError(
+            f"unknown engine {cfg.engine!r}; expected 'batched' or 'reference'"
+        )
     clients = [
         KGEClient(
             d,
@@ -101,10 +111,20 @@ def run_federated(
         for d in clients_data
     ]
     views = build_comm_views([d.local_to_global for d in clients_data], num_global_entities)
-    histories = [
-        clients[c].entity_embeddings[jnp.asarray(views[c].shared_local)]
-        for c in range(len(clients))
-    ]
+    codec = get_codec("int8-rows" if cfg.quantize_upload else "identity")
+    engine = None
+    hist_batch = None
+    histories = None
+    if cfg.protocol != "single" and cfg.engine != "reference":
+        engine = RoundEngine(
+            views, num_global_entities, cfg.dim, cfg.sparsity_p, codec=codec
+        )
+        hist_batch = engine.gather([c.params["entity"] for c in clients])
+    else:  # ragged numpy reference protocol keeps per-client histories
+        histories = [
+            clients[c].entity_embeddings[jnp.asarray(views[c].shared_local)]
+            for c in range(len(clients))
+        ]
     ledger = CommLedger()
     rng = np.random.default_rng(cfg.seed + 777)
 
@@ -126,7 +146,29 @@ def run_federated(
                 cfg.protocol == "fedep"
                 or (cfg.protocol == "feds" and is_sync_round(t, cfg.sync_interval))
             )
-            if sync:
+            if engine is not None:  # jitted batched RoundEngine path
+                emb_batch = engine.gather([c.params["entity"] for c in clients])
+                if sync:
+                    emb_batch, hist_batch = engine.sync_round(emb_batch)
+                    for v in views:  # upload leg + download leg
+                        ledger.log_full_exchange(v.num_shared, cfg.dim)
+                        ledger.log_full_exchange(v.num_shared, cfg.dim)
+                else:
+                    jitter = rng.random((len(clients), engine.ns_max))
+                    emb_batch, hist_batch, down_counts = engine.sparse_round(
+                        emb_batch, hist_batch, jitter
+                    )
+                    for v, k_c, dc in zip(
+                        views, engine.k_per_client, np.asarray(down_counts)
+                    ):
+                        codec.log_upload(ledger, int(k_c), cfg.dim, v.num_shared)
+                        codec.log_download(ledger, int(dc), cfg.dim, v.num_shared)
+                new_tables = engine.scatter(
+                    emb_batch, [c.params["entity"] for c in clients]
+                )
+                for c, tab in zip(clients, new_tables):
+                    c.params["entity"] = tab
+            elif sync:
                 uploads = []
                 for c, v in zip(clients, views):
                     up, hist = full_upload(c.params["entity"], v)
@@ -139,7 +181,7 @@ def run_federated(
                         c.params["entity"], v, global_mean
                     )
                     ledger.log_full_exchange(v.num_shared, cfg.dim)
-            else:  # sparse FedS round
+            else:  # sparse FedS round, ragged numpy reference path
                 uploads = []
                 for c, v in zip(clients, views):
                     up, hist = sparse_upload(
@@ -147,19 +189,15 @@ def run_federated(
                     )
                     histories[v.client_id] = hist
                     k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
-                    if cfg.quantize_upload:
-                        # FedS+Q8: int8 rows + f32 scale cross the wire
-                        q, sc = quantize_rows(jnp.asarray(up.values))
-                        up.values = np.asarray(dequantize_rows(q, sc))
-                        # ledger in param-equivalents: int8 = 1/4 param
-                        ledger.params_transmitted += (
-                            k_round * cfg.dim / 4 + k_round + v.num_shared
+                    if codec.transforms_values:
+                        # messages are frozen: the transform builds a new one
+                        up = dataclasses.replace(
+                            up,
+                            values=np.asarray(
+                                codec.roundtrip(jnp.asarray(up.values)), np.float32
+                            ),
                         )
-                        ledger.bytes_int8_signs += (
-                            k_round * cfg.dim + k_round * 4 + v.num_shared + k_round * 4
-                        )
-                    else:
-                        ledger.log_upload_sparse(k_round, cfg.dim, v.num_shared)
+                    codec.log_upload(ledger, k_round, cfg.dim, v.num_shared)
                     uploads.append(up)
                 downloads = personalized_aggregate(
                     uploads,
@@ -168,20 +206,16 @@ def run_federated(
                     rng,
                 )
                 for c, v, d in zip(clients, views, downloads):
-                    if cfg.quantize_upload and len(d.entity_ids):
-                        q, sc = quantize_rows(jnp.asarray(d.agg_values))
-                        d.agg_values = np.asarray(dequantize_rows(q, sc))
-                        ledger.params_transmitted += (
-                            len(d.entity_ids) * cfg.dim / 4
-                            + 2 * len(d.entity_ids) + v.num_shared
+                    if codec.transforms_values and len(d.entity_ids):
+                        d = dataclasses.replace(
+                            d,
+                            agg_values=np.asarray(
+                                codec.roundtrip(jnp.asarray(d.agg_values)), np.float32
+                            ),
                         )
-                        ledger.bytes_int8_signs += (
-                            len(d.entity_ids) * (cfg.dim + 8) + v.num_shared
-                        )
-                    else:
-                        ledger.log_download_sparse(
-                            len(d.entity_ids), cfg.dim, v.num_shared
-                        )
+                    codec.log_download(
+                        ledger, len(d.entity_ids), cfg.dim, v.num_shared
+                    )
                     c.params["entity"] = apply_sparse_download(
                         c.params["entity"], v, d.entity_ids, d.agg_values, d.priority
                     )

@@ -30,6 +30,11 @@ def main() -> None:
     ap.add_argument("--negatives", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--sparsity", type=float, default=0.4)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "reference"],
+                    help="batched = jitted RoundEngine; reference = numpy host protocol")
+    ap.add_argument("--quantize-upload", action="store_true",
+                    help="FedS+Q8: int8 row payloads on the wire")
     ap.add_argument("--sync-interval", type=int, default=4)
     ap.add_argument("--entities", type=int, default=400)
     ap.add_argument("--triples", type=int, default=5000)
@@ -50,6 +55,7 @@ def main() -> None:
         rounds=args.rounds, local_epochs=args.local_epochs,
         batch_size=args.batch_size, num_negatives=args.negatives, lr=args.lr,
         sparsity_p=args.sparsity, sync_interval=args.sync_interval,
+        engine=args.engine, quantize_upload=args.quantize_upload,
         seed=args.seed,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)

@@ -1,0 +1,115 @@
+"""WireCodec layer: value round-trips, ledger accounting, frozen messages."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregate import Download, Upload
+from repro.core.codec import IdentityCodec, Int8RowCodec, get_codec
+from repro.core.sparsify import dequantize_rows, quantize_rows
+from repro.federated.comm import CommLedger
+
+
+# ----------------------------------------------------------- value roundtrip
+def test_identity_roundtrip_exact():
+    v = jax.random.normal(jax.random.PRNGKey(0), (7, 16))
+    np.testing.assert_array_equal(
+        np.asarray(IdentityCodec().roundtrip(v)), np.asarray(v)
+    )
+
+
+def test_int8_roundtrip_error_bound():
+    """Row-wise symmetric int8: |err| <= scale/2 = max|row| / 254 per row."""
+    v = jax.random.normal(jax.random.PRNGKey(1), (12, 32)) * 3.0
+    back = np.asarray(Int8RowCodec().roundtrip(v))
+    row_max = np.abs(np.asarray(v)).max(axis=-1, keepdims=True)
+    assert (np.abs(back - np.asarray(v)) <= row_max / 254.0 + 1e-7).all()
+    # and matches the underlying quantize/dequantize pair exactly
+    q, sc = quantize_rows(v)
+    np.testing.assert_array_equal(back, np.asarray(dequantize_rows(q, sc)))
+
+
+def test_int8_roundtrip_zero_and_tiny_rows():
+    v = jnp.concatenate([jnp.zeros((2, 8)), jnp.full((1, 8), 1e-30)])
+    back = np.asarray(Int8RowCodec().roundtrip(v))
+    assert np.isfinite(back).all()
+    np.testing.assert_array_equal(back[:2], 0.0)
+
+
+def test_get_codec_registry():
+    assert isinstance(get_codec("identity"), IdentityCodec)
+    assert isinstance(get_codec("int8-rows"), Int8RowCodec)
+    with pytest.raises(ValueError):
+        get_codec("zstd")
+
+
+# -------------------------------------------------------- ledger accounting
+def test_identity_codec_ledger_matches_commledger_math():
+    a, b = CommLedger(), CommLedger()
+    codec = IdentityCodec()
+    codec.log_upload(a, k=10, dim=8, num_shared=50)
+    codec.log_download(a, k=6, dim=8, num_shared=50)
+    b.log_upload_sparse(10, 8, 50)
+    b.log_download_sparse(6, 8, 50)
+    assert a.params_transmitted == b.params_transmitted
+    assert a.bytes_int8_signs == b.bytes_int8_signs
+
+
+def test_int8_codec_upload_leg_accounting():
+    led = CommLedger()
+    Int8RowCodec().log_upload(led, k=10, dim=8, num_shared=50)
+    # params: int8 values at 1/4 param (10*8/4) + f32 scales (10) + sign (50)
+    assert led.params_transmitted == 10 * 8 / 4 + 10 + 50
+    # bytes: int8 values + f32 scales + i8 sign vector + i32 indices
+    assert led.bytes_int8_signs == 10 * 8 + 10 * 4 + 50 + 10 * 4
+
+
+def test_int8_codec_download_leg_accounting():
+    led = CommLedger()
+    Int8RowCodec().log_download(led, k=6, dim=8, num_shared=50)
+    # params: int8 values (6*8/4) + scales + priorities (2*6) + sign (50)
+    assert led.params_transmitted == 6 * 8 / 4 + 2 * 6 + 50
+    # bytes: int8 values + (scale + priority) f32 pairs + i32 indices + sign
+    assert led.bytes_int8_signs == 6 * (8 + 8) + 6 * 4 + 50
+
+
+def test_int8_codec_cheaper_than_identity_per_round():
+    """The point of Q8: ~4x fewer payload params on both legs."""
+    q8, ident = CommLedger(), CommLedger()
+    for led, codec in ((q8, Int8RowCodec()), (ident, IdentityCodec())):
+        codec.log_upload(led, k=100, dim=256, num_shared=400)
+        codec.log_download(led, k=80, dim=256, num_shared=400)
+    assert q8.params_transmitted < 0.35 * ident.params_transmitted
+    assert q8.bytes_int8_signs < 0.35 * ident.bytes_int8_signs
+
+
+def test_int8_empty_download_still_costs_sign_vector():
+    led = CommLedger()
+    Int8RowCodec().log_download(led, k=0, dim=256, num_shared=400)
+    assert led.params_transmitted == 400
+    assert led.bytes_int8_signs == 400
+
+
+# --------------------------------------------------------- frozen messages
+def test_protocol_messages_are_immutable():
+    up = Upload(
+        client_id=0,
+        entity_ids=np.arange(3, dtype=np.int64),
+        values=np.zeros((3, 4), np.float32),
+    )
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        up.values = np.ones((3, 4), np.float32)
+    down = Download(
+        client_id=0,
+        entity_ids=np.arange(2, dtype=np.int64),
+        agg_values=np.zeros((2, 4), np.float32),
+        priority=np.ones(2, np.int64),
+    )
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        down.agg_values = np.ones((2, 4), np.float32)
+    # the sanctioned wire transform: build a new message
+    up2 = dataclasses.replace(up, values=np.ones((3, 4), np.float32))
+    np.testing.assert_array_equal(up.values, 0.0)
+    np.testing.assert_array_equal(up2.values, 1.0)

@@ -21,10 +21,11 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.core.distributed import make_sharded_feds_round, sparse_sync_step, full_sync_step
 from repro.core.aggregate import Upload, personalized_aggregate
+from repro.core.engine import make_client_mesh
 from repro.core.sparsify import change_scores, select_top_k
 
 C, N, D, K = 4, 32, 16, 8
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_client_mesh(4, "data")
 
 key = jax.random.PRNGKey(0)
 emb = jax.random.normal(key, (C, N, D), jnp.float32)

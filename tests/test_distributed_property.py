@@ -20,9 +20,10 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.core.distributed import make_sharded_feds_round
 from repro.core.aggregate import Upload, personalized_aggregate
+from repro.core.engine import make_client_mesh
 from repro.core.sparsify import change_scores, select_top_k
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_client_mesh(4, "data")
 results = []
 for seed in range(5):
     rng = np.random.default_rng(seed)

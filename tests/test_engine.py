@@ -1,0 +1,315 @@
+"""RoundEngine (jitted batched FedS round) == ragged numpy reference protocol.
+
+Equivalence holds exactly (up to float summation order and the static-K /
+deterministic tie-break deltas documented in repro.core.engine) whenever the
+downstream selection is tie-break-free:
+
+* with p = 1.0 every aggregated candidate is selected on both paths, so any
+  heterogeneous instance is comparable,
+* with p < 1.0 a client is comparable iff its candidate count <= K_c (the
+  reference then sends all candidates); the property test checks exactly
+  those clients and asserts the construction produced enough of them.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregate import fede_aggregate, personalized_aggregate
+from repro.core.codec import IdentityCodec, Int8RowCodec
+from repro.core.engine import RoundEngine
+from repro.core.protocol import (
+    apply_full_download,
+    apply_sparse_download,
+    build_comm_views,
+    full_upload,
+    sparse_upload,
+)
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.simulation import FederatedConfig, run_federated
+
+
+# ------------------------------------------------------------------ helpers
+def _random_instance(rng, num_clients, num_global=40, dim=8):
+    """Random heterogeneous federation: per-client entity subsets + tables."""
+    while True:
+        l2g = [
+            np.sort(
+                rng.choice(num_global, size=int(rng.integers(10, 28)), replace=False)
+            ).astype(np.int64)
+            for _ in range(num_clients)
+        ]
+        views = build_comm_views(l2g, num_global)
+        if all(v.num_shared >= 4 for v in views):
+            break
+    tables = [jnp.asarray(rng.normal(size=(len(l), dim)), jnp.float32) for l in l2g]
+    hist_tables = [
+        t + jnp.asarray(rng.normal(size=t.shape) * 0.5, jnp.float32) for t in tables
+    ]
+    return views, tables, hist_tables
+
+
+def _reference_round(tables, hists, views, p, tie_rng, codec):
+    """One sparse round through the numpy host protocol (simulation path)."""
+    uploads, new_hists = [], []
+    for t, h, v in zip(tables, hists, views):
+        up, hh = sparse_upload(t, h, v, p)
+        up = dataclasses.replace(
+            up, values=np.asarray(codec.roundtrip(jnp.asarray(up.values)), np.float32)
+        )
+        uploads.append(up)
+        new_hists.append(hh)
+    downs = personalized_aggregate(
+        uploads, [v.shared_global for v in views], p, tie_rng
+    )
+    out = []
+    for t, v, d in zip(tables, views, downs):
+        vals = d.agg_values
+        if len(d.entity_ids):
+            vals = np.asarray(codec.roundtrip(jnp.asarray(vals)), np.float32)
+        out.append(apply_sparse_download(t, v, d.entity_ids, vals, d.priority))
+    return out, new_hists, uploads, downs
+
+
+def _run_engine_round(views, tables, hist_tables, p, codec, num_global=40, dim=8):
+    engine = RoundEngine(views, num_global, dim, p, codec=codec)
+    emb_b = engine.gather(tables)
+    hist_b = engine.gather(hist_tables)
+    new_emb, new_hist, down_count = engine.sparse_round(emb_b, hist_b)
+    return engine, new_emb, new_hist, np.asarray(down_count)
+
+
+# --------------------------------------------------- sparse-round equivalence
+@pytest.mark.parametrize("num_clients", [2, 3, 5])
+@pytest.mark.parametrize("codec_cls", [IdentityCodec, Int8RowCodec])
+def test_engine_matches_reference_all_candidates(num_clients, codec_cls):
+    """p=1.0: tie-break-free, so heterogeneous instances agree exactly."""
+    rng = np.random.default_rng(17 * num_clients)
+    views, tables, hist_tables = _random_instance(rng, num_clients)
+    codec = codec_cls()
+    hists = [
+        jnp.asarray(np.asarray(h)[v.shared_local])
+        for h, v in zip(hist_tables, views)
+    ]
+    ref_tables, ref_hists, _, downs = _reference_round(
+        tables, hists, views, 1.0, np.random.default_rng(0), codec
+    )
+    _, new_emb, new_hist, down_count = _run_engine_round(
+        views, tables, hist_tables, 1.0, codec
+    )
+    for c, v in enumerate(views):
+        ns = v.num_shared
+        np.testing.assert_allclose(
+            np.asarray(new_emb[c, :ns]),
+            np.asarray(ref_tables[c])[v.shared_local],
+            atol=5e-4,
+        )
+        np.testing.assert_allclose(
+            np.asarray(new_hist[c, :ns]), np.asarray(ref_hists[c]), atol=1e-6
+        )
+        assert down_count[c] == len(downs[c].entity_ids)
+
+
+def test_engine_matches_reference_sparse_p_where_unambiguous():
+    """p<1: compare every client whose candidate count <= K_c."""
+    compared = 0
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        views, tables, hist_tables = _random_instance(rng, 3)
+        codec = IdentityCodec()
+        p = 0.5
+        hists = [
+            jnp.asarray(np.asarray(h)[v.shared_local])
+            for h, v in zip(hist_tables, views)
+        ]
+        ref_tables, _, uploads, downs = _reference_round(
+            tables, hists, views, p, np.random.default_rng(0), codec
+        )
+        engine, new_emb, _, down_count = _run_engine_round(
+            views, tables, hist_tables, p, codec
+        )
+        for c, v in enumerate(views):
+            peers = set()
+            for up in uploads:
+                if up.client_id != c:
+                    peers |= set(up.entity_ids.tolist())
+            n_cand = len(peers & set(v.shared_global.tolist()))
+            assert down_count[c] == len(downs[c].entity_ids)
+            if n_cand > int(engine.k_per_client[c]):
+                continue  # reference tie-break could pick different rows
+            compared += 1
+            ns = v.num_shared
+            np.testing.assert_allclose(
+                np.asarray(new_emb[c, :ns]),
+                np.asarray(ref_tables[c])[v.shared_local],
+                atol=5e-4,
+            )
+    assert compared >= 3, "construction produced too few unambiguous clients"
+
+
+def test_engine_two_identical_views_always_comparable():
+    """Two clients over the SAME entity set: candidates == K exactly, so any
+    sparsity is tie-break-free and the paths must agree."""
+    rng = np.random.default_rng(5)
+    l2g = [np.arange(20, dtype=np.int64), np.arange(20, dtype=np.int64)]
+    views = build_comm_views(l2g, 20)
+    tables = [jnp.asarray(rng.normal(size=(20, 8)), jnp.float32) for _ in range(2)]
+    hist_tables = [
+        t + jnp.asarray(rng.normal(size=t.shape) * 0.5, jnp.float32) for t in tables
+    ]
+    codec = IdentityCodec()
+    hists = [
+        jnp.asarray(np.asarray(h)[v.shared_local])
+        for h, v in zip(hist_tables, views)
+    ]
+    ref_tables, _, _, downs = _reference_round(
+        tables, hists, views, 0.3, np.random.default_rng(0), codec
+    )
+    _, new_emb, _, down_count = _run_engine_round(
+        views, tables, hist_tables, 0.3, codec, num_global=20
+    )
+    for c, v in enumerate(views):
+        assert down_count[c] == len(downs[c].entity_ids)
+        np.testing.assert_allclose(
+            np.asarray(new_emb[c, : v.num_shared]),
+            np.asarray(ref_tables[c])[v.shared_local],
+            atol=5e-4,
+        )
+
+
+# ------------------------------------------------------ sync-round semantics
+def test_engine_sync_round_is_fede_mean():
+    rng = np.random.default_rng(11)
+    views, tables, _ = _random_instance(rng, 3)
+    engine = RoundEngine(views, 40, 8, 0.4)
+    emb_b = engine.gather(tables)
+    new_emb, new_hist = engine.sync_round(emb_b)
+
+    uploads = [full_upload(t, v)[0] for t, v in zip(tables, views)]
+    mean, _ = fede_aggregate(uploads, 40)
+    for c, v in enumerate(views):
+        ref = apply_full_download(tables[c], v, mean)
+        np.testing.assert_allclose(
+            np.asarray(new_emb[c, : v.num_shared]),
+            np.asarray(ref)[v.shared_local],
+            atol=1e-5,
+        )
+    # history refreshes to the PRE-sync uploaded rows (full_upload semantics)
+    np.testing.assert_allclose(np.asarray(new_hist), np.asarray(emb_b), atol=0)
+
+
+# --------------------------------------------------- end-to-end ledger parity
+def test_run_federated_rejects_unknown_engine():
+    kg = generate_kg(num_entities=60, num_relations=4, num_triples=200, seed=0)
+    clients = partition_by_relation(kg, 2, seed=0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(rounds=1, dim=8, engine="numpy"),
+        )
+
+
+def test_run_federated_engine_vs_reference_ledger():
+    """The engine path must account communication identically to the numpy
+    path: same per-round ledger, both produce finite metrics."""
+    kg = generate_kg(num_entities=150, num_relations=9, num_triples=1200, seed=3)
+    clients = partition_by_relation(kg, 3, seed=0)
+    base = dict(
+        method="transe", dim=16, rounds=4, local_epochs=1, batch_size=64,
+        num_negatives=8, lr=5e-3, sparsity_p=0.4, sync_interval=2,
+        eval_every=2, max_eval_triples=40, seed=0,
+    )
+    for protocol in ("feds", "fedep"):
+        eng = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(protocol=protocol, engine="batched", **base),
+        )
+        ref = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(protocol=protocol, engine="reference", **base),
+        )
+        # round 1 is exactly parity (identical training state pre-comm); for
+        # fedep (no tie-breaks at all) every round matches.
+        assert eng.params_at(1) == ref.params_at(1), protocol
+        if protocol == "fedep":
+            assert eng.ledger.history == ref.ledger.history
+        assert np.isfinite(eng.test_mrr_cg) and np.isfinite(ref.test_mrr_cg)
+
+
+# ------------------------------------------------------------- SPMD = host
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.engine import RoundEngine, make_client_mesh
+from repro.core.protocol import build_comm_views
+
+rng = np.random.default_rng(0)
+E, D, C = 32, 8, 4
+l2g = [np.sort(rng.choice(E, size=int(rng.integers(10, 20)), replace=False)).astype(np.int64)
+       for _ in range(C)]
+views = build_comm_views(l2g, E)
+tables = [jnp.asarray(rng.normal(size=(len(l), D)), jnp.float32) for l in l2g]
+hist_tables = [t + jnp.asarray(rng.normal(size=t.shape) * 0.5, jnp.float32)
+               for t in tables]
+
+host = RoundEngine(views, E, D, 0.6)
+emb_b = host.gather(tables); hist_b = host.gather(hist_tables)
+h_emb, h_hist, h_dc = host.sparse_round(emb_b, hist_b)
+hs_emb, hs_hist = host.sync_round(emb_b)
+
+mesh = make_client_mesh(4, "clients")
+pod = RoundEngine(views, E, D, 0.6, mesh=mesh)
+p_emb, p_hist, p_dc = pod.sparse_round(emb_b, hist_b)
+ps_emb, ps_hist = pod.sync_round(emb_b)
+
+out = {
+    "emb": float(np.abs(np.asarray(h_emb) - np.asarray(p_emb)).max()),
+    "hist": float(np.abs(np.asarray(h_hist) - np.asarray(p_hist)).max()),
+    "dc": (np.asarray(h_dc) == np.asarray(p_dc)).all().item(),
+    "sync_emb": float(np.abs(np.asarray(hs_emb) - np.asarray(ps_emb)).max()),
+    "sync_hist": float(np.abs(np.asarray(hs_hist) - np.asarray(ps_hist)).max()),
+}
+print(json.dumps(out))
+"""
+
+
+def test_engine_spmd_matches_host():
+    """shard_map over the client axis == single-device jit, same engine."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _WORKER], capture_output=True, text=True,
+        env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["emb"] < 1e-5, out
+    assert out["hist"] == 0.0, out
+    assert out["dc"], out
+    assert out["sync_emb"] < 1e-5, out
+    assert out["sync_hist"] == 0.0, out
+
+
+def test_engine_heterogeneous_padding_rows_untouched():
+    """Padded rows must never change nor leak into aggregates."""
+    rng = np.random.default_rng(2)
+    views, tables, hist_tables = _random_instance(rng, 3)
+    engine = RoundEngine(views, 40, 8, 0.7)
+    emb_b = engine.gather(tables)
+    hist_b = engine.gather(hist_tables)
+    new_emb, new_hist, _ = engine.sparse_round(emb_b, hist_b)
+    for c, v in enumerate(views):
+        pad = np.asarray(new_emb[c, v.num_shared:])
+        np.testing.assert_array_equal(pad, 0.0)
+        np.testing.assert_array_equal(np.asarray(new_hist[c, v.num_shared:]), 0.0)
