@@ -1,0 +1,230 @@
+"""Microbenchmark: per-cycle latency of the three simulation engines.
+
+One full FedS *cycle* (``local_epochs`` of local training + one sparse
+communication round) at FB15k-237 scale (E=14541, D=256, C=3,
+local_epochs=3 by default; ``REPRO_BENCH_FAST=1`` shrinks to a smoke size).
+Three rows:
+
+* ``cycle.reference`` — per-client ``KGEClient.train_local`` (numpy batch
+  stacking per epoch + per-client jit) + the ragged numpy host protocol.
+* ``cycle.batched_per_round`` — the pre-PR ``engine="batched"`` simulation
+  path: ``train_local`` + RoundEngine with host gather/scatter of every
+  client's entity table and a per-round ``np.asarray(down_counts)`` ledger
+  sync — exactly what the simulation used to pay per round.
+* ``cycle.fused`` — the :class:`repro.core.state.CycleEngine` fused program
+  on device-resident :class:`FederationState`: batches pre-sampled on
+  device, train scan + communication round as ONE jit, zero per-round host
+  transfers of entity tables (down counts stay on device).
+
+Derived column: speedup vs ``cycle.batched_per_round`` (the acceptance bar
+is >= 1.5x at full scale).  ``--json PATH`` writes a machine-readable record
+(CI emits ``BENCH_cycle.json`` so the perf trajectory is tracked).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import personalized_aggregate
+from repro.core.codec import IdentityCodec
+from repro.core.engine import RoundEngine
+from repro.core.protocol import apply_sparse_download, build_comm_views, sparse_upload
+from repro.core.state import CycleEngine
+from repro.data.partition import ClientData
+from repro.federated.client import KGEClient
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+NUM_GLOBAL = 2000 if FAST else 14541  # FB15k-237 entity count
+DIM = 64 if FAST else 256  # paper dim
+NUM_CLIENTS = 3  # FB15k-237-R3
+LOCAL_EPOCHS = 3  # paper E
+SUBSET = 0.6  # per-client entity coverage
+SPARSITY = 0.4  # paper p
+TRIPLES = 512 if FAST else 1536  # per-client train triples
+BATCH = 128 if FAST else 512
+NEGATIVES = 8
+
+
+def _make_clients(rng):
+    """FB15k-scale stand-in: random entity subsets + random local triples.
+
+    The benchmark measures latency, not learning, so triples are uniform
+    random over each client's local id space (relations global, as in
+    ``partition_by_relation`` output)."""
+    num_rel = 12
+    datas = []
+    for c in range(NUM_CLIENTS):
+        l2g = np.sort(
+            rng.choice(NUM_GLOBAL, size=int(NUM_GLOBAL * SUBSET), replace=False)
+        ).astype(np.int32)
+        n_local = len(l2g)
+
+        def triples(n):
+            return np.stack(
+                [
+                    rng.integers(0, n_local, n),
+                    rng.integers(0, num_rel, n),
+                    rng.integers(0, n_local, n),
+                ],
+                axis=1,
+            ).astype(np.int32)
+
+        datas.append(
+            ClientData(
+                client_id=c,
+                train=triples(TRIPLES),
+                valid=triples(16),
+                test=triples(16),
+                local_to_global=l2g,
+                num_relations=num_rel,
+            )
+        )
+    clients = [
+        KGEClient(
+            d, method="transe", dim=DIM, batch_size=BATCH,
+            num_negatives=NEGATIVES, lr=1e-4, seed=0,
+        )
+        for d in datas
+    ]
+    views = build_comm_views([d.local_to_global for d in datas], NUM_GLOBAL)
+    return datas, clients, views
+
+
+def _reference_cycle(clients, views, hists, tie_rng):
+    for c in clients:
+        c.train_local(LOCAL_EPOCHS)
+    uploads = []
+    for c, v in zip(clients, views):
+        up, hh = sparse_upload(c.params["entity"], hists[v.client_id], v, SPARSITY)
+        hists[v.client_id] = hh
+        uploads.append(up)
+    downs = personalized_aggregate(
+        uploads, [v.shared_global for v in views], SPARSITY, tie_rng
+    )
+    for c, v, d in zip(clients, views, downs):
+        c.params["entity"] = apply_sparse_download(
+            c.params["entity"], v, d.entity_ids, d.agg_values, d.priority
+        )
+    jax.block_until_ready([c.params["entity"] for c in clients])
+
+
+def _legacy_batched_cycle(clients, engine, hist_box, jit_rng):
+    """The pre-PR engine="batched" simulation round, verbatim: host training
+    + gather/round/scatter host transfers + per-round ledger device sync."""
+    for c in clients:
+        c.train_local(LOCAL_EPOCHS)
+    emb_b = engine.gather([c.params["entity"] for c in clients])
+    jitter = jit_rng.random((len(clients), engine.ns_max))
+    emb_b, hist_box[0], down = engine.sparse_round(emb_b, hist_box[0], jitter)
+    new_tables = engine.scatter(emb_b, [c.params["entity"] for c in clients])
+    for c, tab in zip(clients, new_tables):
+        c.params["entity"] = tab
+    np.asarray(down)  # the old loop's per-round ledger flush forced this sync
+    jax.block_until_ready([c.params["entity"] for c in clients])
+
+
+def run(out=print):
+    rng = np.random.default_rng(0)
+    _, clients, views = _make_clients(rng)
+    ns = [v.num_shared for v in views]
+    out(
+        f"\n== fused cycle: {LOCAL_EPOCHS} local epochs + 1 sparse round, "
+        f"E={NUM_GLOBAL} D={DIM} C={NUM_CLIENTS} Ns={ns} "
+        f"T={TRIPLES} B={BATCH} N={NEGATIVES} p={SPARSITY} =="
+    )
+
+    # ---- reference: numpy host protocol
+    hists = [
+        jnp.asarray(np.asarray(c.params["entity"])[v.shared_local])
+        for c, v in zip(clients, views)
+    ]
+    _reference_cycle(clients, views, hists, np.random.default_rng(0))  # warm
+    iters_ref = 2 if FAST else 1
+    t0 = time.perf_counter()
+    for _ in range(iters_ref):
+        _reference_cycle(clients, views, hists, np.random.default_rng(0))
+    us_ref = (time.perf_counter() - t0) / iters_ref * 1e6
+
+    # ---- pre-PR batched path: host train_local + gather/round/scatter
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, SPARSITY, codec=IdentityCodec())
+    hist_box = [engine.gather([c.params["entity"] for c in clients])]
+    jit_rng = np.random.default_rng(1)
+    _legacy_batched_cycle(clients, engine, hist_box, jit_rng)  # warm
+    iters = 5 if FAST else 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _legacy_batched_cycle(clients, engine, hist_box, jit_rng)
+    us_legacy = (time.perf_counter() - t0) / iters * 1e6
+
+    # ---- fused cycle on device-resident FederationState
+    cycle = CycleEngine(
+        clients, views, NUM_GLOBAL, sparsity_p=SPARSITY,
+        local_epochs=LOCAL_EPOCHS,
+    )
+    state = cycle.init_state(clients, seed=0)
+    state, down, _ = cycle.fused_cycle(state, sync=False)  # warm/compile
+    jax.block_until_ready(state.arrays.params["entity"])
+    downs = []
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, down, _ = cycle.fused_cycle(state, sync=False)
+        downs.append(down)  # stays on device — flushed only at eval bounds
+        jax.block_until_ready(state.arrays.params["entity"])
+    us_fused = (time.perf_counter() - t0) / iters * 1e6
+    np.asarray(jnp.stack(downs))  # eval-boundary flush (outside the timing)
+
+    rows = [
+        ("cycle.reference", us_ref, f"{us_legacy / us_ref:.2f}x"),
+        ("cycle.batched_per_round", us_legacy, "1.00x"),
+        ("cycle.fused", us_fused, f"{us_legacy / us_fused:.2f}x"),
+    ]
+    for name, us, derived in rows:
+        out(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def check_claims(rows):
+    by = {r[0]: r[1] for r in rows}
+    speedup = by["cycle.batched_per_round"] / by["cycle.fused"]
+    ok = speedup >= 1.5
+    return [
+        f"[{'PASS' if ok else 'WARN'}] fused cycle {speedup:.2f}x vs per-round "
+        f"batched path (expect >=1.5x; zero per-round entity-table host "
+        f"transfers by construction)"
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write a JSON record here")
+    args = ap.parse_args()
+    rows = run()
+    claims = check_claims(rows)
+    for c in claims:
+        print(c)
+    if args.json:
+        rec = {
+            "bench": "fused_cycle",
+            "fast": FAST,
+            "config": {
+                "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,
+                "local_epochs": LOCAL_EPOCHS, "triples": TRIPLES,
+                "batch": BATCH, "negatives": NEGATIVES, "sparsity": SPARSITY,
+            },
+            "us_per_cycle": {name: us for name, us, _ in rows},
+            "speedup_fused_vs_batched": rows[1][1] / rows[2][1],
+            "claims": claims,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,engine,table1,table2,table3,"
+                    help="comma list: kernels,engine,cycle,table1,table2,table3,"
                          "table4,table5,table6,fig2,sweep,q8,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -38,6 +38,13 @@ def main() -> None:
         rows = engine_round.run()
         csv_rows += [tuple(r) for r in rows]
         claims += engine_round.check_claims(rows)
+
+    if want("cycle"):
+        from benchmarks import fused_cycle
+
+        rows = fused_cycle.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += fused_cycle.check_claims(rows)
 
     suites = [
         ("table1", "table1_compression"),

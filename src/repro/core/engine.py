@@ -107,8 +107,28 @@ def downstream_sign(
 
 
 # --------------------------------------------------------------------------
+def build_padded_views(views: Sequence, num_global: int, sparsity_p: float):
+    """Static padded buffers shared by RoundEngine and the fused CycleEngine.
+
+    Returns ``(gid, valid, k_per_client, ns_max, k_max)`` as numpy arrays /
+    ints; ``gid`` padding slots hold ``num_global`` (the round functions treat
+    it as a throwaway aggregation segment).
+    """
+    ns = [v.num_shared for v in views]
+    ns_max = max(1, max(ns, default=0))
+    k_per_client = np.asarray([sparsity_k(n, sparsity_p) for n in ns], np.int32)
+    k_max = max(1, int(k_per_client.max(initial=0)))
+    gid = np.full((len(views), ns_max), num_global, np.int32)
+    valid = np.zeros((len(views), ns_max), bool)
+    for c, v in enumerate(views):
+        gid[c, : v.num_shared] = v.shared_global
+        valid[c, : v.num_shared] = True
+    return gid, valid, k_per_client, ns_max, k_max
+
+
+# --------------------------------------------------------------------------
 # the batched round (runs plain-jit on host, or per-shard under shard_map)
-def _batched_sparse_round(
+def batched_sparse_round(
     emb: jnp.ndarray,  # (C_local, Ns_max, D) shared-entity rows
     hist: jnp.ndarray,  # (C_local, Ns_max, D) upload history
     gid: jnp.ndarray,  # (C_local, Ns_max) global entity id; padding -> num_global
@@ -189,7 +209,7 @@ def _batched_sparse_round(
     return new_emb, new_hist, down_count
 
 
-def _batched_sync_round(
+def batched_sync_round(
     emb: jnp.ndarray,  # (C_local, Ns_max, D)
     gid: jnp.ndarray,
     valid: jnp.ndarray,
@@ -245,29 +265,20 @@ class RoundEngine:
         self.dim = int(dim)
         self.codec = codec if codec is not None else IdentityCodec()
         self.num_clients = len(self.views)
-        ns = [v.num_shared for v in self.views]
-        self.ns_max = max(1, max(ns, default=0))
-        self.k_per_client = np.asarray(
-            [sparsity_k(n, sparsity_p) for n in ns], np.int32
+        gid, valid, self.k_per_client, self.ns_max, self.k_max = build_padded_views(
+            self.views, self.num_global, sparsity_p
         )
-        self.k_max = max(1, int(self.k_per_client.max(initial=0)))
-
-        gid = np.full((self.num_clients, self.ns_max), self.num_global, np.int32)
-        valid = np.zeros((self.num_clients, self.ns_max), bool)
-        for c, v in enumerate(self.views):
-            gid[c, : v.num_shared] = v.shared_global
-            valid[c, : v.num_shared] = True
         self._gid = jnp.asarray(gid)
         self._valid = jnp.asarray(valid)
         self._k = jnp.asarray(self.k_per_client)
 
         axis = axis_name if mesh is not None else None
         sparse_core = functools.partial(
-            _batched_sparse_round, k_max=self.k_max, num_global=self.num_global,
+            batched_sparse_round, k_max=self.k_max, num_global=self.num_global,
             codec=self.codec, axis_name=axis,
         )
         sync_core = functools.partial(
-            _batched_sync_round, num_global=self.num_global, axis_name=axis,
+            batched_sync_round, num_global=self.num_global, axis_name=axis,
         )
         if mesh is None:
             self._sparse = jax.jit(sparse_core)

@@ -1,0 +1,545 @@
+"""Device-resident federation state and the fused train+communicate cycle.
+
+:class:`repro.core.engine.RoundEngine` (PR 1) made the FedS communication
+round one compiled program, but the simulation still paid host costs every
+round: each client's entity table was gathered/scattered through numpy, and
+local training re-stacked numpy batches per epoch in front of a per-client
+jit.  This module removes both:
+
+* :class:`FederationState` holds the WHOLE federation on device across
+  rounds — padded ``(C, E_max, D)`` entity tables, ``(C, R, Rd)`` relation
+  tables, the stacked Adam state, the ``(C, Ns_max, D)`` upload history, and
+  a threaded ``jax.random`` key (replacing the host-side numpy jitter RNG).
+  It is built once from the per-client state and only scattered back to the
+  clients at eval/snapshot boundaries (:meth:`CycleEngine.sync_clients`).
+* :class:`CycleEngine` compiles one *cycle* — ``local_epochs`` of the
+  training ``lax.scan`` with all batches pre-sampled on device, followed by
+  the FedS sparse/sync round of :mod:`repro.core.engine` — as ONE ``jax.jit``
+  program (host) or one ``shard_map`` program over the client axis (pod).
+
+Client heterogeneity is expressed with static shapes throughout: triples are
+padded to ``T_max`` (samplers draw indices below the true count), batches to
+``B_max`` with zero-weight rows in the loss, scan steps to
+``local_epochs * S_max`` with pass-through optimizer steps
+(:func:`repro.train.optimizer.masked_adam_update`), and shared-entity rows to
+``Ns_max`` exactly as in the round engine.
+
+The per-round oracle path (``engine="batched"`` in the simulation) runs the
+SAME ``train_core`` / ``comm_core`` functions as two separate jits per round,
+so the property tests can assert that fusing them into one program changes
+nothing (same seeds -> same eval trajectory and ledger totals).  See
+EXPERIMENTS.md §Cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import TYPE_CHECKING, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codec import IdentityCodec, WireCodec
+from repro.core.engine import (
+    batched_sparse_round,
+    batched_sync_round,
+    build_padded_views,
+    shard_map,
+)
+from repro.data.loader import stack_padded_triples
+from repro.kge.scoring import get_score_fn, loss_from_scores, per_sample_losses
+from repro.train.optimizer import AdamState, adam_update, masked_adam_update
+
+if TYPE_CHECKING:  # core never imports federated at runtime (layering)
+    from repro.federated.client import KGEClient
+
+
+class StateArrays(NamedTuple):
+    """Device-resident pytree; every leaf leads with the client axis, so one
+    ``PartitionSpec('clients')`` prefix shards the whole bundle."""
+
+    params: dict  # {"entity": (C, E_max, D), "relation": (C, R, Rd)}
+    opt: AdamState  # step (C,), mu/nu mirroring params
+    hist: jnp.ndarray  # (C, Ns_max, D) upload history of shared rows
+
+
+class CycleConsts(NamedTuple):
+    """Static per-federation device constants.
+
+    Client-axis leading like the state, and passed as explicit program
+    arguments (NOT closed over) so ``shard_map`` slices them per shard."""
+
+    cids: jnp.ndarray  # (C,) global client index, for per-client key folding
+    triples: jnp.ndarray  # (C, T_max, 3) padded local training triples
+    num_train: jnp.ndarray  # (C,) true triple counts
+    num_ent: jnp.ndarray  # (C,) local entity counts (negative-sampling bound)
+    sample_w: jnp.ndarray  # (C, B_max) f32 0/1 padded-batch-row weights
+    step_mask: jnp.ndarray  # (C, L) valid scan steps
+    gather_idx: jnp.ndarray  # (C, Ns_max) local row per shared slot (0 padded)
+    scatter_idx: jnp.ndarray  # (C, Ns_max) same, E_max sentinel on padding
+    gid: jnp.ndarray  # (C, Ns_max) global entity ids (num_global padded)
+    valid: jnp.ndarray  # (C, Ns_max) shared-slot validity
+    k: jnp.ndarray  # (C,) per-client upstream/downstream K
+
+
+@dataclasses.dataclass
+class FederationState:
+    """The whole federation, on device, between host touch-points."""
+
+    arrays: StateArrays
+    key: jax.Array  # threaded PRNG key: one 3-way split per cycle
+
+
+class CycleEngine:
+    """Compiled train+communicate cycles over :class:`FederationState`.
+
+    Built once per federation from the clients (hyper-parameters must be
+    homogeneous).  ``mesh=None`` compiles single-device jits; with a 1-D mesh
+    the same programs run under ``shard_map`` over the client axis (C must be
+    divisible by the mesh size), the only collective being the round's
+    all-gather / psum.
+    """
+
+    def __init__(
+        self,
+        clients: Sequence["KGEClient"],
+        views: Sequence,  # list[repro.core.protocol.ClientCommView]
+        num_global_entities: int,
+        *,
+        sparsity_p: float,
+        local_epochs: int,
+        codec: Optional[WireCodec] = None,
+        mesh=None,
+        axis_name: str = "clients",
+    ):
+        self.views = list(views)
+        self.num_global = int(num_global_entities)
+        self.num_clients = len(clients)
+        if self.num_clients != len(self.views):
+            raise ValueError("one comm view per client required")
+        c0 = clients[0]
+        self.method = c0.method
+        self.gamma = float(c0.gamma)
+        self.lr = float(c0.lr)
+        self.temp = float(c0.temp)
+        self.dim = int(c0.model.dim)
+        self.rel_dim = int(c0.model.rel_dim)
+        self.num_relations = int(c0.model.num_relations)
+        self.local_epochs = int(local_epochs)
+        self.num_negatives = int(c0.loader.num_negatives)
+        self.codec = codec if codec is not None else IdentityCodec()
+        for c in clients:
+            if (
+                c.method != self.method
+                or c.model.dim != self.dim
+                or c.model.num_relations != self.num_relations
+                or c.loader.num_negatives != self.num_negatives
+                or (float(c.gamma), float(c.lr), float(c.temp))
+                != (self.gamma, self.lr, self.temp)
+            ):
+                raise ValueError(
+                    "CycleEngine requires homogeneous model/loader hyper-parameters"
+                )
+
+        gid, valid, self.k_per_client, self.ns_max, self.k_max = build_padded_views(
+            self.views, self.num_global, sparsity_p
+        )
+
+        self.num_entities = np.asarray(
+            [c.model.num_entities for c in clients], np.int32
+        )
+        self.e_max = int(self.num_entities.max())
+        triples, counts = stack_padded_triples([c.data.train for c in clients])
+        batch_sizes = np.asarray([c.loader.batch_size for c in clients], np.int32)
+        steps = np.asarray([c.loader.batches_per_epoch for c in clients], np.int32)
+        self.b_max = int(batch_sizes.max())
+        self.s_max = int(steps.max())
+        self.scan_len = self.local_epochs * self.s_max
+        sample_w = (
+            np.arange(self.b_max)[None, :] < batch_sizes[:, None]
+        ).astype(np.float32)
+        # step i of the flattened epochs*S_max scan belongs to epoch-position
+        # i % S_max; clients with fewer batches-per-epoch pass through.
+        step_mask = (
+            np.tile(np.arange(self.s_max), self.local_epochs)[None, :]
+            < steps[:, None]
+        )
+        # Static fast paths: when every client has the same batches-per-epoch
+        # (resp. batch size) the masks are all-ones and the per-step
+        # pass-through selects / per-sample weights — full-table-sized
+        # ``where``s — are dead weight, so they are compiled out entirely.
+        self._uniform_steps = bool(step_mask.all())
+        self._uniform_batches = bool((sample_w == 1.0).all())
+        gather_idx = np.zeros((self.num_clients, self.ns_max), np.int32)
+        scatter_idx = np.full((self.num_clients, self.ns_max), self.e_max, np.int32)
+        for c, v in enumerate(self.views):
+            gather_idx[c, : v.num_shared] = v.shared_local
+            scatter_idx[c, : v.num_shared] = v.shared_local
+        self.consts = CycleConsts(
+            cids=jnp.arange(self.num_clients, dtype=jnp.int32),
+            triples=jnp.asarray(triples),
+            num_train=jnp.asarray(counts),
+            num_ent=jnp.asarray(self.num_entities),
+            sample_w=jnp.asarray(sample_w),
+            step_mask=jnp.asarray(step_mask),
+            gather_idx=jnp.asarray(gather_idx),
+            scatter_idx=jnp.asarray(scatter_idx),
+            gid=jnp.asarray(gid),
+            valid=jnp.asarray(valid),
+            k=jnp.asarray(self.k_per_client),
+        )
+
+        self._axis = axis_name if mesh is not None else None
+        train_core = self._make_train_core()
+        comm_core = self._make_comm_core()
+
+        def comm_sparse(arrays, jitter, consts):
+            return comm_core(arrays, jitter, consts, do_sync=False)
+
+        def comm_sync(arrays, consts):
+            return comm_core(arrays, None, consts, do_sync=True)
+
+        def fused(arrays, kb, kj, consts, do_sync):
+            arrays, jitter, loss = train_core(arrays, kb, kj, consts)
+            arrays, down = comm_core(arrays, jitter, consts, do_sync=do_sync)
+            return arrays, down, loss
+
+        fused_sparse = functools.partial(fused, do_sync=False)
+        fused_sync = functools.partial(fused, do_sync=True)
+
+        if mesh is None:
+            # State flows linearly cycle-to-cycle, so the big resident
+            # buffers (entity tables, Adam moments, history) are donated —
+            # XLA updates them in place instead of allocating fresh ones.
+            self._train = jax.jit(train_core, donate_argnums=(0,))
+            self._comm_sparse = jax.jit(comm_sparse, donate_argnums=(0,))
+            self._comm_sync = jax.jit(comm_sync, donate_argnums=(0,))
+            self._fused_sparse = jax.jit(fused_sparse, donate_argnums=(0,))
+            self._fused_sync = jax.jit(fused_sync, donate_argnums=(0,))
+        else:
+            if self.num_clients % mesh.devices.size != 0:
+                raise ValueError(
+                    f"{self.num_clients} clients not divisible by "
+                    f"{mesh.devices.size} mesh devices"
+                )
+            p = jax.sharding.PartitionSpec(axis_name)
+            r = jax.sharding.PartitionSpec()
+            self._train = jax.jit(shard_map(
+                train_core, mesh=mesh, in_specs=(p, r, r, p), out_specs=(p, p, p),
+            ), donate_argnums=(0,))
+            self._comm_sparse = jax.jit(shard_map(
+                comm_sparse, mesh=mesh, in_specs=(p, p, p), out_specs=(p, p),
+            ), donate_argnums=(0,))
+            self._comm_sync = jax.jit(shard_map(
+                comm_sync, mesh=mesh, in_specs=(p, p), out_specs=(p, p),
+            ), donate_argnums=(0,))
+            self._fused_sparse = jax.jit(shard_map(
+                fused_sparse, mesh=mesh, in_specs=(p, r, r, p),
+                out_specs=(p, p, p),
+            ), donate_argnums=(0,))
+            self._fused_sync = jax.jit(shard_map(
+                fused_sync, mesh=mesh, in_specs=(p, r, r, p),
+                out_specs=(p, p, p),
+            ), donate_argnums=(0,))
+
+    # ------------------------------------------------------- program bodies
+    def _make_train_core(self):
+        scan_len, b_max, n_neg = self.scan_len, self.b_max, self.num_negatives
+        method, gamma, lr, temp = self.method, self.gamma, self.lr, self.temp
+        ns_max = self.ns_max
+        uniform_steps = self._uniform_steps
+        uniform_batches = self._uniform_batches
+
+        def sample_one(cid, tri, t_c, e_c, kb):
+            """Pre-sample the whole cycle's batches for one client on device."""
+            kc = jax.random.fold_in(kb, cid)
+            pi = jax.random.randint(
+                jax.random.fold_in(kc, 1), (scan_len, b_max), 0, t_c
+            )
+            pos = jnp.take(tri, pi, axis=0)  # (L, B, 3)
+            neg_t = jax.random.randint(
+                jax.random.fold_in(kc, 2), (scan_len, b_max, n_neg), 0, e_c
+            )
+            neg_h = jax.random.randint(
+                jax.random.fold_in(kc, 3), (scan_len, b_max, n_neg), 0, e_c
+            )
+            return pos, neg_t, neg_h
+
+        score = get_score_fn(self.method)
+
+        def scores_of(rows, rel, cb):
+            """Scores from ONE gathered row block ``[h; t; neg_t; neg_h]``."""
+            h_e, t_e = rows[:cb], rows[cb : 2 * cb]
+            nt_e = rows[2 * cb : (2 + n_neg) * cb].reshape(cb, n_neg, -1)
+            nh_e = rows[(2 + n_neg) * cb :].reshape(cb, n_neg, -1)
+            pos_score = score(h_e, rel, t_e, gamma)
+            neg_t_score = score(h_e[:, None, :], rel[:, None, :], nt_e, gamma)
+            neg_h_score = score(nh_e, rel[:, None, :], t_e[:, None, :], gamma)
+            return pos_score, jnp.concatenate([neg_t_score, neg_h_score], -1)
+
+        # Both trainers below compute gradients with respect to the GATHERED
+        # rows and scatter-add the cotangents back ONCE: differentiating the
+        # table-indexing loss directly materializes a dense (E, D) cotangent
+        # per gather (six of them), which at FB15k scale costs ~20x the batch
+        # math itself.  Same gradient, summation order aside.
+
+        # ---- flat fast path: the client axis folds into the row axis, so
+        # every gather/scatter is a fast single-level op (a batched scatter
+        # under vmap falls off XLA:CPU's fast path).  Valid whenever all
+        # clients share batches-per-epoch; per-client Adam bias correction
+        # then reduces to one shared step count (taken from client 0, all
+        # equal by construction).
+        def train_flat(params, opt, pos, neg_t, neg_h, s_w):
+            c_n, e_m, d = params["entity"].shape
+            r_n, r_d = params["relation"].shape[1:]
+            cb = c_n * b_max
+            flat = lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])  # noqa: E731
+            params_f = jax.tree.map(flat, params)
+            opt_f = AdamState(
+                step=opt.step[0],
+                mu=jax.tree.map(flat, opt.mu),
+                nu=jax.tree.map(flat, opt.nu),
+            )
+            eoff = jnp.arange(c_n, dtype=jnp.int32) * e_m
+            roff = jnp.arange(c_n, dtype=jnp.int32) * r_n
+            # objective = sum over clients of each client's (weighted) mean
+            # loss — cross-client gradients are disjoint, so one backward
+            # pass yields every client's own-mean gradient.
+            if uniform_batches:
+                wn = jnp.full((c_n, b_max), 1.0 / b_max, jnp.float32)
+            else:
+                wn = s_w / jnp.maximum(s_w.sum(axis=1, keepdims=True), 1.0)
+
+            def step_fn(carry, x):
+                params_f, opt_f = carry
+                p, nt, nh = x  # (C, B, 3), (C, B, N)
+                h = (p[:, :, 0] + eoff[:, None]).reshape(-1)
+                t = (p[:, :, 2] + eoff[:, None]).reshape(-1)
+                r = (p[:, :, 1] + roff[:, None]).reshape(-1)
+                ntf = (nt + eoff[:, None, None]).reshape(-1)
+                nhf = (nh + eoff[:, None, None]).reshape(-1)
+                idx = jnp.concatenate([h, t, ntf, nhf])
+
+                def loss_fn(rows, rel):
+                    pos_s, neg_s = scores_of(rows, rel, cb)
+                    per = per_sample_losses(pos_s, neg_s, method, temp)
+                    loss_c = (per.reshape(c_n, b_max) * wn).sum(axis=1) / 2.0
+                    return loss_c.sum(), loss_c
+
+                (_, loss_c), (g_rows, g_rel) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True
+                )(params_f["entity"][idx], params_f["relation"][r])
+                grads = {
+                    "entity": jnp.zeros_like(params_f["entity"]).at[idx].add(g_rows),
+                    "relation": jnp.zeros_like(params_f["relation"]).at[r].add(g_rel),
+                }
+                params_f, opt_f = adam_update(grads, opt_f, params_f, lr)
+                return (params_f, opt_f), loss_c
+
+            (params_f, opt_f), losses = jax.lax.scan(
+                step_fn, (params_f, opt_f),
+                (jnp.moveaxis(pos, 0, 1), jnp.moveaxis(neg_t, 0, 1),
+                 jnp.moveaxis(neg_h, 0, 1)),
+            )
+            params = {
+                "entity": params_f["entity"].reshape(c_n, e_m, d),
+                "relation": params_f["relation"].reshape(c_n, r_n, r_d),
+            }
+            unflat = lambda t_: {  # noqa: E731
+                "entity": t_["entity"].reshape(c_n, e_m, d),
+                "relation": t_["relation"].reshape(c_n, r_n, r_d),
+            }
+            new_opt = AdamState(
+                step=jnp.broadcast_to(opt_f.step, (c_n,)),
+                mu=unflat(opt_f.mu),
+                nu=unflat(opt_f.nu),
+            )
+            return params, new_opt, losses.mean(axis=0)
+
+        # ---- heterogeneous fallback: vmap over clients with masked steps
+        def batch_grads(params, p, nt, nh, weight):
+            ent, rel_tab = params["entity"], params["relation"]
+            h, r, t = p[:, 0], p[:, 1], p[:, 2]
+            idx = jnp.concatenate([h, t, nt.reshape(-1), nh.reshape(-1)])
+
+            def loss_fn(rows, rel):
+                pos_s, neg_s = scores_of(rows, rel, b_max)
+                return loss_from_scores(pos_s, neg_s, method, temp, weight)
+
+            loss, (g_rows, g_rel) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                ent[idx], rel_tab[r]
+            )
+            grads = {
+                "entity": jnp.zeros_like(ent).at[idx].add(g_rows),
+                "relation": jnp.zeros_like(rel_tab).at[r].add(g_rel),
+            }
+            return loss, grads
+
+        def train_one(params, opt, pos, neg_t, neg_h, s_w, s_mask):
+            weight = None if uniform_batches else s_w
+
+            def step(carry, x):
+                params, opt = carry
+                p, nt, nh, ok = x
+                loss, grads = batch_grads(params, p, nt, nh, weight)
+                params, opt = masked_adam_update(grads, opt, params, lr, ok)
+                return (params, opt), jnp.where(ok, loss, 0.0)
+
+            (params, opt), losses = jax.lax.scan(
+                step, (params, opt), (pos, neg_t, neg_h, s_mask)
+            )
+            mean_loss = losses.sum() / jnp.maximum(s_mask.sum(), 1)
+            return params, opt, mean_loss
+
+        def train_core(arrays, kb, kj, consts):
+            pos, neg_t, neg_h = jax.vmap(sample_one, in_axes=(0, 0, 0, 0, None))(
+                consts.cids, consts.triples, consts.num_train, consts.num_ent, kb
+            )
+            if uniform_steps:
+                params, opt, loss = train_flat(
+                    arrays.params, arrays.opt, pos, neg_t, neg_h, consts.sample_w
+                )
+            else:
+                params, opt, loss = jax.vmap(train_one)(
+                    arrays.params, arrays.opt, pos, neg_t, neg_h,
+                    consts.sample_w, consts.step_mask,
+                )
+            # Downstream tie-break jitter for the round that follows; computed
+            # here so the per-round oracle consumes bit-identical noise.
+            jitter = jax.vmap(
+                lambda cid: jax.random.uniform(jax.random.fold_in(kj, cid), (ns_max,))
+            )(consts.cids)
+            return StateArrays(params, opt, arrays.hist), jitter, loss
+
+        return train_core
+
+    def _make_comm_core(self):
+        k_max, num_global = self.k_max, self.num_global
+        codec, axis = self.codec, self._axis
+
+        def comm_core(arrays, jitter, consts, do_sync):
+            ent = arrays.params["entity"]
+            # device-side gather of shared rows; padding slots zeroed exactly
+            # like RoundEngine.gather so the round functions see identical
+            # inputs to the per-round engine path
+            emb = jnp.take_along_axis(ent, consts.gather_idx[:, :, None], axis=1)
+            emb = jnp.where(consts.valid[:, :, None], emb, 0.0)
+            if do_sync:
+                rows, hist = batched_sync_round(
+                    emb, consts.gid, consts.valid,
+                    num_global=num_global, axis_name=axis,
+                )
+                down = jnp.zeros((emb.shape[0],), jnp.int32)
+            else:
+                # halve after the f32 cast (mirrors RoundEngine.sparse_round)
+                j = jnp.asarray(jitter, jnp.float32) * 0.5
+                rows, hist, down = batched_sparse_round(
+                    emb, arrays.hist, consts.gid, consts.valid, consts.k, j,
+                    k_max=k_max, num_global=num_global, codec=codec,
+                    axis_name=axis,
+                )
+            ent = jax.vmap(lambda t, i, r: t.at[i].set(r, mode="drop"))(
+                ent, consts.scatter_idx, rows
+            )
+            params = dict(arrays.params, entity=ent)
+            return StateArrays(params, arrays.opt, hist), down
+
+        return comm_core
+
+    # ------------------------------------------------------- state plumbing
+    def init_state(self, clients: Sequence["KGEClient"], seed: int = 0) -> FederationState:
+        """Stack per-client params / optimizer state into padded device arrays."""
+        c_n, e_m, d = self.num_clients, self.e_max, self.dim
+        ent = np.zeros((c_n, e_m, d), np.float32)
+        rel = np.zeros((c_n, self.num_relations, self.rel_dim), np.float32)
+        mu_e, nu_e = np.zeros_like(ent), np.zeros_like(ent)
+        mu_r, nu_r = np.zeros_like(rel), np.zeros_like(rel)
+        step = np.zeros((c_n,), np.int32)
+        hist = np.zeros((c_n, self.ns_max, d), np.float32)
+        for c, cl in enumerate(clients):
+            n = cl.model.num_entities
+            ent[c, :n] = np.asarray(cl.params["entity"], np.float32)
+            rel[c] = np.asarray(cl.params["relation"], np.float32)
+            step[c] = int(cl.opt_state.step)
+            mu_e[c, :n] = np.asarray(cl.opt_state.mu["entity"], np.float32)
+            nu_e[c, :n] = np.asarray(cl.opt_state.nu["entity"], np.float32)
+            mu_r[c] = np.asarray(cl.opt_state.mu["relation"], np.float32)
+            nu_r[c] = np.asarray(cl.opt_state.nu["relation"], np.float32)
+            v = self.views[c]
+            if v.num_shared:
+                hist[c, : v.num_shared] = ent[c][v.shared_local]
+        if self._uniform_steps and len(set(step.tolist())) > 1:
+            # the flat trainer shares one Adam step count across clients
+            # (valid because equal batches-per-epoch keeps them in lockstep);
+            # clients arriving with unequal counts would silently get client
+            # 0's bias correction.
+            raise ValueError(
+                "clients have unequal Adam step counts "
+                f"({step.tolist()}); the flat trainer requires lockstep steps"
+            )
+        arrays = StateArrays(
+            params={"entity": jnp.asarray(ent), "relation": jnp.asarray(rel)},
+            opt=AdamState(
+                step=jnp.asarray(step),
+                mu={"entity": jnp.asarray(mu_e), "relation": jnp.asarray(mu_r)},
+                nu={"entity": jnp.asarray(nu_e), "relation": jnp.asarray(nu_r)},
+            ),
+            hist=jnp.asarray(hist),
+        )
+        return FederationState(arrays=arrays, key=jax.random.PRNGKey(seed))
+
+    def sync_clients(self, state: FederationState, clients: Sequence["KGEClient"]) -> None:
+        """Scatter the device-resident tables back into per-client params.
+
+        The ONLY host transfer of entity tables in the fused/batched paths —
+        called at eval/snapshot boundaries, never per round.  Optimizer state
+        stays on device (clients' own opt_state is not consulted again after
+        ``init_state``).
+        """
+        ent = np.asarray(state.arrays.params["entity"])
+        rel = np.asarray(state.arrays.params["relation"])
+        for c, cl in enumerate(clients):
+            n = cl.model.num_entities
+            cl.params = {
+                "entity": jnp.asarray(ent[c, :n]),
+                "relation": jnp.asarray(rel[c]),
+            }
+
+    # --------------------------------------------------------------- cycles
+    @staticmethod
+    def _advance(key):
+        key, kb, kj = jax.random.split(key, 3)
+        return key, kb, kj
+
+    def train_cycle(self, state: FederationState):
+        """``local_epochs`` of device training.  Returns (state', jitter, loss).
+
+        Used by the ``engine="batched"`` oracle (followed by
+        :meth:`comm_round`) and by the no-communication ``single`` protocol;
+        the jitter output feeds the sparse round so the two-program path
+        consumes the same random stream as the fused program.
+        """
+        key, kb, kj = self._advance(state.key)
+        arrays, jitter, loss = self._train(state.arrays, kb, kj, self.consts)
+        return FederationState(arrays, key), jitter, loss
+
+    def comm_round(self, state: FederationState, jitter, sync: bool):
+        """One communication round on resident state.  Returns (state', down)."""
+        if sync:
+            arrays, down = self._comm_sync(state.arrays, self.consts)
+        else:
+            arrays, down = self._comm_sparse(state.arrays, jitter, self.consts)
+        return FederationState(arrays, state.key), down
+
+    def fused_cycle(self, state: FederationState, sync: bool):
+        """One fused train+communicate cycle as a single compiled program.
+
+        Returns ``(state', down_count (C,) device array, loss (C,))`` — the
+        down counts stay on device so the caller can defer ledger accounting
+        to eval boundaries.
+        """
+        key, kb, kj = self._advance(state.key)
+        fn = self._fused_sync if sync else self._fused_sparse
+        arrays, down, loss = fn(state.arrays, kb, kj, self.consts)
+        return FederationState(arrays, key), down, loss

@@ -27,6 +27,28 @@ def sample_negatives(
     return neg_t, neg_h
 
 
+def stack_padded_triples(
+    triple_arrays: "list[np.ndarray]",
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged per-client ``(T_c, 3)`` triples into ``(C, T_max, 3)``.
+
+    Returns ``(padded, counts)``.  Padding rows are zeros — a structurally
+    valid ``(h=0, r=0, t=0)`` triple — but device-side samplers draw indices
+    in ``[0, counts[c])`` so padding is never selected; keeping it in-range
+    means a mis-sampled index can never read out of bounds.  Used by
+    :class:`repro.core.state.CycleEngine` to pre-sample whole-cycle batches
+    on device.
+    """
+    c = len(triple_arrays)
+    t_max = max(1, max(int(t.shape[0]) for t in triple_arrays))
+    padded = np.zeros((c, t_max, 3), np.int32)
+    counts = np.zeros((c,), np.int32)
+    for i, t in enumerate(triple_arrays):
+        padded[i, : t.shape[0]] = t
+        counts[i] = t.shape[0]
+    return padded, counts
+
+
 class TripleLoader:
     """Infinite shuffled batch iterator over a triple array (static shapes).
 

@@ -113,6 +113,13 @@ class KGEClient:
         for h, r, t in all_triples.tolist():
             self._known.setdefault(("t", h, r), set()).add(t)
             self._known.setdefault(("h", r, t), set()).add(h)
+        # Per-split filter-mask cache: rebuilding dense (B, E) masks from
+        # python sets on every evaluate() call dominated the eval hot loop.
+        # Built lazily on first evaluate() and capped at the requested triple
+        # count, so clients that never evaluate (or only evaluate a few
+        # hundred rows of a large split) pay neither the build time nor the
+        # resident memory.  Maps split -> (n_rows, tail_masks, head_masks).
+        self._filter_cache: dict = {}
 
     # ----------------------------------------------------------- training
     def train_local(self, epochs: int) -> float:
@@ -168,11 +175,16 @@ class KGEClient:
         triples = getattr(self.data, split)[:max_triples]
         if triples.shape[0] == 0:
             return {"mrr": 0.0, "hits10": 0.0, "count": 0}
+        cached = self._filter_cache.get(split)
+        if cached is None or cached[0] < triples.shape[0]:
+            cached = (triples.shape[0], *self._filters(triples))
+            self._filter_cache[split] = cached
+        ft_all, fh_all = cached[1][: triples.shape[0]], cached[2][: triples.shape[0]]
         ranks = []
         bs = 256
         for i in range(0, triples.shape[0], bs):
             chunk = triples[i : i + bs]
-            ft, fh = self._filters(chunk)
+            ft, fh = ft_all[i : i + bs], fh_all[i : i + bs]
             rt, rh = _rank_batch(
                 self.params,
                 jnp.asarray(chunk),

@@ -1,17 +1,28 @@
 """The federated training simulation loop (paper §IV experimental protocol).
 
-Drives any of the protocol variants over a list of clients:
+A thin host loop: it owns the communication ledger, eval scheduling, and
+best-snapshot logic — everything else runs on device.  Three engines drive
+the per-round work (``FederatedConfig.engine``):
 
-* local training (``local_epochs`` epochs per round),
-* one communication round — by default through the jitted batched
-  :class:`repro.core.engine.RoundEngine` (upstream Top-K, Eq. 3 personalized
-  aggregation, downstream Top-K, Eq. 4 apply as ONE compiled program over all
-  clients); ``engine="reference"`` keeps the ragged numpy host protocol,
-  which the property tests compare against,
-* wire payloads and their cost accounting via a pluggable
-  :class:`repro.core.codec.WireCodec` (identity or FedS+Q8 int8 rows),
-* periodic validation with early stopping (patience on consecutive declines),
-* a communication ledger for P@CG / P@99 / P@98 / R@CG.
+* ``fused`` (default) — the whole cycle (``local_epochs`` of local training
+  with device-pre-sampled batches + the FedS communication round) is ONE
+  compiled program per round over :class:`repro.core.state.FederationState`,
+  which keeps every client's entity/relation tables, Adam state, upload
+  history, and the jitter PRNG key device-resident across rounds.  Entity
+  tables only cross the host boundary at eval/snapshot boundaries.
+* ``batched`` — the same device-resident state and random streams, but the
+  training scan and the communication round run as separate jitted programs
+  per round.  This is the correctness oracle for ``fused`` (same seeds ->
+  same eval trajectory and ledger totals, see tests/test_state.py).
+* ``reference`` — the ragged numpy host protocol (per-client
+  ``KGEClient.train_local`` + :mod:`repro.core.aggregate`), the
+  paper-faithful path the engine property tests compare against.
+
+Ledger accounting for the device engines is deferred: per-round download
+counts stay on device and are flushed to the :class:`CommLedger` only at
+eval boundaries (one transfer for all pending rounds), producing bitwise-
+identical totals to per-round flushing.  Wire payloads and their cost
+accounting go through a pluggable :class:`repro.core.codec.WireCodec`.
 """
 from __future__ import annotations
 
@@ -22,7 +33,6 @@ import numpy as np
 
 from repro.core.aggregate import fede_aggregate, personalized_aggregate
 from repro.core.codec import get_codec
-from repro.core.engine import RoundEngine
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
@@ -31,11 +41,14 @@ from repro.core.protocol import (
     sparse_upload,
 )
 from repro.core.sparsify import sparsity_k
+from repro.core.state import CycleEngine
 from repro.core.sync import is_sync_round
 from repro.data.partition import ClientData
 from repro.federated.client import KGEClient
 from repro.federated.comm import CommLedger
 from repro.federated.metrics import weighted_average
+
+ENGINES = ("fused", "batched", "reference")
 
 
 @dataclasses.dataclass
@@ -52,7 +65,9 @@ class FederatedConfig:
     gamma: float = 8.0
     sparsity_p: float = 0.4
     quantize_upload: bool = False  # FedS+Q8: int8 rows on the wire (beyond-paper)
-    engine: str = "batched"  # batched (jitted RoundEngine) | reference (numpy)
+    # fused (one program per cycle) | batched (per-round programs, oracle)
+    # | reference (ragged numpy host protocol)
+    engine: str = "fused"
     sync_interval: int = 4
     eval_every: int = 5
     patience: int = 3
@@ -86,15 +101,40 @@ def _restore(clients: list[KGEClient], snap) -> None:
         c.params = {k: jnp.asarray(v) for k, v in s.items()}
 
 
+def _flush_ledger(ledger, pending, views, codec, dim, k_per_client) -> None:
+    """Replay deferred rounds into the ledger.
+
+    ``pending`` holds ``(kind, down_count)`` per round in order; sparse-round
+    download counts are device arrays, pulled to host in ONE transfer here.
+    The replay performs the exact same accounting-call sequence a per-round
+    flush would, so ledger totals/history are bitwise identical.
+    """
+    sparse_counts = [d for kind, d in pending if kind == "sparse"]
+    dc_all = np.asarray(jnp.stack(sparse_counts)) if sparse_counts else None
+    i = 0
+    for kind, _ in pending:
+        if kind == "sync":
+            for v in views:  # upload leg + download leg
+                ledger.log_full_exchange(v.num_shared, dim)
+                ledger.log_full_exchange(v.num_shared, dim)
+        elif kind == "sparse":
+            for v, k_c, dc in zip(views, k_per_client, dc_all[i]):
+                codec.log_upload(ledger, int(k_c), dim, v.num_shared)
+                codec.log_download(ledger, int(dc), dim, v.num_shared)
+            i += 1
+        ledger.end_round()
+    pending.clear()
+
+
 def run_federated(
     clients_data: list[ClientData],
     num_global_entities: int,
     cfg: FederatedConfig,
     verbose: bool = False,
 ) -> FederatedResult:
-    if cfg.engine not in ("batched", "reference"):
+    if cfg.engine not in ENGINES:
         raise ValueError(
-            f"unknown engine {cfg.engine!r}; expected 'batched' or 'reference'"
+            f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
         )
     clients = [
         KGEClient(
@@ -110,23 +150,27 @@ def run_federated(
         )
         for d in clients_data
     ]
-    views = build_comm_views([d.local_to_global for d in clients_data], num_global_entities)
+    views = build_comm_views(
+        [d.local_to_global for d in clients_data], num_global_entities
+    )
     codec = get_codec("int8-rows" if cfg.quantize_upload else "identity")
-    engine = None
-    hist_batch = None
-    histories = None
-    if cfg.protocol != "single" and cfg.engine != "reference":
-        engine = RoundEngine(
-            views, num_global_entities, cfg.dim, cfg.sparsity_p, codec=codec
+    ledger = CommLedger()
+
+    use_device = cfg.engine != "reference"
+    if use_device:
+        cycle = CycleEngine(
+            clients, views, num_global_entities,
+            sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
+            codec=codec,
         )
-        hist_batch = engine.gather([c.params["entity"] for c in clients])
+        state = cycle.init_state(clients, seed=cfg.seed + 777)
+        pending: list = []  # (kind, device down_count | None) per round
     else:  # ragged numpy reference protocol keeps per-client histories
+        rng = np.random.default_rng(cfg.seed + 777)
         histories = [
             clients[c].entity_embeddings[jnp.asarray(views[c].shared_local)]
             for c in range(len(clients))
         ]
-    ledger = CommLedger()
-    rng = np.random.default_rng(cfg.seed + 777)
 
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
@@ -136,39 +180,32 @@ def run_federated(
 
     for t in range(cfg.rounds):
         rounds_run = t + 1
-        # ---------------------------------------------------- local training
-        for c in clients:
-            c.train_local(cfg.local_epochs)
+        comm = cfg.protocol != "single"
+        sync = (
+            cfg.protocol == "fedep"
+            or (cfg.protocol == "feds" and is_sync_round(t, cfg.sync_interval))
+        )
 
-        # ----------------------------------------------------- communication
-        if cfg.protocol != "single":
-            sync = (
-                cfg.protocol == "fedep"
-                or (cfg.protocol == "feds" and is_sync_round(t, cfg.sync_interval))
-            )
-            if engine is not None:  # jitted batched RoundEngine path
-                emb_batch = engine.gather([c.params["entity"] for c in clients])
-                if sync:
-                    emb_batch, hist_batch = engine.sync_round(emb_batch)
-                    for v in views:  # upload leg + download leg
-                        ledger.log_full_exchange(v.num_shared, cfg.dim)
-                        ledger.log_full_exchange(v.num_shared, cfg.dim)
+        if use_device:
+            # ------------------------- device-resident train+communicate
+            if cfg.engine == "fused":
+                if comm:
+                    state, down, _loss = cycle.fused_cycle(state, sync=sync)
                 else:
-                    jitter = rng.random((len(clients), engine.ns_max))
-                    emb_batch, hist_batch, down_counts = engine.sparse_round(
-                        emb_batch, hist_batch, jitter
-                    )
-                    for v, k_c, dc in zip(
-                        views, engine.k_per_client, np.asarray(down_counts)
-                    ):
-                        codec.log_upload(ledger, int(k_c), cfg.dim, v.num_shared)
-                        codec.log_download(ledger, int(dc), cfg.dim, v.num_shared)
-                new_tables = engine.scatter(
-                    emb_batch, [c.params["entity"] for c in clients]
-                )
-                for c, tab in zip(clients, new_tables):
-                    c.params["entity"] = tab
-            elif sync:
+                    state, _jitter, _loss = cycle.train_cycle(state)
+                    down = None
+            else:  # per-round oracle: separate train / comm programs
+                state, jitter, _loss = cycle.train_cycle(state)
+                down = None
+                if comm:
+                    state, down = cycle.comm_round(state, jitter, sync=sync)
+            kind = "sync" if (comm and sync) else "sparse" if comm else "none"
+            pending.append((kind, down if kind == "sparse" else None))
+        else:
+            # ----------------------------------- numpy reference protocol
+            for c in clients:
+                c.train_local(cfg.local_epochs)
+            if comm and sync:
                 uploads = []
                 for c, v in zip(clients, views):
                     up, hist = full_upload(c.params["entity"], v)
@@ -181,11 +218,12 @@ def run_federated(
                         c.params["entity"], v, global_mean
                     )
                     ledger.log_full_exchange(v.num_shared, cfg.dim)
-            else:  # sparse FedS round, ragged numpy reference path
+            elif comm:  # sparse FedS round, ragged numpy reference path
                 uploads = []
                 for c, v in zip(clients, views):
                     up, hist = sparse_upload(
-                        c.params["entity"], histories[v.client_id], v, cfg.sparsity_p
+                        c.params["entity"], histories[v.client_id], v,
+                        cfg.sparsity_p,
                     )
                     histories[v.client_id] = hist
                     k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
@@ -210,22 +248,29 @@ def run_federated(
                         d = dataclasses.replace(
                             d,
                             agg_values=np.asarray(
-                                codec.roundtrip(jnp.asarray(d.agg_values)), np.float32
+                                codec.roundtrip(jnp.asarray(d.agg_values)),
+                                np.float32,
                             ),
                         )
                     codec.log_download(
                         ledger, len(d.entity_ids), cfg.dim, v.num_shared
                     )
                     c.params["entity"] = apply_sparse_download(
-                        c.params["entity"], v, d.entity_ids, d.agg_values, d.priority
+                        c.params["entity"], v, d.entity_ids, d.agg_values,
+                        d.priority,
                     )
-        ledger.end_round()
+            ledger.end_round()
 
         # ------------------------------------------------------- evaluation
         eval_now = (t + 1) % cfg.eval_every == 0
         if cfg.protocol == "single":
             eval_now = (t + 1) % max(cfg.eval_every, 10) == 0
         if eval_now:
+            if use_device:
+                _flush_ledger(
+                    ledger, pending, views, codec, cfg.dim, cycle.k_per_client
+                )
+                cycle.sync_clients(state, clients)
             val = weighted_average(
                 [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
             )
@@ -247,6 +292,9 @@ def run_federated(
             if declines >= cfg.patience:
                 break
 
+    if use_device:
+        _flush_ledger(ledger, pending, views, codec, cfg.dim, cycle.k_per_client)
+        cycle.sync_clients(state, clients)
     if best["snap"] is not None:
         _restore(clients, best["snap"])
     test = weighted_average([c.evaluate("test", cfg.max_eval_triples) for c in clients])

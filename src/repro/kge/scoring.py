@@ -119,6 +119,17 @@ _SCORE_FNS = {
 }
 
 
+def get_score_fn(method: Method):
+    """Score function operating directly on embedding rows (h, r, t, gamma).
+
+    Used by callers that manage their own gathers — e.g. the fused trainer in
+    :mod:`repro.core.state`, which gathers each batch's rows ONCE and
+    differentiates with respect to the gathered rows instead of the full
+    table (one dense scatter-add per step instead of one per gather).
+    """
+    return _SCORE_FNS[method]
+
+
 def score_triples(
     params: dict,
     heads: jnp.ndarray,
@@ -166,7 +177,16 @@ def kge_loss(
     neg_t_score = score_triples(params, h, r, neg_tails, method, gamma)  # (B, N)
     neg_h_score = score_triples(params, neg_heads, r, t, method, gamma)  # (B, N)
     neg_score = jnp.concatenate([neg_t_score, neg_h_score], axis=-1)  # (B, 2N)
+    return loss_from_scores(pos_score, neg_score, method, adversarial_temperature)
 
+
+def per_sample_losses(
+    pos_score: jnp.ndarray,  # (..., B)
+    neg_score: jnp.ndarray,  # (..., B, 2N)
+    method: Method,
+    adversarial_temperature: float = 1.0,
+) -> jnp.ndarray:
+    """Per-sample ``pos_loss + neg_loss`` (NOT yet halved/averaged)."""
     if method in ("transe", "rotate") and adversarial_temperature > 0:
         w = jax.nn.softmax(
             jax.lax.stop_gradient(neg_score) * adversarial_temperature, axis=-1
@@ -176,4 +196,23 @@ def kge_loss(
 
     pos_loss = -jax.nn.log_sigmoid(pos_score)
     neg_loss = -(w * jax.nn.log_sigmoid(-neg_score)).sum(axis=-1)
-    return (pos_loss + neg_loss).mean() / 2.0
+    return pos_loss + neg_loss
+
+
+def loss_from_scores(
+    pos_score: jnp.ndarray,  # (B,)
+    neg_score: jnp.ndarray,  # (B, 2N)
+    method: Method,
+    adversarial_temperature: float = 1.0,
+    sample_weight: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """The self-adversarial loss given already-computed scores (see
+    :func:`kge_loss` for the semantics; split out so gather-once trainers can
+    reuse the exact weighting/averaging logic)."""
+    per_sample = per_sample_losses(
+        pos_score, neg_score, method, adversarial_temperature
+    )
+    if sample_weight is None:
+        return per_sample.mean() / 2.0
+    sw = sample_weight.astype(per_sample.dtype)
+    return (per_sample * sw).sum() / jnp.maximum(sw.sum(), 1.0) / 2.0

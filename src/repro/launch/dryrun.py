@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, list_archs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models.transformer import init_lm
 from repro.sharding.specs import (
     decode_state_specs,
@@ -102,12 +102,12 @@ def dryrun_one(
             in_shardings=(pshard, oshard, ishard),
             out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
         )
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(params_shape, opt_shape, in_specs)
     elif shape.kind == "prefill":
         step = make_prefill_step(cfg)
         jitted = jax.jit(step, in_shardings=(pshard, ishard))
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(params_shape, in_specs)
     else:  # decode
         long_ctx = shape.name == "long_500k"
@@ -125,7 +125,7 @@ def dryrun_one(
             in_shardings=(pshard, ishard["token"], sshard),
             out_shardings=(None, sshard),
         )
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jitted.lower(params_shape, in_specs["token"], state_shape)
 
     t_lower = time.time() - t0
@@ -135,6 +135,8 @@ def dryrun_one(
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     n_dev = mesh.devices.size
     hlo = compiled.as_text()
     from repro.launch.hlo_costs import analyze as hlo_analyze

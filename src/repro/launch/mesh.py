@@ -11,20 +11,32 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    # jax <= 0.4.x has no AxisType; meshes there are implicitly auto-typed
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CI-scale sharding tests (requires >= data*model devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def mesh_context(mesh: jax.sharding.Mesh):
+    """``jax.sharding.set_mesh(mesh)`` on jax >= 0.5; on jax <= 0.4.x the
+    ``Mesh`` object is itself the equivalent context manager."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
 
 
 # TPU v5e per-chip constants for the roofline (DESIGN.md §6)

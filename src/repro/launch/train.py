@@ -30,9 +30,11 @@ def main() -> None:
     ap.add_argument("--negatives", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--sparsity", type=float, default=0.4)
-    ap.add_argument("--engine", default="batched",
-                    choices=["batched", "reference"],
-                    help="batched = jitted RoundEngine; reference = numpy host protocol")
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "batched", "reference"],
+                    help="fused = one device-resident program per cycle; "
+                         "batched = per-round jitted programs (oracle); "
+                         "reference = numpy host protocol")
     ap.add_argument("--quantize-upload", action="store_true",
                     help="FedS+Q8: int8 row payloads on the wire")
     ap.add_argument("--sync-interval", type=int, default=4)

@@ -108,7 +108,9 @@ def _context_parallel(cfg, qr):
     mesh or when S doesn't divide."""
     if cfg.shard_heads != "context":
         return qr
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.sharding.specs import current_abstract_mesh
+
+    mesh = current_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return qr
     if qr.shape[1] % mesh.shape["model"] != 0:

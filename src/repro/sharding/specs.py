@@ -29,6 +29,19 @@ from repro.models.config import ModelConfig
 FSDP_ARCHS = ("qwen2-72b", "arctic-480b")
 
 
+def current_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh()`` on jax >= 0.5, ``None`` earlier.
+
+    On jax <= 0.4.x there is no abstract-mesh context API; the in-graph
+    sharding anchors that consult this are optimizations and degrade to
+    no-ops there (every caller already handles the no-mesh case).
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    return get()
+
+
 # small archs that run best fully sequence-parallel / replicated-trunk (§Perf)
 SP_ARCHS = ("gemma3-1b", "whisper-base")
 
@@ -248,7 +261,7 @@ def constrain_batch(x):
     16x redundant memory and compute).  No-op outside a mesh context or when
     the batch doesn't divide.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -64,3 +64,26 @@ def adam_update(
 
     new_params = jax.tree.map(upd, params, mu, nu)
     return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def masked_adam_update(
+    grads: Any,
+    state: AdamState,
+    params: Any,
+    lr: float | jnp.ndarray,
+    valid: jnp.ndarray,
+    **kwargs: Any,
+) -> tuple[Any, AdamState]:
+    """Adam step gated by a scalar ``valid`` flag.
+
+    When ``valid`` is False, params AND optimizer state (including the step
+    count) pass through unchanged — used for padded scan steps when clients
+    with different batches-per-epoch are stacked into one program
+    (:mod:`repro.core.state`).
+    """
+    new_params, new_state = adam_update(grads, state, params, lr, **kwargs)
+    keep = lambda new, old: jnp.where(valid, new, old)  # noqa: E731
+    return (
+        jax.tree.map(keep, new_params, params),
+        jax.tree.map(keep, new_state, state),
+    )

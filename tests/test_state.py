@@ -1,0 +1,282 @@
+"""Fused cycle (repro.core.state) == per-round batched path, exactly.
+
+The fused program and the per-round ``engine="batched"`` oracle share the
+same device-resident :class:`FederationState`, the same threaded PRNG key
+schedule (one 3-way split per cycle), and the same ``train_core`` /
+``comm_core`` functions — the ONLY difference is whether train and
+communicate compile as one program or two.  So with the same seeds they must
+produce the same eval trajectory and bitwise-identical ledgers, over
+randomized heterogeneous federations (different per-client entity counts,
+triple counts, batches-per-epoch, and clients smaller than the batch size).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import build_comm_views
+from repro.core.state import CycleEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.simulation import FederatedConfig, run_federated
+
+
+def _instance(seed):
+    """Randomized heterogeneous federation + config (seeded, not hypothesis:
+    the container has no hypothesis wheel and determinism helps bisection)."""
+    rng = np.random.default_rng(seed)
+    num_clients = int(rng.integers(2, 4))
+    kg = generate_kg(
+        num_entities=int(rng.integers(100, 180)),
+        num_relations=3 * num_clients,
+        num_triples=int(rng.integers(700, 1400)),
+        seed=int(rng.integers(0, 1000)),
+    )
+    clients = partition_by_relation(kg, num_clients, seed=int(rng.integers(0, 10)))
+    cfg = dict(
+        method="transe",
+        dim=int(rng.choice([8, 16])),
+        rounds=5,
+        local_epochs=int(rng.integers(1, 3)),
+        # deliberately larger than some clients' train split sometimes, to
+        # exercise padded batch rows (B_c = min(batch, T_c))
+        batch_size=int(rng.choice([32, 64, 512])),
+        num_negatives=8,
+        lr=5e-3,
+        sparsity_p=float(rng.choice([0.3, 0.5, 1.0])),
+        sync_interval=2,
+        eval_every=2,
+        patience=99,
+        max_eval_triples=40,
+        seed=int(rng.integers(0, 100)),
+    )
+    return kg, clients, cfg
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("protocol", ["feds"])
+def test_fused_matches_batched_trajectory_and_ledger(seed, protocol):
+    kg, clients, cfg = _instance(seed)
+    fused = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol=protocol, engine="fused", **cfg),
+    )
+    batched = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol=protocol, engine="batched", **cfg),
+    )
+    assert fused.eval_history == batched.eval_history
+    assert fused.ledger.history == batched.ledger.history
+    assert fused.ledger.params_transmitted == batched.ledger.params_transmitted
+    assert fused.ledger.bytes_int8_signs == batched.ledger.bytes_int8_signs
+    assert fused.test_mrr_cg == batched.test_mrr_cg
+    assert np.isfinite(fused.test_mrr_cg)
+
+
+def test_fused_matches_batched_quantized_fedep():
+    """Same parity through the int8 wire codec and the sync-every-round
+    protocol (exercises the sync-round leg of the fused program)."""
+    kg, clients, cfg = _instance(7)
+    for protocol, quant in (("fedep", False), ("feds", True)):
+        fused = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(protocol=protocol, engine="fused",
+                            quantize_upload=quant, **cfg),
+        )
+        batched = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(protocol=protocol, engine="batched",
+                            quantize_upload=quant, **cfg),
+        )
+        assert fused.eval_history == batched.eval_history, protocol
+        assert fused.ledger.history == batched.ledger.history, protocol
+
+
+def test_ledger_totals_independent_of_eval_cadence():
+    """Deferred device-side accounting: flushing pending rounds at different
+    eval boundaries must produce a bitwise-identical ledger (evaluation
+    never feeds back into training except through early stopping, which the
+    large patience disables)."""
+    kg, clients, cfg = _instance(3)
+    cfg = dict(cfg, rounds=6, patience=99)
+    ledgers = []
+    for eval_every in (1, 3, 6):
+        res = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(protocol="feds", engine="fused",
+                            **dict(cfg, eval_every=eval_every)),
+        )
+        ledgers.append(res.ledger)
+    assert ledgers[0].history == ledgers[1].history == ledgers[2].history
+    assert (
+        ledgers[0].bytes_int8_signs
+        == ledgers[1].bytes_int8_signs
+        == ledgers[2].bytes_int8_signs
+    )
+
+
+# ----------------------------------------------------------- state invariants
+def _make_engine(num_clients=3, seed=0, **kw):
+    kg = generate_kg(num_entities=130, num_relations=3 * num_clients,
+                     num_triples=1000, seed=seed)
+    cd = partition_by_relation(kg, num_clients, seed=0)
+    clients = [
+        KGEClient(d, method="transe", dim=8, batch_size=48, num_negatives=4,
+                  lr=5e-3, seed=seed)
+        for d in cd
+    ]
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    engine = CycleEngine(clients, views, kg.num_entities,
+                         sparsity_p=0.5, local_epochs=2, **kw)
+    return engine, clients
+
+
+def test_fused_cycle_padding_rows_stay_zero():
+    """Padded entity rows / shared slots must never be touched by training
+    (never sampled), the optimizer (zero moments), or the round (masked)."""
+    engine, clients = _make_engine()
+    state = engine.init_state(clients, seed=11)
+    for sync in (False, True, False):
+        state, _down, _loss = engine.fused_cycle(state, sync=sync)
+    ent = np.asarray(state.arrays.params["entity"])
+    mu = np.asarray(state.arrays.opt.mu["entity"])
+    hist = np.asarray(state.arrays.hist)
+    for c, cl in enumerate(clients):
+        n = cl.model.num_entities
+        np.testing.assert_array_equal(ent[c, n:], 0.0)
+        np.testing.assert_array_equal(mu[c, n:], 0.0)
+        ns = engine.views[c].num_shared
+        np.testing.assert_array_equal(hist[c, ns:], 0.0)
+
+
+def test_state_roundtrips_through_clients():
+    """init_state -> sync_clients is the identity on per-client params."""
+    engine, clients = _make_engine()
+    before = [{k: np.asarray(v) for k, v in c.params.items()} for c in clients]
+    state = engine.init_state(clients, seed=0)
+    engine.sync_clients(state, clients)
+    for b, c in zip(before, clients):
+        np.testing.assert_array_equal(b["entity"], np.asarray(c.params["entity"]))
+        np.testing.assert_array_equal(b["relation"], np.asarray(c.params["relation"]))
+
+
+def test_training_reduces_loss():
+    """The device-resident trainer actually learns (loss falls over cycles)."""
+    engine, clients = _make_engine()
+    state = engine.init_state(clients, seed=0)
+    state, _, first = engine.train_cycle(state)
+    for _ in range(8):
+        state, _, last = engine.train_cycle(state)
+    assert float(np.asarray(last).mean()) < float(np.asarray(first).mean())
+
+
+def test_heterogeneous_hyperparams_rejected():
+    engine, clients = _make_engine()
+    clients[1].lr = clients[1].lr * 2
+    with pytest.raises(ValueError, match="homogeneous"):
+        CycleEngine(clients, engine.views, engine.num_global,
+                    sparsity_p=0.5, local_epochs=2)
+
+
+def test_flat_trainer_rejects_unequal_adam_steps():
+    """The flat fast path shares one Adam step count; clients arriving with
+    divergent counts must be rejected instead of silently mis-corrected."""
+    kg = generate_kg(num_entities=130, num_relations=6, num_triples=1000, seed=0)
+    cd = partition_by_relation(kg, 2, seed=0)
+    clients = [
+        # batch >= every split size => one batch per epoch for all clients
+        KGEClient(d, method="transe", dim=8, batch_size=10_000,
+                  num_negatives=4, lr=5e-3, seed=0)
+        for d in cd
+    ]
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    engine = CycleEngine(clients, views, kg.num_entities,
+                         sparsity_p=0.5, local_epochs=1)
+    assert engine._uniform_steps
+    engine.init_state(clients)  # equal (zero) steps: fine
+    clients[0].train_local(1)  # client 0 advances its Adam step alone
+    with pytest.raises(ValueError, match="lockstep"):
+        engine.init_state(clients)
+
+
+# ----------------------------------------------------- eval filter-mask cache
+def test_eval_filter_cache_matches_bruteforce():
+    _, clients = _make_engine()
+    cl = clients[0]
+    triples = cl.data.valid
+    assert cl._filter_cache == {}  # lazy: nothing built at construction
+    n = int(triples.shape[0])
+    cl.evaluate("valid", n)
+    cached_n, ft, fh = cl._filter_cache["valid"]
+    assert cached_n == n
+    assert ft.shape == (n, cl.data.num_entities)
+    for i, (h, r, t) in enumerate(triples.tolist()):
+        tails = set(cl._known.get(("t", h, r), set())) - {t}
+        heads = set(cl._known.get(("h", r, t), set())) - {h}
+        assert set(np.nonzero(ft[i])[0].tolist()) == tails
+        assert set(np.nonzero(fh[i])[0].tolist()) == heads
+    # repeated evaluations are deterministic, hit the cache, and a smaller
+    # request slices the cached masks instead of rebuilding
+    assert cl.evaluate("valid", 50) == cl.evaluate("valid", 50)
+    assert cl._filter_cache["valid"][0] == n
+
+
+# ------------------------------------------------------------- SPMD == host
+_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.engine import make_client_mesh
+from repro.core.protocol import build_comm_views
+from repro.core.state import CycleEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+
+kg = generate_kg(num_entities=120, num_relations=8, num_triples=900, seed=1)
+cd = partition_by_relation(kg, 2, seed=0)
+def mk():
+    return [KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=0) for d in cd]
+views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+
+host = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5, local_epochs=2)
+pod = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5, local_epochs=2,
+                  mesh=make_client_mesh(2))
+sh = host.init_state(mk(), seed=7)
+sp = pod.init_state(mk(), seed=7)
+out = {}
+for name, sync in (("sparse", False), ("sync", True)):
+    sh, dh, lh = host.fused_cycle(sh, sync=sync)
+    sp, dp, lp = pod.fused_cycle(sp, sync=sync)
+    out[name] = {
+        "emb": float(np.abs(np.asarray(sh.arrays.params["entity"])
+                            - np.asarray(sp.arrays.params["entity"])).max()),
+        "hist": float(np.abs(np.asarray(sh.arrays.hist)
+                             - np.asarray(sp.arrays.hist)).max()),
+        "down": (np.asarray(dh) == np.asarray(dp)).all().item(),
+    }
+print(json.dumps(out))
+"""
+
+
+def test_fused_cycle_spmd_matches_host():
+    """One shard_map cycle program over >= 2 CPU devices == single-device jit."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _WORKER], capture_output=True, text=True,
+        env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for name, rec in out.items():
+        assert rec["emb"] < 1e-5, (name, rec)
+        assert rec["hist"] < 1e-5, (name, rec)
+        assert rec["down"], (name, rec)
