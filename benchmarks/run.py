@@ -15,8 +15,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,engine,cycle,table1,table2,table3,"
-                         "table4,table5,table6,fig2,sweep,q8,roofline")
+                    help="comma list: kernels,engine,cycle,sstep,table1,table2,"
+                         "table3,table4,table5,table6,fig2,sweep,q8,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -45,6 +45,13 @@ def main() -> None:
         rows = fused_cycle.run()
         csv_rows += [tuple(r) for r in rows]
         claims += fused_cycle.check_claims(rows)
+
+    if want("sstep"):
+        from benchmarks import superstep
+
+        rows = superstep.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += superstep.check_claims(rows)
 
     suites = [
         ("table1", "table1_compression"),

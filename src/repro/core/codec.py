@@ -17,6 +17,15 @@ float-equivalent parameter counts (an int8 element counts as 1/4 parameter);
 ``bytes`` are realistic wire bytes with int8 sign vectors.  The per-entity
 sign vector is transmitted on every leg, including empty downloads — the
 receiver cannot know the download was empty without it.
+
+Codecs only ever see **sparse** rounds: under the ISM schedule
+(:mod:`repro.core.sync`) the one-in-``s+1`` sync rounds are full FedE
+exchanges accounted at full precision directly by the ledger
+(``log_full_exchange``), which is what makes Eq. 5's ``p*s + 1`` numerator
+shape.  The device engines apply ``roundtrip`` inside their compiled
+programs (per round for :class:`~repro.core.state.CycleEngine`, inside the
+scanned span for :class:`~repro.core.state.SuperstepEngine`) and replay the
+per-leg accounting calls at eval-boundary ledger flushes.
 """
 from __future__ import annotations
 

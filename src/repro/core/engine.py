@@ -27,6 +27,15 @@ and is what the property tests compare against.
 
 Wire payloads go through a pluggable :class:`repro.core.codec.WireCodec`
 (identity or int8 rows), applied inside the jitted round.
+
+ISM round-schedule semantics: this module implements the two round *kinds* —
+:func:`batched_sparse_round` (entity-wise Top-K, the ``"sparse"`` kind) and
+:func:`batched_sync_round` (full FedE mean, the ``"sync"`` kind) — but does
+NOT decide when each runs.  The schedule (``s`` sparse rounds then one sync
+round per period) lives in :mod:`repro.core.sync` (:func:`~repro.core.sync.
+round_kind`); :class:`repro.core.state.CycleEngine` fuses one scheduled
+round with its local training, and :class:`repro.core.state.SuperstepEngine`
+scans whole schedule spans into single programs.
 """
 from __future__ import annotations
 

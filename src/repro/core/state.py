@@ -16,6 +16,13 @@ jit.  This module removes both:
   training ``lax.scan`` with all batches pre-sampled on device, followed by
   the FedS sparse/sync round of :mod:`repro.core.engine` — as ONE ``jax.jit``
   program (host) or one ``shard_map`` program over the client axis (pod).
+* :class:`SuperstepEngine` (PR 3) goes one level up: a whole Intermittent
+  Synchronization Mechanism period — ``s`` sparse rounds then one dense sync
+  round, as scheduled by :func:`repro.core.sync.round_kind` — is
+  ``lax.scan``-ned into a SINGLE program per superstep, carrying the
+  federation state, the threaded PRNG key, and device-side ledger
+  accumulators (per-round download counts) through the scan.  One host
+  touch-point per ``s+1`` rounds instead of one per round.
 
 Client heterogeneity is expressed with static shapes throughout: triples are
 padded to ``T_max`` (samplers draw indices below the true count), batches to
@@ -47,6 +54,7 @@ from repro.core.engine import (
     build_padded_views,
     shard_map,
 )
+from repro.core.sync import compress_schedule
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_score_fn, loss_from_scores, per_sample_losses
 from repro.train.optimizer import AdamState, adam_update, masked_adam_update
@@ -191,8 +199,14 @@ class CycleEngine:
         )
 
         self._axis = axis_name if mesh is not None else None
+        self._mesh = mesh
         train_core = self._make_train_core()
         comm_core = self._make_comm_core()
+        # kept for SuperstepEngine, which re-composes the same cores into
+        # multi-round scanned programs (the equivalence contract depends on
+        # every engine mode running these exact functions)
+        self._train_core_fn = train_core
+        self._comm_core_fn = comm_core
 
         def comm_sparse(arrays, jitter, consts):
             return comm_core(arrays, jitter, consts, do_sync=False)
@@ -543,3 +557,117 @@ class CycleEngine:
         fn = self._fused_sync if sync else self._fused_sparse
         arrays, down, loss = fn(state.arrays, kb, kj, self.consts)
         return FederationState(arrays, key), down, loss
+
+
+class SuperstepEngine(CycleEngine):
+    """Whole ISM supersteps — ``s`` sparse rounds + 1 sync round — as ONE
+    compiled program.
+
+    :class:`CycleEngine` fused train+communicate into one program *per
+    round*, but the host loop still re-entered python between rounds: one
+    eager PRNG split plus one program dispatch per round, ``s+1`` times per
+    ISM period.  A *superstep* ``lax.scan``-s the whole period (in general:
+    any span of the round schedule, run-length-encoded by
+    :func:`repro.core.sync.compress_schedule` into static ``(kind, n)``
+    segments) inside a single ``jax.jit`` (host) or a single ``shard_map``
+    program over the client axis (pod).  The scan carries
+    ``(StateArrays, PRNG key)`` and stacks the per-round download counts and
+    losses as device-side ledger accumulators, so the host touches the
+    device ONCE per superstep instead of once per round.
+
+    Equivalence contract: each scan step performs *exactly* the per-cycle
+    key schedule (one 3-way ``jax.random.split``) and runs the same
+    ``train_core`` / ``comm_core`` functions as :meth:`fused_cycle`, so a
+    superstep over ``kinds`` is trajectory- and ledger-bitwise-identical to
+    the same rounds driven one :meth:`fused_cycle` call at a time
+    (tests/test_state.py property-tests this).
+
+    Compiled programs are cached per distinct plan; with a periodic ISM
+    schedule and eval-aligned supersteps only a handful of plans ever occur.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._superstep_cache: dict = {}
+
+    # ------------------------------------------------------------ compiling
+    def _compile_superstep(self, plan):
+        train_core = self._train_core_fn
+        comm_core = self._comm_core_fn
+
+        def prog(arrays, key, consts):
+            def seg_step(kind):
+                def step(carry, _):
+                    arrays, key = carry
+                    # identical key schedule to CycleEngine._advance
+                    key, kb, kj = jax.random.split(key, 3)
+                    arrays, jitter, loss = train_core(arrays, kb, kj, consts)
+                    if kind == "sync":
+                        arrays, down = comm_core(arrays, jitter, consts, do_sync=True)
+                    elif kind == "sparse":
+                        arrays, down = comm_core(arrays, jitter, consts, do_sync=False)
+                    else:  # "none": local training only
+                        down = (loss * 0).astype(jnp.int32)
+                    return (arrays, key), (down, loss)
+
+                return step
+
+            downs, losses = [], []
+            for kind, n in plan:
+                # unrolling removes the while-loop carry copies XLA:CPU
+                # inserts around the big resident buffers (~3% per-round at
+                # FB15k scale); capped so pathological eval spans don't
+                # explode compile time
+                (arrays, key), (d, l) = jax.lax.scan(
+                    seg_step(kind), (arrays, key), None, length=n,
+                    unroll=min(n, 8),
+                )
+                if kind == "sparse":
+                    # per-round (C,) rows sliced INSIDE the program, so the
+                    # host never dispatches per-round slice ops
+                    downs.extend(d[i] for i in range(n))
+                losses.append(l)
+            return arrays, key, tuple(downs), tuple(losses)
+
+        n_sparse = sum(n for kind, n in plan if kind == "sparse")
+        if self._mesh is None:
+            return jax.jit(prog, donate_argnums=(0,))
+        p = jax.sharding.PartitionSpec(self._axis)
+        r = jax.sharding.PartitionSpec()
+        # per-segment loss stacks rounds on axis 0; clients stay on axis 1
+        seg = tuple(
+            jax.sharding.PartitionSpec(None, self._axis) for _ in plan
+        )
+        return jax.jit(
+            shard_map(
+                prog, mesh=self._mesh, in_specs=(p, r, p),
+                out_specs=(p, r, (p,) * n_sparse, seg),
+            ),
+            donate_argnums=(0,),
+        )
+
+    # -------------------------------------------------------------- driving
+    def superstep(self, state: FederationState, kinds: Sequence[str]):
+        """Run ``len(kinds)`` rounds as one compiled program.
+
+        ``kinds`` is the per-round ISM schedule for the span (each entry one
+        of :data:`repro.core.sync.ROUND_KINDS`), e.g. a full FedS period
+        ``("sparse",) * s + ("sync",)``.  Returns
+        ``(state', per_round, losses)`` where ``per_round`` aligns with
+        ``kinds`` as ``(kind, down_count | None)`` pairs — down counts are
+        device-resident ``(C,)`` slices of the scanned accumulator, so the
+        caller can defer ledger flushing to eval boundaries exactly like the
+        per-cycle path — and ``losses`` is one ``(n, C)`` device array per
+        plan segment.
+        """
+        plan = compress_schedule(kinds)
+        fn = self._superstep_cache.get(plan)
+        if fn is None:
+            fn = self._superstep_cache[plan] = self._compile_superstep(plan)
+        arrays, key, downs, losses = fn(state.arrays, state.key, self.consts)
+        down_iter = iter(downs)
+        per_round = [
+            (kind, next(down_iter) if kind == "sparse" else None)
+            for kind in kinds
+        ]
+        return FederationState(arrays, key), per_round, losses

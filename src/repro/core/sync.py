@@ -5,8 +5,23 @@ synchronization round has reached the predefined interval ``s``; if so, the
 round is a full-exchange (standard FedE) round, otherwise a sparsified round.
 With the convention used in the paper's Eq. 5 a *cycle* is ``s`` sparsified
 rounds followed by 1 synchronization round (s+1 rounds total).
+
+This module is the single source of truth for the ISM **round schedule**:
+:func:`is_sync_round` decides sync-vs-sparse for the FedS protocol,
+:func:`round_kind` maps any (round, protocol) pair to one of the three round
+kinds, and :func:`compress_schedule` run-length-encodes a span of rounds into
+the static plan segments the :class:`repro.core.state.SuperstepEngine`
+compiles into a single scanned program.
 """
 from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+#: The three kinds of federated round, as scheduled by the ISM:
+#: ``"sparse"`` — entity-wise Top-K upload + personalized download (Eq. 1-4);
+#: ``"sync"``   — full FedE-style mean synchronization of shared entities;
+#: ``"none"``   — local training only (the no-communication baseline).
+ROUND_KINDS = ("sparse", "sync", "none")
 
 
 def is_sync_round(round_idx: int, interval: int) -> bool:
@@ -21,6 +36,45 @@ def is_sync_round(round_idx: int, interval: int) -> bool:
     if interval <= 0:
         return True  # degenerate: sync every round == plain FedE
     return (round_idx + 1) % (interval + 1) == 0
+
+
+def round_kind(round_idx: int, protocol: str, interval: int) -> str:
+    """The ISM round schedule: what kind of round ``round_idx`` is.
+
+    * ``feds``        — ``interval`` sparse rounds then one sync round per
+      cycle (:func:`is_sync_round`), the paper's full protocol;
+    * ``feds_nosync`` — sparse every round (Fig. 2 ablation);
+    * ``fedep``       — sync every round (full-exchange FedE/FedEP baseline);
+    * ``single``      — ``"none"``: local training, no communication.
+    """
+    if protocol == "single":
+        return "none"
+    if protocol == "fedep":
+        return "sync"
+    if protocol == "feds_nosync":
+        return "sparse"
+    if protocol == "feds":
+        return "sync" if is_sync_round(round_idx, interval) else "sparse"
+    raise ValueError(f"unknown protocol {protocol!r}")
+
+
+def compress_schedule(kinds: Iterable[str]) -> Tuple[Tuple[str, int], ...]:
+    """Run-length-encode a per-round kind sequence into plan segments.
+
+    ``("sparse","sparse","sync") -> (("sparse", 2), ("sync", 1))`` — the
+    static superstep plan :class:`repro.core.state.SuperstepEngine` compiles
+    (one ``lax.scan`` per segment, all segments in one program).  Hashable,
+    so compiled programs are cached per distinct plan.
+    """
+    plan: list[tuple[str, int]] = []
+    for k in kinds:
+        if k not in ROUND_KINDS:
+            raise ValueError(f"unknown round kind {k!r}; expected {ROUND_KINDS}")
+        if plan and plan[-1][0] == k:
+            plan[-1] = (k, plan[-1][1] + 1)
+        else:
+            plan.append((k, 1))
+    return tuple(plan)
 
 
 def comm_ratio_worst_case(p: float, s: int, dim: int) -> float:

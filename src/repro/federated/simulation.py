@@ -1,11 +1,17 @@
 """The federated training simulation loop (paper §IV experimental protocol).
 
 A thin host loop: it owns the communication ledger, eval scheduling, and
-best-snapshot logic — everything else runs on device.  Three engines drive
+best-snapshot logic — everything else runs on device.  Four engines drive
 the per-round work (``FederatedConfig.engine``):
 
-* ``fused`` (default) — the whole cycle (``local_epochs`` of local training
-  with device-pre-sampled batches + the FedS communication round) is ONE
+* ``superstep`` — whole spans of the ISM round schedule (``s`` sparse
+  rounds + 1 sync round per period, chunked to eval boundaries) run as ONE
+  ``lax.scan``-ned program per superstep
+  (:class:`repro.core.state.SuperstepEngine`): one host touch-point per
+  superstep instead of one per round.  Fastest path; compiles one program
+  per distinct schedule plan.
+* ``fused`` (default) — the whole cycle (``local_epochs`` of local training with
+  device-pre-sampled batches + the FedS communication round) is ONE
   compiled program per round over :class:`repro.core.state.FederationState`,
   which keeps every client's entity/relation tables, Adam state, upload
   history, and the jitter PRNG key device-resident across rounds.  Entity
@@ -17,6 +23,15 @@ the per-round work (``FederatedConfig.engine``):
 * ``reference`` — the ragged numpy host protocol (per-client
   ``KGEClient.train_local`` + :mod:`repro.core.aggregate`), the
   paper-faithful path the engine property tests compare against.
+
+All device engines produce bit-identical trajectories and ledgers for the
+same config/seeds — they differ only in how many rounds each compiled
+program covers (the fused==batched==superstep equivalence contract,
+property-tested in tests/test_state.py; see docs/architecture.md).
+
+Pod mode: ``mesh_devices > 1`` builds a 1-D client-axis mesh via
+:func:`repro.launch.mesh.make_federation_mesh` and runs the same engine
+programs under ``shard_map`` with the client axis sharded over devices.
 
 Ledger accounting for the device engines is deferred: per-round download
 counts stay on device and are flushed to the :class:`CommLedger` only at
@@ -41,14 +56,15 @@ from repro.core.protocol import (
     sparse_upload,
 )
 from repro.core.sparsify import sparsity_k
-from repro.core.state import CycleEngine
-from repro.core.sync import is_sync_round
+from repro.core.state import CycleEngine, SuperstepEngine
+from repro.core.sync import round_kind
 from repro.data.partition import ClientData
 from repro.federated.client import KGEClient
 from repro.federated.comm import CommLedger
 from repro.federated.metrics import weighted_average
+from repro.launch.mesh import make_federation_mesh
 
-ENGINES = ("fused", "batched", "reference")
+ENGINES = ("fused", "batched", "reference", "superstep")
 
 
 @dataclasses.dataclass
@@ -65,9 +81,12 @@ class FederatedConfig:
     gamma: float = 8.0
     sparsity_p: float = 0.4
     quantize_upload: bool = False  # FedS+Q8: int8 rows on the wire (beyond-paper)
-    # fused (one program per cycle) | batched (per-round programs, oracle)
-    # | reference (ragged numpy host protocol)
+    # fused (one program per cycle) | superstep (one program per ISM span)
+    # | batched (per-round programs, oracle) | reference (ragged numpy host)
     engine: str = "fused"
+    # >1: pod mode — shard the client axis over a 1-D device mesh
+    # (launch/mesh.py); requires a device engine and C % mesh_devices == 0
+    mesh_devices: int = 0
     sync_interval: int = 4
     eval_every: int = 5
     patience: int = 3
@@ -157,11 +176,20 @@ def run_federated(
     ledger = CommLedger()
 
     use_device = cfg.engine != "reference"
+    mesh = None
+    if cfg.mesh_devices > 1:
+        if not use_device:
+            raise ValueError(
+                "pod mode (mesh_devices > 1) requires a device engine, "
+                "not engine='reference'"
+            )
+        mesh = make_federation_mesh(cfg.mesh_devices)
     if use_device:
-        cycle = CycleEngine(
+        engine_cls = SuperstepEngine if cfg.engine == "superstep" else CycleEngine
+        cycle = engine_cls(
             clients, views, num_global_entities,
             sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
-            codec=codec,
+            codec=codec, mesh=mesh,
         )
         state = cycle.init_state(clients, seed=cfg.seed + 777)
         pending: list = []  # (kind, device down_count | None) per round
@@ -177,14 +205,65 @@ def run_federated(
     declines = 0
     prev_mrr = -1.0
     rounds_run = 0
+    # the "single" baseline evaluates on a slower cadence (no comm cost to track)
+    ee = max(cfg.eval_every, 10) if cfg.protocol == "single" else cfg.eval_every
+
+    def eval_boundary(round_no: int) -> bool:
+        """Flush+sync+evaluate at ``round_no``; True => early-stop."""
+        nonlocal best, declines, prev_mrr
+        if use_device:
+            _flush_ledger(
+                ledger, pending, views, codec, cfg.dim, cycle.k_per_client
+            )
+            cycle.sync_clients(state, clients)
+        val = weighted_average(
+            [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
+        )
+        eval_history.append((round_no, val["mrr"], val["hits10"]))
+        if verbose:
+            print(
+                f"round {round_no:4d}  val MRR {val['mrr']:.4f}  "
+                f"Hits@10 {val['hits10']:.4f}  params {ledger.params_transmitted:.3e}"
+            )
+        if val["mrr"] > best["mrr"]:
+            best = {
+                "mrr": val["mrr"],
+                "round": round_no,
+                "snap": _snapshot(clients),
+                "hits": val["hits10"],
+            }
+        declines = declines + 1 if val["mrr"] < prev_mrr else 0
+        prev_mrr = val["mrr"]
+        return declines >= cfg.patience
+
+    if cfg.engine == "superstep":
+        # ------------------- superstep mode: chunk rounds to eval boundaries
+        # so every superstep runs as one compiled program and evals land at
+        # exactly the same rounds as the per-round engines
+        t = 0
+        while t < cfg.rounds:
+            chunk = min(((t // ee) + 1) * ee, cfg.rounds) - t
+            kinds = tuple(
+                round_kind(u, cfg.protocol, cfg.sync_interval)
+                for u in range(t, t + chunk)
+            )
+            state, per_round, _losses = cycle.superstep(state, kinds)
+            pending.extend(per_round)
+            t += chunk
+            rounds_run = t
+            if t % ee == 0 and eval_boundary(t):
+                break
+        # superstep is always a device engine, so cycle/state/pending exist
+        return _finish(
+            cfg, clients, use_device, cycle, state, pending,
+            views, codec, ledger, eval_history, best, rounds_run,
+        )
 
     for t in range(cfg.rounds):
         rounds_run = t + 1
-        comm = cfg.protocol != "single"
-        sync = (
-            cfg.protocol == "fedep"
-            or (cfg.protocol == "feds" and is_sync_round(t, cfg.sync_interval))
-        )
+        kind = round_kind(t, cfg.protocol, cfg.sync_interval)
+        comm = kind != "none"
+        sync = kind == "sync"
 
         if use_device:
             # ------------------------- device-resident train+communicate
@@ -199,7 +278,6 @@ def run_federated(
                 down = None
                 if comm:
                     state, down = cycle.comm_round(state, jitter, sync=sync)
-            kind = "sync" if (comm and sync) else "sparse" if comm else "none"
             pending.append((kind, down if kind == "sparse" else None))
         else:
             # ----------------------------------- numpy reference protocol
@@ -262,36 +340,21 @@ def run_federated(
             ledger.end_round()
 
         # ------------------------------------------------------- evaluation
-        eval_now = (t + 1) % cfg.eval_every == 0
-        if cfg.protocol == "single":
-            eval_now = (t + 1) % max(cfg.eval_every, 10) == 0
-        if eval_now:
-            if use_device:
-                _flush_ledger(
-                    ledger, pending, views, codec, cfg.dim, cycle.k_per_client
-                )
-                cycle.sync_clients(state, clients)
-            val = weighted_average(
-                [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
-            )
-            eval_history.append((t + 1, val["mrr"], val["hits10"]))
-            if verbose:
-                print(
-                    f"round {t+1:4d}  val MRR {val['mrr']:.4f}  "
-                    f"Hits@10 {val['hits10']:.4f}  params {ledger.params_transmitted:.3e}"
-                )
-            if val["mrr"] > best["mrr"]:
-                best = {
-                    "mrr": val["mrr"],
-                    "round": t + 1,
-                    "snap": _snapshot(clients),
-                    "hits": val["hits10"],
-                }
-            declines = declines + 1 if val["mrr"] < prev_mrr else 0
-            prev_mrr = val["mrr"]
-            if declines >= cfg.patience:
-                break
+        if (t + 1) % ee == 0 and eval_boundary(t + 1):
+            break
 
+    return _finish(
+        cfg, clients, use_device, cycle if use_device else None,
+        state if use_device else None, pending if use_device else None,
+        views, codec, ledger, eval_history, best, rounds_run,
+    )
+
+
+def _finish(
+    cfg, clients, use_device, cycle, state, pending,
+    views, codec, ledger, eval_history, best, rounds_run,
+) -> FederatedResult:
+    """Final flush + best-snapshot restore + test evaluation."""
     if use_device:
         _flush_ledger(ledger, pending, views, codec, cfg.dim, cycle.k_per_client)
         cycle.sync_clients(state, clients)

@@ -31,6 +31,21 @@ def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_federation_mesh(
+    num_devices: int, axis_name: str = "clients"
+) -> jax.sharding.Mesh:
+    """1-D client-axis mesh for the federation engines (pod-mode simulation).
+
+    ``federated/simulation.py`` builds this when ``mesh_devices > 1`` and
+    hands it to :class:`repro.core.state.CycleEngine` /
+    :class:`~repro.core.state.SuperstepEngine`, which ``shard_map`` their
+    per-cycle / per-superstep programs over the ``clients`` axis (the client
+    count must be divisible by ``num_devices``).  The only collectives are
+    the round's one all-gather (sparse) / psum (sync).
+    """
+    return _make_mesh((num_devices,), (axis_name,))
+
+
 def mesh_context(mesh: jax.sharding.Mesh):
     """``jax.sharding.set_mesh(mesh)`` on jax >= 0.5; on jax <= 0.4.x the
     ``Mesh`` object is itself the equivalent context manager."""

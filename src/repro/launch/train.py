@@ -31,10 +31,14 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--sparsity", type=float, default=0.4)
     ap.add_argument("--engine", default="fused",
-                    choices=["fused", "batched", "reference"],
+                    choices=["fused", "superstep", "batched", "reference"],
                     help="fused = one device-resident program per cycle; "
+                         "superstep = one scanned program per ISM span; "
                          "batched = per-round jitted programs (oracle); "
                          "reference = numpy host protocol")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help=">1: pod mode — shard the client axis over a 1-D "
+                         "device mesh (clients must divide evenly)")
     ap.add_argument("--quantize-upload", action="store_true",
                     help="FedS+Q8: int8 row payloads on the wire")
     ap.add_argument("--sync-interval", type=int, default=4)
@@ -57,7 +61,8 @@ def main() -> None:
         rounds=args.rounds, local_epochs=args.local_epochs,
         batch_size=args.batch_size, num_negatives=args.negatives, lr=args.lr,
         sparsity_p=args.sparsity, sync_interval=args.sync_interval,
-        engine=args.engine, quantize_upload=args.quantize_upload,
+        engine=args.engine, mesh_devices=args.mesh_devices,
+        quantize_upload=args.quantize_upload,
         seed=args.seed,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)

@@ -8,6 +8,11 @@ communicate compile as one program or two.  So with the same seeds they must
 produce the same eval trajectory and bitwise-identical ledgers, over
 randomized heterogeneous federations (different per-client entity counts,
 triple counts, batches-per-epoch, and clients smaller than the batch size).
+
+The same contract extends one level up to ``engine="superstep"``
+(:class:`SuperstepEngine`): a whole ISM span scanned into ONE program must be
+trajectory- and ledger-bitwise-identical to the same rounds driven one
+``fused_cycle`` call at a time.
 """
 import json
 import os
@@ -19,7 +24,8 @@ import numpy as np
 import pytest
 
 from repro.core.protocol import build_comm_views
-from repro.core.state import CycleEngine
+from repro.core.state import CycleEngine, SuperstepEngine
+from repro.core.sync import compress_schedule
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.client import KGEClient
 from repro.federated.simulation import FederatedConfig, run_federated
@@ -117,6 +123,90 @@ def test_ledger_totals_independent_of_eval_cadence():
         == ledgers[1].bytes_int8_signs
         == ledgers[2].bytes_int8_signs
     )
+
+
+# ------------------------------------------------------ superstep == fused
+def test_compress_schedule_rle():
+    assert compress_schedule(["sparse", "sparse", "sync"]) == (
+        ("sparse", 2), ("sync", 1),
+    )
+    assert compress_schedule(["sync", "sparse", "sync", "sync"]) == (
+        ("sync", 1), ("sparse", 1), ("sync", 2),
+    )
+    assert compress_schedule([]) == ()
+    with pytest.raises(ValueError, match="unknown round kind"):
+        compress_schedule(["sparse", "dense"])
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_superstep_matches_fused_trajectory_and_ledger(seed):
+    """engine="superstep" (one scanned program per eval span) must be
+    trajectory- and ledger-bitwise-identical to engine="fused" (one program
+    per round) over the same ISM schedule."""
+    kg, clients, cfg = _instance(seed)
+    fused = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol="feds", engine="fused", **cfg),
+    )
+    sstep = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol="feds", engine="superstep", **cfg),
+    )
+    assert fused.eval_history == sstep.eval_history
+    assert fused.ledger.history == sstep.ledger.history
+    assert fused.ledger.params_transmitted == sstep.ledger.params_transmitted
+    assert fused.ledger.bytes_int8_signs == sstep.ledger.bytes_int8_signs
+    assert fused.test_mrr_cg == sstep.test_mrr_cg
+    assert fused.rounds_run == sstep.rounds_run
+    assert np.isfinite(sstep.test_mrr_cg)
+
+
+def test_superstep_equals_sequential_fused_cycles():
+    """One superstep over an ISM period (s sparse + 1 sync) + a train-only
+    round must leave bitwise-identical device state to the same rounds driven
+    one fused_cycle/train_cycle call at a time."""
+    kg = generate_kg(num_entities=130, num_relations=9, num_triples=1000, seed=0)
+    cd = partition_by_relation(kg, 3, seed=0)
+
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=48, num_negatives=4,
+                      lr=5e-3, seed=0)
+            for d in cd
+        ]
+
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    engine = SuperstepEngine(mk(), views, kg.num_entities,
+                             sparsity_p=0.5, local_epochs=2)
+    kinds = ("sparse", "sparse", "sync", "none")
+
+    sa = engine.init_state(mk(), seed=3)
+    sa, per_round, _losses = engine.superstep(sa, kinds)
+    downs_a = [np.asarray(d) for k, d in per_round if k == "sparse"]
+    assert [k for k, _ in per_round] == list(kinds)
+    assert all(d is None for k, d in per_round if k != "sparse")
+
+    sb = engine.init_state(mk(), seed=3)
+    downs_b = []
+    for kind in kinds:
+        if kind == "none":
+            sb, _jitter, _loss = engine.train_cycle(sb)
+        else:
+            sb, down, _loss = engine.fused_cycle(sb, sync=kind == "sync")
+            if kind == "sparse":
+                downs_b.append(np.asarray(down))
+
+    np.testing.assert_array_equal(np.asarray(sa.key), np.asarray(sb.key))
+    np.testing.assert_array_equal(np.asarray(downs_a), np.asarray(downs_b))
+    for name, a, b in (
+        ("entity", sa.arrays.params["entity"], sb.arrays.params["entity"]),
+        ("relation", sa.arrays.params["relation"], sb.arrays.params["relation"]),
+        ("hist", sa.arrays.hist, sb.arrays.hist),
+        ("mu_e", sa.arrays.opt.mu["entity"], sb.arrays.opt.mu["entity"]),
+        ("nu_e", sa.arrays.opt.nu["entity"], sb.arrays.opt.nu["entity"]),
+        ("step", sa.arrays.opt.step, sb.arrays.opt.step),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
 
 
 # ----------------------------------------------------------- state invariants
@@ -280,3 +370,48 @@ def test_fused_cycle_spmd_matches_host():
         assert rec["emb"] < 1e-5, (name, rec)
         assert rec["hist"] < 1e-5, (name, rec)
         assert rec["down"], (name, rec)
+
+
+_POD_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.simulation import FederatedConfig, run_federated
+
+kg = generate_kg(num_entities=120, num_relations=8, num_triples=900, seed=1)
+clients = partition_by_relation(kg, 2, seed=0)
+base = dict(method="transe", dim=8, rounds=4, local_epochs=1, batch_size=32,
+            num_negatives=4, lr=5e-3, sparsity_p=0.5, sync_interval=2,
+            eval_every=2, patience=99, max_eval_triples=30, seed=0)
+host = run_federated(clients, kg.num_entities,
+                     FederatedConfig(protocol="feds", engine="fused", **base))
+pod = run_federated(clients, kg.num_entities,
+                    FederatedConfig(protocol="feds", engine="superstep",
+                                    mesh_devices=2, **base))
+print(json.dumps({
+    "hist_eq": host.eval_history == pod.eval_history,
+    "ledger_eq": host.ledger.history == pod.ledger.history,
+    "params_eq": host.ledger.params_transmitted
+                 == pod.ledger.params_transmitted,
+    "mrr_eq": host.test_mrr_cg == pod.test_mrr_cg,
+}))
+"""
+
+
+def test_superstep_pod_simulation_matches_host_fused():
+    """The pod-mode simulation driver (mesh_devices=2, client axis sharded
+    under shard_map) must reproduce the host fused trajectory and ledger."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _POD_WORKER], capture_output=True, text=True,
+        env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out == {
+        "hist_eq": True, "ledger_eq": True, "params_eq": True, "mrr_eq": True,
+    }

@@ -1,0 +1,56 @@
+"""Docs lint: every relative markdown link in README/docs must resolve.
+
+Checks ``[text](target)`` links in README.md, docs/**/*.md, EXPERIMENTS.md,
+and ROADMAP.md: external (``http``/``mailto``) and intra-page (``#``)
+targets are skipped; everything else must exist on disk relative to the
+linking file (anchors stripped).  Exits non-zero listing broken links.
+
+  python tools/docs_lint.py
+
+CI pairs this with ``python -m compileall -q src`` as the docs-lint step.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def doc_files() -> list[Path]:
+    files = [ROOT / "README.md", ROOT / "EXPERIMENTS.md", ROOT / "ROADMAP.md"]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links() -> list[str]:
+    broken = []
+    for md in doc_files():
+        text = md.read_text()
+        # fenced code blocks may contain pseudo-links (e.g. mermaid)
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                broken.append(f"{md.relative_to(ROOT)}: {target}")
+    return broken
+
+
+def main() -> int:
+    bad = broken_links()
+    for b in bad:
+        print(f"BROKEN LINK  {b}")
+    files = len(doc_files())
+    if bad:
+        print(f"{len(bad)} broken link(s) across {files} file(s)")
+        return 1
+    print(f"docs lint OK ({files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
