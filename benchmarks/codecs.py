@@ -1,0 +1,140 @@
+"""Registry sweep: every wire codec at FB15k-237 scale, bytes + wall time.
+
+For each codec registered in :mod:`repro.core.codecs` (plus an ``ef=1``
+variant for codecs that support error feedback), one sparse FedS cycle runs
+through the fused :class:`repro.core.state.CycleEngine` at FB15k-237 scale
+(E=14541, D=256, C=3, local_epochs=3; ``REPRO_BENCH_FAST=1`` shrinks to a
+smoke size).  Reported per codec:
+
+* per-round wall time (the codec's encode/decode runs INSIDE the compiled
+  cycle, so this is the end-to-end cost of choosing it),
+* wire bytes and Eq.5-style params per round, from the codec's own ledger
+  accounting replayed with the measured per-client download counts.
+
+Because the sweep iterates the registry, a newly registered codec shows up
+here (and in ``BENCH_codecs.json``, published by CI) with zero glue.
+``--json PATH`` writes the machine-readable record.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.fused_cycle import (  # noqa: E402
+    BATCH, DIM, FAST, LOCAL_EPOCHS, NEGATIVES, NUM_CLIENTS, NUM_GLOBAL,
+    SPARSITY, TRIPLES, _make_clients,
+)
+from repro.core.codecs import get_codec, registered_codecs  # noqa: E402
+from repro.core.state import CycleEngine  # noqa: E402
+from repro.federated.comm import CommLedger  # noqa: E402
+
+
+def sweep_specs() -> list[tuple[str, object]]:
+    """(label, codec) for every registered codec + its ef variant if any."""
+    out = []
+    for name, cls in registered_codecs().items():
+        out.append((name, get_codec(name)))
+        if any(a.name == "ef" for a in cls.ARGS):
+            out.append((f"{name}:ef=1", get_codec(name, ef=True)))
+    return out
+
+
+def _round_ledger(codec, engine, down_counts) -> CommLedger:
+    """One sparse round's accounting with the measured download counts."""
+    led = CommLedger()
+    for v, k_c, dc in zip(engine.views, engine.k_per_client, down_counts):
+        codec.log_upload(led, int(k_c), DIM, v.num_shared)
+        codec.log_download(led, int(dc), DIM, v.num_shared)
+    return led
+
+
+def run(out=print):
+    rng = np.random.default_rng(0)
+    _, clients, views = _make_clients(rng)
+    out(
+        f"\n== codec sweep: 1 sparse cycle/codec through the fused engine, "
+        f"E={NUM_GLOBAL} D={DIM} C={NUM_CLIENTS} T={TRIPLES} B={BATCH} "
+        f"N={NEGATIVES} p={SPARSITY} =="
+    )
+    iters = 5 if FAST else 3
+    rows, records = [], {}
+    for label, codec in sweep_specs():
+        engine = CycleEngine(
+            clients, views, NUM_GLOBAL, sparsity_p=SPARSITY,
+            local_epochs=LOCAL_EPOCHS, codec=codec,
+        )
+        state = engine.init_state(clients, seed=0)
+        state, down, _ = engine.fused_cycle(state, sync=False)  # warm/compile
+        jax.block_until_ready(state.arrays.params["entity"])
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            state, down, _ = engine.fused_cycle(state, sync=False)
+            jax.block_until_ready(state.arrays.params["entity"])
+            best = min(best, time.perf_counter() - t0)
+        led = _round_ledger(codec, engine, np.asarray(down))
+        us = best * 1e6
+        rows.append((f"codecs.{label}", us, f"{led.bytes_int8_signs / 1e6:.3f}MB/rnd"))
+        records[label] = {
+            "us_per_round": us,
+            "bytes_per_round": led.bytes_int8_signs,
+            "params_per_round": led.params_transmitted,
+        }
+    base = records["identity"]["bytes_per_round"]
+    for name, us, derived in rows:
+        out(f"{name},{us:.1f},{derived}")
+    out(f"identity wire baseline: {base / 1e6:.3f} MB/round")
+    return rows, records
+
+
+def check_claims(records):
+    base = records["identity"]
+    notes = []
+    for label, rec in records.items():
+        if label == "identity":
+            continue
+        ratio = rec["bytes_per_round"] / base["bytes_per_round"]
+        slowdown = rec["us_per_round"] / base["us_per_round"]
+        ok = ratio < 1.0
+        notes.append(
+            f"[{'PASS' if ok else 'WARN'}] codec {label}: {ratio:.2f}x identity "
+            f"wire bytes/round at {slowdown:.2f}x wall time (expect < 1.0x bytes)"
+        )
+    return notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write a JSON record here")
+    args = ap.parse_args()
+    rows, records = run()
+    claims = check_claims(records)
+    for c in claims:
+        print(c)
+    if args.json:
+        rec = {
+            "bench": "codecs",
+            "fast": FAST,
+            "config": {
+                "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,
+                "local_epochs": LOCAL_EPOCHS, "triples": TRIPLES,
+                "batch": BATCH, "negatives": NEGATIVES, "sparsity": SPARSITY,
+            },
+            "codecs": records,
+            "claims": claims,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,9 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,engine,cycle,sstep,table1,table2,"
-                         "table3,table4,table5,table6,fig2,sweep,q8,roofline")
+                    help="comma list: kernels,engine,cycle,sstep,codecs,table1,"
+                         "table2,table3,table4,table5,table6,fig2,sweep,q8,"
+                         "roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -52,6 +53,13 @@ def main() -> None:
         rows = superstep.run()
         csv_rows += [tuple(r) for r in rows]
         claims += superstep.check_claims(rows)
+
+    if want("codecs"):
+        from benchmarks import codecs
+
+        rows, records = codecs.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += codecs.check_claims(records)
 
     suites = [
         ("table1", "table1_compression"),

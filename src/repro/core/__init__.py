@@ -7,12 +7,15 @@ This package is the paper's contribution:
   priority weights (Eq. 3-4)
 * :mod:`repro.core.sync` — Intermittent Synchronization Mechanism (§III-E)
 * :mod:`repro.core.protocol` — FedE / FedEP / FedEPL / FedS round logic
-* :mod:`repro.core.compression` — FedE-KD / FedE-SVD / FedE-SVD+ baselines
-  (the paper's negative finding, Table I)
+* :mod:`repro.core.compression` — the FedE-KD co-distillation baseline (the
+  paper's negative finding, Table I; the SVD baseline lives in the
+  ``lowrank`` codec now)
 * :mod:`repro.core.engine` — the unified jitted round: batched client state,
   shared host/SPMD implementation (RoundEngine)
-* :mod:`repro.core.codec` — pluggable wire codecs (identity / int8 rows)
-  owning payload transform + ledger accounting
+* :mod:`repro.core.codecs` — the registry-backed wire-codec subsystem
+  (identity / int8 / lowrank / topk-dims) owning payload encode/decode +
+  ledger accounting, with optional device-resident error-feedback residual
+  state (``repro.core.codec`` is a back-compat shim)
 * :mod:`repro.core.distributed` — TPU-native sparse-sync collective
   (shard_map + lax collectives, static-K masked buffers)
 """
@@ -28,7 +31,17 @@ from repro.core.aggregate import (
     personalized_aggregate,
     fede_aggregate,
 )
-from repro.core.codec import IdentityCodec, Int8RowCodec, WireCodec, get_codec
+from repro.core.codecs import (
+    IdentityCodec,
+    Int8RowCodec,
+    LowRankCodec,
+    TopKDimsCodec,
+    WireCodec,
+    codec_usage,
+    get_codec,
+    parse_codec_spec,
+    registered_codecs,
+)
 from repro.core.engine import RoundEngine
 from repro.core.sync import is_sync_round, comm_ratio_worst_case
 
@@ -37,7 +50,12 @@ __all__ = [
     "WireCodec",
     "IdentityCodec",
     "Int8RowCodec",
+    "LowRankCodec",
+    "TopKDimsCodec",
+    "codec_usage",
     "get_codec",
+    "parse_codec_spec",
+    "registered_codecs",
     "change_scores",
     "select_top_k",
     "upstream_sparsify",

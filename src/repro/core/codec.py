@@ -1,109 +1,33 @@
-"""Pluggable wire codecs for FedS protocol payloads.
+"""Back-compat shim: the codec layer moved to :mod:`repro.core.codecs`.
 
-A :class:`WireCodec` owns BOTH sides of putting selected embedding rows on
-the wire:
-
-* the value transform — ``roundtrip`` is encode+decode fused, i.e. "the rows
-  as the receiver sees them".  It is jit-safe (pure jnp) so the batched
-  :class:`repro.core.engine.RoundEngine` can apply it inside the compiled
-  round, and the numpy reference path can apply it to ragged per-client
-  payloads.
-* the :class:`repro.federated.comm.CommLedger` accounting for both protocol
-  legs, so the byte/parameter math for a codec lives in exactly one place
-  instead of inline branches in the simulation loop.
-
-Ledger conventions (match the paper's Eq. 5 accounting): ``params`` are
-float-equivalent parameter counts (an int8 element counts as 1/4 parameter);
-``bytes`` are realistic wire bytes with int8 sign vectors.  The per-entity
-sign vector is transmitted on every leg, including empty downloads — the
-receiver cannot know the download was empty without it.
-
-Codecs only ever see **sparse** rounds: under the ISM schedule
-(:mod:`repro.core.sync`) the one-in-``s+1`` sync rounds are full FedE
-exchanges accounted at full precision directly by the ledger
-(``log_full_exchange``), which is what makes Eq. 5's ``p*s + 1`` numerator
-shape.  The device engines apply ``roundtrip`` inside their compiled
-programs (per round for :class:`~repro.core.state.CycleEngine`, inside the
-scanned span for :class:`~repro.core.state.SuperstepEngine`) and replay the
-per-leg accounting calls at eval-boundary ledger flushes.
+PR 1 introduced this module with two hard-coded codecs; PR 4 grew it into a
+registry-backed package (``core/codecs/``) with four codecs and optional
+device-resident error-feedback residual state.  Import from
+:mod:`repro.core.codecs` in new code; this shim re-exports the public
+surface so existing imports keep working.
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING
+from repro.core.codecs import (
+    IdentityCodec,
+    Int8RowCodec,
+    LowRankCodec,
+    TopKDimsCodec,
+    WireCodec,
+    codec_usage,
+    get_codec,
+    parse_codec_spec,
+    registered_codecs,
+)
 
-import jax.numpy as jnp
-
-from repro.core.sparsify import dequantize_rows, quantize_rows
-
-if TYPE_CHECKING:  # avoid a core -> federated import cycle at runtime
-    from repro.federated.comm import CommLedger
-
-
-class WireCodec:
-    """Interface: value round-trip + per-leg ledger accounting."""
-
-    name = "abstract"
-    # False when roundtrip is the identity — lets ragged host paths skip the
-    # per-message device round-trip entirely.
-    transforms_values = True
-
-    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
-        """(k, D) rows -> (k, D) rows as decoded by the receiver (jit-safe)."""
-        raise NotImplementedError
-
-    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        """Account one client's upstream leg (k selected rows)."""
-        raise NotImplementedError
-
-    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        """Account one client's downstream leg (k aggregated rows)."""
-        raise NotImplementedError
-
-
-class IdentityCodec(WireCodec):
-    """Full-precision f32 rows on the wire — the paper's FedS protocol."""
-
-    name = "identity"
-    transforms_values = False
-
-    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
-        return values
-
-    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        ledger.log_upload_sparse(k, dim, num_shared)
-
-    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        ledger.log_download_sparse(k, dim, num_shared)
-
-
-class Int8RowCodec(WireCodec):
-    """FedS+Q8: row-wise symmetric int8 payloads + one f32 scale per row.
-
-    Beyond-paper extension (EXPERIMENTS.md §Repro): precision is reduced only
-    on the wire, never in the training state.  Upstream leg: int8 values
-    (dim/4 param-equivalents per row) + f32 scale + i32 index per row + the
-    (num_shared,) sign vector.  Downstream leg additionally carries the f32
-    priority count per row.
-    """
-
-    name = "int8-rows"
-
-    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
-        return dequantize_rows(*quantize_rows(values))
-
-    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        ledger.params_transmitted += k * dim / 4 + k + num_shared
-        ledger.bytes_int8_signs += k * dim + k * 4 + num_shared + k * 4
-
-    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
-        ledger.params_transmitted += k * dim / 4 + 2 * k + num_shared
-        # int8 values + (scale, priority) f32 pair + i32 index per row + sign
-        ledger.bytes_int8_signs += k * (dim + 8) + k * 4 + num_shared
-
-
-def get_codec(name: str) -> WireCodec:
-    """Codec registry for config-level selection."""
-    codecs = {c.name: c for c in (IdentityCodec, Int8RowCodec)}
-    if name not in codecs:
-        raise ValueError(f"unknown wire codec {name!r}; known: {sorted(codecs)}")
-    return codecs[name]()
+__all__ = [
+    "WireCodec",
+    "IdentityCodec",
+    "Int8RowCodec",
+    "LowRankCodec",
+    "TopKDimsCodec",
+    "codec_usage",
+    "get_codec",
+    "parse_codec_spec",
+    "registered_codecs",
+]

@@ -1,0 +1,50 @@
+"""Pluggable wire-compression codec subsystem for FedS protocol payloads.
+
+Registry-backed: every codec is a set of jit-safe ``encode``/``decode``
+pieces plus per-leg :class:`repro.federated.comm.CommLedger` accounting,
+registered under a name the simulation/CLI select by spec string
+(``name:key=val,...``).  Lossy codecs optionally carry device-resident
+error-feedback residual state threaded through the engine scans (see
+:mod:`repro.core.codecs.base` for the full contract, docs/architecture.md
+for where the pieces sit in the compiled programs, and EXPERIMENTS.md
+§Codecs for measurements).
+
+Registered codecs:
+
+* ``identity``  — full-precision f32 rows (the paper's FedS protocol)
+* ``int8``      — row-wise symmetric int8 + f32 scale (FedS+Q8; alias
+  ``int8-rows``)
+* ``lowrank``   — per-row truncated SVD of the ``(m, cols)`` reshape (the
+  absorbed FedE-SVD Table-I baseline, arXiv:2412.13442-style)
+* ``topk-dims`` — per-row dimension Top-K, composing parameter-wise
+  sparsification with the paper's entity-wise selection
+
+``repro.core.codec`` remains as a back-compat shim over this package.
+"""
+from repro.core.codecs.base import CodecArg, EF_ARG, WireCodec
+from repro.core.codecs.identity import IdentityCodec
+from repro.core.codecs.int8 import Int8RowCodec
+from repro.core.codecs.lowrank import LowRankCodec
+from repro.core.codecs.topk_dims import TopKDimsCodec
+from repro.core.codecs.registry import (
+    codec_usage,
+    get_codec,
+    parse_codec_spec,
+    register,
+    registered_codecs,
+)
+
+__all__ = [
+    "CodecArg",
+    "EF_ARG",
+    "WireCodec",
+    "IdentityCodec",
+    "Int8RowCodec",
+    "LowRankCodec",
+    "TopKDimsCodec",
+    "codec_usage",
+    "get_codec",
+    "parse_codec_spec",
+    "register",
+    "registered_codecs",
+]

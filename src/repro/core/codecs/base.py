@@ -1,0 +1,140 @@
+"""The wire-codec interface: jit-safe encode/decode pieces + ledger math.
+
+A :class:`WireCodec` owns every aspect of putting selected embedding rows on
+the wire:
+
+* the **value transform** — ``encode`` maps ``(k, D)`` rows to a payload
+  pytree (what is actually transmitted), ``decode`` maps it back to ``(k, D)``
+  rows, and ``roundtrip = decode(encode(.))`` is the fused "rows as the
+  receiver sees them" path the compiled engines apply inside their programs
+  (per round for :class:`repro.core.state.CycleEngine`, inside the scanned
+  span for :class:`repro.core.state.SuperstepEngine`).  All three are
+  jit-safe (pure jnp, static shapes), so the same codec object serves the
+  host jit, the ``shard_map`` pod programs, and the ragged numpy reference
+  path.
+* the :class:`repro.federated.comm.CommLedger` accounting for both protocol
+  legs, so a codec's byte/parameter math lives in exactly one place.
+  Conventions (match the paper's Eq. 5 accounting): ``params`` are
+  float-equivalent parameter counts (an int8 element counts as 1/4
+  parameter; row indices are *not* params), ``bytes`` are realistic wire
+  bytes including i32 row indices and int8 sign vectors.  The per-entity
+  sign vector is transmitted on every leg, including empty downloads — the
+  receiver cannot know the download was empty without it.
+* optional **error-feedback residual state** (``ef=True`` on lossy codecs):
+  a device-resident ``(C, Ns_max, D)`` buffer carried in
+  :class:`repro.core.state.StateArrays` that accumulates, per shared-entity
+  slot, whatever the codec dropped the last time that row was transmitted.
+  The residual is re-injected into the row before the next upstream encode,
+  so compression error is *delayed*, never *lost* — the standard fix for
+  the universal-precision-loss problem the paper identifies (§III-A).  See
+  :func:`repro.core.engine.batched_sparse_round` for the exact update rule
+  and EXPERIMENTS.md §Codecs for the contract (sync rounds transmit exact
+  values and therefore clear the residual).
+
+Codecs only ever see **sparse** rounds: under the ISM schedule
+(:mod:`repro.core.sync`) the one-in-``s+1`` sync rounds are full FedE
+exchanges accounted at full precision directly by the ledger
+(``log_full_exchange``), which is what makes Eq. 5's ``p*s + 1`` numerator
+shape.
+
+Every concrete codec registers itself as a leafless pytree node (hyper-
+parameters as static aux data), so codec objects can ride inside pytrees
+and jit closures cache correctly across engine rebuilds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # avoid a core -> federated import cycle at runtime
+    from repro.federated.comm import CommLedger
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecArg:
+    """One accepted codec kwarg — the single source of truth shared by the
+    constructor, ``--codec name:key=val,...`` CLI parsing, and the error
+    messages the registry emits."""
+
+    name: str
+    type: type  # int | float | bool
+    default: Any
+    help: str
+
+
+#: The shared error-feedback switch lossy codecs opt into.
+EF_ARG = CodecArg(
+    "ef", bool, False,
+    "device-resident error-feedback residuals (re-inject dropped error)",
+)
+
+
+class WireCodec:
+    """Interface: encode/decode value transform + per-leg ledger accounting."""
+
+    name = "abstract"
+    #: False when roundtrip is the identity — lets ragged host paths skip the
+    #: per-message device round-trip entirely.
+    transforms_values = True
+    #: Accepted constructor kwargs (single source of truth for the CLI).
+    ARGS: Tuple[CodecArg, ...] = ()
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        # concrete codecs become leafless pytree nodes: hyper-parameters are
+        # static aux data, so tree ops pass them through untouched
+        if cls.__dict__.get("name", "abstract") != "abstract":
+            jax.tree_util.register_pytree_node(
+                cls,
+                lambda c: ((), tuple(sorted(c.config().items()))),
+                lambda aux, _, cls=cls: cls(**dict(aux)),
+            )
+
+    # ------------------------------------------------------------- identity
+    def config(self) -> dict:
+        """Constructor kwargs of this instance (keyed by ``CodecArg.name``)."""
+        return {a.name: getattr(self, a.name) for a in self.ARGS}
+
+    @property
+    def has_residual(self) -> bool:
+        """True when this instance carries error-feedback residual state."""
+        return bool(getattr(self, "ef", False))
+
+    def __eq__(self, other) -> bool:
+        return type(self) is type(other) and self.config() == other.config()
+
+    def __hash__(self) -> int:
+        return hash((type(self), tuple(sorted(self.config().items()))))
+
+    def __repr__(self) -> str:
+        kw = ",".join(f"{k}={v}" for k, v in sorted(self.config().items()))
+        return f"{self.name}:{kw}" if kw else self.name
+
+    # ------------------------------------------------------ value transform
+    def encode(self, values: jnp.ndarray):
+        """(k, D) rows -> transmitted payload pytree (jit-safe)."""
+        raise NotImplementedError
+
+    def decode(self, payload) -> jnp.ndarray:
+        """Payload pytree -> (k, D) rows as reconstructed by the receiver."""
+        raise NotImplementedError
+
+    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
+        """(k, D) rows -> (k, D) rows as decoded by the receiver (jit-safe).
+
+        The fused path the compiled engines apply; defaults to
+        ``decode(encode(values))`` and must stay consistent with it.
+        """
+        return self.decode(self.encode(values))
+
+    # ----------------------------------------------------- ledger accounting
+    def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        """Account one client's upstream leg (k selected rows)."""
+        raise NotImplementedError
+
+    def log_download(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:
+        """Account one client's downstream leg (k aggregated rows)."""
+        raise NotImplementedError

@@ -1,0 +1,30 @@
+"""Full-precision f32 rows on the wire — the paper's FedS protocol."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.codecs.base import WireCodec
+from repro.core.codecs.registry import register
+
+
+@register
+class IdentityCodec(WireCodec):
+    """Full-precision f32 rows on the wire — the paper's FedS protocol."""
+
+    name = "identity"
+    transforms_values = False
+
+    def encode(self, values: jnp.ndarray) -> jnp.ndarray:
+        return values
+
+    def decode(self, payload: jnp.ndarray) -> jnp.ndarray:
+        return payload
+
+    def roundtrip(self, values: jnp.ndarray) -> jnp.ndarray:
+        return values
+
+    def log_upload(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        ledger.log_upload_sparse(k, dim, num_shared)
+
+    def log_download(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        ledger.log_download_sparse(k, dim, num_shared)

@@ -1,0 +1,42 @@
+"""Row-wise symmetric int8 payloads + one f32 scale per row (FedS+Q8)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.codecs.base import EF_ARG, WireCodec
+from repro.core.codecs.registry import register
+from repro.core.sparsify import dequantize_rows, quantize_rows
+
+
+@register(aliases=("int8-rows",))
+class Int8RowCodec(WireCodec):
+    """FedS+Q8: row-wise symmetric int8 payloads + one f32 scale per row.
+
+    Beyond-paper extension (EXPERIMENTS.md §Repro): precision is reduced only
+    on the wire, never in the training state.  Upstream leg: int8 values
+    (dim/4 param-equivalents per row) + f32 scale + i32 index per row + the
+    (num_shared,) sign vector.  Downstream leg additionally carries the f32
+    priority count per row.  With ``ef=1`` the per-row quantization error is
+    banked in the error-feedback residual and re-injected next round.
+    """
+
+    name = "int8"
+    ARGS = (EF_ARG,)
+
+    def __init__(self, ef: bool = False):
+        self.ef = bool(ef)
+
+    def encode(self, values: jnp.ndarray):
+        return quantize_rows(values)
+
+    def decode(self, payload) -> jnp.ndarray:
+        return dequantize_rows(*payload)
+
+    def log_upload(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        ledger.params_transmitted += k * dim / 4 + k + num_shared
+        ledger.bytes_int8_signs += k * dim + k * 4 + num_shared + k * 4
+
+    def log_download(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        ledger.params_transmitted += k * dim / 4 + 2 * k + num_shared
+        # int8 values + (scale, priority) f32 pair + i32 index per row + sign
+        ledger.bytes_int8_signs += k * (dim + 8) + k * 4 + num_shared

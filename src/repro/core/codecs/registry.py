@@ -1,0 +1,130 @@
+"""Codec registry: name -> class, CLI spec parsing, self-describing errors.
+
+The registry is the single source of truth for which codecs exist and which
+kwargs each accepts (via :attr:`WireCodec.ARGS`): construction
+(:func:`get_codec`), the ``--codec name:key=val,...`` CLI surface
+(:func:`parse_codec_spec`), and every parse error message
+(:func:`codec_usage`) all derive from it, so adding a codec is one
+``@register`` away from being constructible, launchable, and documented in
+error output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Type
+
+from repro.core.codecs.base import CodecArg, WireCodec
+
+_REGISTRY: Dict[str, Type[WireCodec]] = {}
+_ALIASES: Dict[str, str] = {}
+
+_TRUE = {"1", "true", "yes", "on"}
+_FALSE = {"0", "false", "no", "off"}
+
+
+def register(cls: Type[WireCodec] = None, *, aliases: tuple = ()):
+    """Class decorator: register a codec under ``cls.name`` (+ aliases)."""
+
+    def _do(cls: Type[WireCodec]) -> Type[WireCodec]:
+        if cls.name in _REGISTRY or cls.name in _ALIASES:
+            raise ValueError(f"codec name {cls.name!r} already registered")
+        for a in aliases:
+            if a in _REGISTRY or a in _ALIASES:
+                raise ValueError(f"codec alias {a!r} already registered")
+        _REGISTRY[cls.name] = cls
+        for a in aliases:
+            _ALIASES[a] = cls.name
+        return cls
+
+    return _do(cls) if cls is not None else _do
+
+
+def registered_codecs() -> Dict[str, Type[WireCodec]]:
+    """Registered codec classes by canonical name (sorted, aliases excluded)."""
+    return dict(sorted(_REGISTRY.items()))
+
+
+def codec_usage() -> str:
+    """One line per registered codec: ``name:key=type(default),...  help``."""
+    lines = []
+    for name, cls in registered_codecs().items():
+        if cls.ARGS:
+            kw = ",".join(
+                f"{a.name}={a.type.__name__}({a.default})" for a in cls.ARGS
+            )
+            spec = f"{name}:{kw}"
+        else:
+            spec = f"{name} (no kwargs)"
+        doc_lines = (cls.__doc__ or "").strip().splitlines()
+        doc = doc_lines[0] if doc_lines else ""
+        lines.append(f"  {spec}  — {doc}")
+    return "\n".join(lines)
+
+
+def _coerce(arg: CodecArg, raw):
+    """Coerce a CLI string to the arg's declared type (pass non-str through)."""
+    if not isinstance(raw, str):
+        return raw
+    if arg.type is bool:
+        low = raw.lower()
+        if low in _TRUE:
+            return True
+        if low in _FALSE:
+            return False
+        raise ValueError(
+            f"codec kwarg {arg.name!r} expects a bool "
+            f"({'/'.join(sorted(_TRUE | _FALSE))}), got {raw!r}"
+        )
+    try:
+        return arg.type(raw)
+    except ValueError:
+        raise ValueError(
+            f"codec kwarg {arg.name!r} expects {arg.type.__name__}, got {raw!r}"
+        ) from None
+
+
+def get_codec(name: str, **kwargs) -> WireCodec:
+    """Construct a registered codec by (canonical or alias) name.
+
+    Unknown names and kwargs raise ``ValueError`` messages listing the
+    registered codec names and their accepted kwargs — the registry is the
+    single source of truth the CLI leans on.
+    """
+    canonical = _ALIASES.get(name, name)
+    if canonical not in _REGISTRY:
+        raise ValueError(
+            f"unknown wire codec {name!r}; registered codecs:\n{codec_usage()}"
+        )
+    cls = _REGISTRY[canonical]
+    by_name = {a.name: a for a in cls.ARGS}
+    unknown = sorted(set(kwargs) - set(by_name))
+    if unknown:
+        accepted = ", ".join(
+            f"{a.name}={a.type.__name__}({a.default})" for a in cls.ARGS
+        ) or "none"
+        raise ValueError(
+            f"unknown kwarg(s) {unknown} for codec {canonical!r}; "
+            f"accepted kwargs: {accepted}"
+        )
+    coerced = {k: _coerce(by_name[k], v) for k, v in kwargs.items()}
+    return cls(**coerced)
+
+
+def parse_codec_spec(spec: str) -> WireCodec:
+    """Parse ``name`` or ``name:key=val,key=val,...`` into a codec instance.
+
+    The CLI surface of the registry (``launch/train.py --codec``); every
+    error lists the registered codecs and their accepted kwargs.
+    """
+    name, _, rest = spec.partition(":")
+    name = name.strip()
+    kwargs = {}
+    if rest:
+        for item in rest.split(","):
+            key, sep, val = item.partition("=")
+            if not sep or not key.strip():
+                raise ValueError(
+                    f"bad codec spec {spec!r}: expected name:key=val,... ; "
+                    f"registered codecs:\n{codec_usage()}"
+                )
+            kwargs[key.strip()] = val.strip()
+    return get_codec(name, **kwargs)

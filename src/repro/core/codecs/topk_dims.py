@@ -1,0 +1,64 @@
+"""Per-row dimension sparsification composing with the entity-wise Top-K."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codecs.base import EF_ARG, CodecArg, WireCodec
+from repro.core.codecs.registry import register
+
+
+@register
+class TopKDimsCodec(WireCodec):
+    """Keep only the top ``frac`` of each row's dimensions by magnitude.
+
+    The second sparsification axis, composed with the paper's entity-wise
+    selection: FedS picks *which rows* go on the wire, this codec then drops
+    each selected row's smallest-magnitude coordinates (parameter-wise Top-K
+    *within* the row — exactly the generic-FL sparsifier the paper contrasts
+    against, §III-B).  Transmitted per row: ``k_dims`` f32 values + ``k_dims``
+    i16 dimension indices.  ``ef=1`` banks the dropped coordinates in the
+    error-feedback residual so they are transmitted eventually instead of
+    never.
+    """
+
+    name = "topk-dims"
+    ARGS = (
+        CodecArg("frac", float, 0.25, "fraction of dimensions kept per row"),
+        EF_ARG,
+    )
+
+    def __init__(self, frac: float = 0.25, ef: bool = False):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk-dims requires 0 < frac <= 1, got {frac}")
+        self.frac = float(frac)
+        self.ef = bool(ef)
+
+    def k_dims(self, dim: int) -> int:
+        """Kept coordinates per row (static given the row width)."""
+        return min(dim, max(1, int(round(dim * self.frac))))
+
+    def encode(self, values: jnp.ndarray):
+        kd = self.k_dims(values.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(values), kd)  # (k, kd), stable order
+        vals = jnp.take_along_axis(values, idx, axis=-1)
+        return vals, idx, values.shape[-1]
+
+    def decode(self, payload) -> jnp.ndarray:
+        vals, idx, dim = payload
+        zeros = jnp.zeros(vals.shape[:-1] + (dim,), vals.dtype)
+        return jax.vmap(lambda z, i, v: z.at[i].set(v))(zeros, idx, vals)
+
+    def log_upload(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        kd = self.k_dims(dim)
+        ledger.params_transmitted += k * kd + num_shared
+        # f32 values + i16 dim indices + i32 row index per row + sign vector
+        ledger.bytes_int8_signs += k * kd * 4 + k * kd * 2 + k * 4 + num_shared
+
+    def log_download(self, ledger, k: int, dim: int, num_shared: int) -> None:
+        kd = self.k_dims(dim)
+        ledger.params_transmitted += k * kd + k + num_shared
+        # values + dim indices + f32 priority + i32 row index + sign vector
+        ledger.bytes_int8_signs += (
+            k * kd * 4 + k * kd * 2 + k * 4 + k * 4 + num_shared
+        )

@@ -1,19 +1,27 @@
-"""Universal-precision-reduction baselines: FedE-KD, FedE-SVD, FedE-SVD+.
+"""Universal-precision-reduction baseline: FedE-KD (co-distillation).
 
-These implement the paper's *negative finding* (§III-A, Table I, Appendix
-VI-A/B): compressing ALL entity embeddings — co-distillation to a lower
-dimension, or low-rank truncation of the update matrices — slows convergence
-enough that TOTAL communication goes UP despite the smaller per-round
-payload.  They exist as first-class baselines so Table I is reproducible.
+The paper's *negative finding* (§III-A, Table I, Appendix VI-A/B) is that
+compressing ALL entity embeddings slows convergence enough that TOTAL
+communication goes UP despite the smaller per-round payload.  Two baseline
+families reproduce it:
 
-* FedE-KD: each client holds low- and high-dim embeddings; both train on
-  local triples with mutual KL co-distillation (Eq. 6); only the low-dim
-  table is communicated (FedE-style full exchange).
-* FedE-SVD: per-entity embedding *updates* are reshaped to (m, n) and
-  truncated to the top ``r`` singular values before transmission, both
-  directions.
-* FedE-SVD+: additionally retrains the factors (U, s, V) on the local loss
-  with an orthogonality regularizer (Eq. 7) before truncation.
+* **FedE-KD** (this module): each client holds low- and high-dim embeddings;
+  both train on local triples with mutual KL co-distillation (Eq. 6); only
+  the low-dim table is communicated (FedE-style full exchange).  KD is a
+  *model-side* compression — it changes what is trained, not just what is
+  transmitted — so it genuinely needs this standalone host pipeline.
+* **FedE-SVD / FedE-SVD+** — low-rank truncation of transmissions.  The
+  standalone numpy pipeline that used to live here was absorbed into the
+  ``lowrank`` wire codec (:mod:`repro.core.codecs.lowrank`), which runs the
+  same per-row truncated-SVD math *inside* the compiled engines: drive it
+  with ``run_federated(..., FederatedConfig(protocol="feds_nosync",
+  sparsity_p=1.0, codec="lowrank:cols=8,rank=2"))`` for the full-exchange
+  Table-I shape (every shared row transmitted low-rank every round).  SVD+'s
+  factor fine-tuning retired with the host pipeline (EXPERIMENTS.md
+  §Codecs documents the delta: the codec truncates transmitted *embeddings*
+  where the retired pipeline truncated update deltas).
+
+`benchmarks/table1_compression.py` runs both baselines against FedE.
 """
 from __future__ import annotations
 
@@ -25,93 +33,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import Upload, fede_aggregate
-from repro.core.protocol import ClientCommView, build_comm_views
+from repro.core.protocol import build_comm_views
 from repro.data.partition import ClientData
-from repro.federated.client import KGEClient, _train_epoch
+from repro.federated.client import KGEClient
 from repro.federated.comm import CommLedger
 from repro.federated.metrics import weighted_average
 from repro.kge.scoring import KGEModel, init_kge_params, kge_loss, score_triples
 from repro.train.optimizer import adam_init, adam_update
-
-# --------------------------------------------------------------------- SVD
-
-
-def svd_compress(updates: np.ndarray, n_cols: int, rank: int):
-    """Truncated per-entity SVD of update rows.
-
-    updates (N, D) -> factors (U (N, m, r), s (N, r), V (N, n, r)) with
-    D = m * n_cols.  Transmitted parameter count per entity:
-    m*r + r + n*r (Appendix VI-B).
-    """
-    n_rows, dim = updates.shape
-    m = dim // n_cols
-    mat = updates.reshape(n_rows, m, n_cols)
-    u, s, vt = np.linalg.svd(mat, full_matrices=False)
-    return u[:, :, :rank], s[:, :rank], np.transpose(vt[:, :rank, :], (0, 2, 1))
-
-
-def svd_restore(u: np.ndarray, s: np.ndarray, v: np.ndarray, dim: int) -> np.ndarray:
-    """Inverse of :func:`svd_compress` (lossy)."""
-    mat = np.einsum("nmr,nr,nkr->nmk", u, s, v)
-    return mat.reshape(mat.shape[0], dim)
-
-
-def svd_params_per_entity(dim: int, n_cols: int, rank: int) -> int:
-    m = dim // n_cols
-    return m * rank + rank + n_cols * rank
-
-
-# ------------------------------------------------------------------- SVD+
-@functools.partial(jax.jit, static_argnames=("method", "gamma", "lr", "alpha", "steps"))
-def _svdp_refine(
-    base_entity,  # (N, D) embeddings at round start
-    u,  # (N, m, r)
-    s,  # (N, r)
-    v,  # (N, n, r)
-    relation,  # (R, Dr)
-    pos,
-    neg_t,
-    neg_h,
-    method: str,
-    gamma: float,
-    lr: float,
-    alpha: float,
-    steps: int,
-):
-    """Final-epoch factor training with orthogonality regularization (Eq. 7)."""
-    n, dim = base_entity.shape
-    r = s.shape[-1]
-
-    def entity_of(f):
-        delta = jnp.einsum("nmr,nr,nkr->nmk", f["u"], f["s"], f["v"]).reshape(n, dim)
-        return base_entity + delta
-
-    def loss_fn(f, batch):
-        p, nt, nh = batch
-        params = {"entity": entity_of(f), "relation": relation}
-        l_kge = kge_loss(params, p, nt, nh, method, gamma)
-        eye = jnp.eye(r)
-        ortho = (
-            jnp.mean(jnp.sum((jnp.einsum("nmr,nms->nrs", f["u"], f["u"]) - eye) ** 2, (-2, -1)))
-            + jnp.mean(jnp.sum((jnp.einsum("nkr,nks->nrs", f["v"], f["v"]) - eye) ** 2, (-2, -1)))
-        ) / (r * r)
-        return l_kge + alpha * ortho
-
-    factors = {"u": u, "s": s, "v": v}
-    opt = adam_init(factors)
-
-    def step_fn(carry, batch):
-        f, opt = carry
-        _, grads = jax.value_and_grad(loss_fn)(f, batch)
-        f, opt = adam_update(grads, opt, f, lr)
-        return (f, opt), 0.0
-
-    nb = pos.shape[0]
-    take = min(steps, nb)
-    (factors, _), _ = jax.lax.scan(
-        step_fn, (factors, opt), (pos[:take], neg_t[:take], neg_h[:take])
-    )
-    return factors["u"], factors["s"], factors["v"]
 
 
 # --------------------------------------------------------------------- KD
@@ -167,14 +95,10 @@ def _kd_train_epoch(
 
 @dataclasses.dataclass
 class CompressionConfig:
-    strategy: str = "svd"  # kd | svd | svdp
+    strategy: str = "kd"  # only "kd" — svd/svdp absorbed into the lowrank codec
     method: str = "transe"
     dim: int = 256
     kd_low_dim: int = 192
-    svd_cols: int = 8
-    svd_rank: int = 5
-    svdp_alpha: float = 0.05
-    svdp_steps: int = 8
     rounds: int = 100
     local_epochs: int = 3
     batch_size: int = 512
@@ -193,8 +117,20 @@ def run_compression(
     cfg: CompressionConfig,
     verbose: bool = False,
 ):
-    """Run FedE-{KD,SVD,SVD+}; returns a FederatedResult-compatible record."""
+    """Run FedE-KD; returns a FederatedResult-compatible record.
+
+    The SVD strategies route through the real engines now — see the module
+    docstring for the ``codec="lowrank"`` invocation.
+    """
     from repro.federated.simulation import FederatedResult, FederatedConfig, _snapshot, _restore
+
+    if cfg.strategy != "kd":
+        raise ValueError(
+            f"strategy {cfg.strategy!r} retired from the host pipeline; "
+            "FedE-SVD now runs through the engines via "
+            "FederatedConfig(protocol='feds_nosync', sparsity_p=1.0, "
+            "codec='lowrank:cols=...,rank=...') — only 'kd' remains here"
+        )
 
     clients = [
         KGEClient(
@@ -215,91 +151,48 @@ def run_compression(
     best = {"mrr": -1.0, "round": 0, "snap": None}
     declines, prev_mrr, rounds_run = 0, -1.0, 0
 
-    if cfg.strategy == "kd":
-        lo_models = [
-            KGEModel(method=cfg.method, num_entities=d.num_entities,  # type: ignore[arg-type]
-                     num_relations=d.num_relations, dim=cfg.kd_low_dim)
-            for d in clients_data
-        ]
-        params_lo = [
-            init_kge_params(jax.random.PRNGKey(cfg.seed * 31 + i + 1), m)
-            for i, m in enumerate(lo_models)
-        ]
-        opt_lo = [adam_init(p) for p in params_lo]
-        per_entity = cfg.kd_low_dim
-    else:
-        per_entity = svd_params_per_entity(cfg.dim, cfg.svd_cols, cfg.svd_rank)
+    lo_models = [
+        KGEModel(method=cfg.method, num_entities=d.num_entities,  # type: ignore[arg-type]
+                 num_relations=d.num_relations, dim=cfg.kd_low_dim)
+        for d in clients_data
+    ]
+    params_lo = [
+        init_kge_params(jax.random.PRNGKey(cfg.seed * 31 + i + 1), m)
+        for i, m in enumerate(lo_models)
+    ]
+    opt_lo = [adam_init(p) for p in params_lo]
+    per_entity = cfg.kd_low_dim
 
     for t in range(cfg.rounds):
         rounds_run = t + 1
         uploads = []
-        if cfg.strategy == "kd":
-            for i, c in enumerate(clients):
-                for _ in range(cfg.local_epochs):
-                    stacked = [b for b in c.loader.epoch()]
-                    pos = jnp.asarray(np.stack([b[0] for b in stacked]))
-                    nt = jnp.asarray(np.stack([b[1] for b in stacked]))
-                    nh = jnp.asarray(np.stack([b[2] for b in stacked]))
-                    params_lo[i], c.params, opt_lo[i], c.opt_state, _ = _kd_train_epoch(
-                        params_lo[i], c.params, opt_lo[i], c.opt_state,
-                        pos, nt, nh, cfg.method, cfg.gamma, cfg.lr, 1.0,
-                    )
-                v = views[i]
-                uploads.append(Upload(
-                    client_id=i,
-                    entity_ids=v.shared_global.astype(np.int64),
-                    values=np.asarray(params_lo[i]["entity"])[v.shared_local],
-                ))
-                ledger.params_transmitted += v.num_shared * per_entity
-                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
-            mean, _ = fede_aggregate(uploads, num_global_entities)
-            for i, v in enumerate(views):
-                params_lo[i]["entity"] = (
-                    params_lo[i]["entity"]
-                    .at[jnp.asarray(v.shared_local)]
-                    .set(jnp.asarray(mean[v.shared_global]))
+        for i, c in enumerate(clients):
+            for _ in range(cfg.local_epochs):
+                stacked = [b for b in c.loader.epoch()]
+                pos = jnp.asarray(np.stack([b[0] for b in stacked]))
+                nt = jnp.asarray(np.stack([b[1] for b in stacked]))
+                nh = jnp.asarray(np.stack([b[2] for b in stacked]))
+                params_lo[i], c.params, opt_lo[i], c.opt_state, _ = _kd_train_epoch(
+                    params_lo[i], c.params, opt_lo[i], c.opt_state,
+                    pos, nt, nh, cfg.method, cfg.gamma, cfg.lr, 1.0,
                 )
-                ledger.params_transmitted += v.num_shared * per_entity
-                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
-        else:  # svd / svdp
-            bases = [np.asarray(c.params["entity"]) for c in clients]
-            for i, c in enumerate(clients):
-                c.train_local(cfg.local_epochs)
-                v = views[i]
-                delta = np.asarray(c.params["entity"])[v.shared_local] - bases[i][v.shared_local]
-                u, s, vv = svd_compress(delta, cfg.svd_cols, cfg.svd_cols)  # full rank first
-                if cfg.strategy == "svdp":
-                    stacked = [b for b in c.loader.epoch()]
-                    pos = jnp.asarray(np.stack([b[0] for b in stacked]))
-                    nt = jnp.asarray(np.stack([b[1] for b in stacked]))
-                    nh = jnp.asarray(np.stack([b[2] for b in stacked]))
-                    # refine factors of the shared rows only
-                    u_j, s_j, v_j = _svdp_refine(
-                        jnp.asarray(bases[i][v.shared_local]),
-                        jnp.asarray(u), jnp.asarray(s), jnp.asarray(vv),
-                        c.params["relation"], pos, nt, nh,
-                        cfg.method, cfg.gamma, cfg.lr, cfg.svdp_alpha, cfg.svdp_steps,
-                    )
-                    u, s, vv = np.asarray(u_j), np.asarray(s_j), np.asarray(v_j)
-                u, s, vv = u[:, :, : cfg.svd_rank], s[:, : cfg.svd_rank], vv[:, :, : cfg.svd_rank]
-                restored = svd_restore(u, s, vv, cfg.dim)
-                uploads.append(Upload(
-                    client_id=i,
-                    entity_ids=v.shared_global.astype(np.int64),
-                    values=restored.astype(np.float32),
-                ))
-                ledger.params_transmitted += v.num_shared * per_entity
-                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
-            mean_update, _ = fede_aggregate(uploads, num_global_entities)
-            for i, v in enumerate(views):
-                # Server re-compresses the aggregated update before download.
-                upd = mean_update[v.shared_global]
-                u, s, vv = svd_compress(upd, cfg.svd_cols, cfg.svd_rank)
-                upd_lossy = svd_restore(u, s, vv, cfg.dim)
-                new_rows = bases[i][v.shared_local] + upd_lossy
-                clients[i].set_entity_rows(v.shared_local, new_rows)
-                ledger.params_transmitted += v.num_shared * per_entity
-                ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+            v = views[i]
+            uploads.append(Upload(
+                client_id=i,
+                entity_ids=v.shared_global.astype(np.int64),
+                values=np.asarray(params_lo[i]["entity"])[v.shared_local],
+            ))
+            ledger.params_transmitted += v.num_shared * per_entity
+            ledger.bytes_int8_signs += v.num_shared * per_entity * 4
+        mean, _ = fede_aggregate(uploads, num_global_entities)
+        for i, v in enumerate(views):
+            params_lo[i]["entity"] = (
+                params_lo[i]["entity"]
+                .at[jnp.asarray(v.shared_local)]
+                .set(jnp.asarray(mean[v.shared_global]))
+            )
+            ledger.params_transmitted += v.num_shared * per_entity
+            ledger.bytes_int8_signs += v.num_shared * per_entity * 4
         ledger.end_round()
 
         if (t + 1) % cfg.eval_every == 0:

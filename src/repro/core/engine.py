@@ -25,8 +25,12 @@ deterministic jitter tie-break instead of random tie-breaking.  The host
 reference path stays available as ``engine="reference"`` in the simulation
 and is what the property tests compare against.
 
-Wire payloads go through a pluggable :class:`repro.core.codec.WireCodec`
-(identity or int8 rows), applied inside the jitted round.
+Wire payloads go through a pluggable :class:`repro.core.codecs.WireCodec`
+(registry in :mod:`repro.core.codecs`: identity / int8 / lowrank /
+topk-dims), applied inside the jitted round; error-feedback codecs
+additionally thread a ``(C, Ns_max, D)`` residual buffer through
+:func:`batched_sparse_round` (carried in
+:class:`repro.core.state.FederationState` by the cycle engines).
 
 ISM round-schedule semantics: this module implements the two round *kinds* —
 :func:`batched_sparse_round` (entity-wise Top-K, the ``"sparse"`` kind) and
@@ -46,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codec import IdentityCodec, WireCodec
+from repro.core.codecs import IdentityCodec, WireCodec
 from repro.core.sparsify import change_scores, sparsity_k
 from repro.kernels import ops as kernel_ops
 
@@ -149,7 +153,24 @@ def batched_sparse_round(
     num_global: int,
     codec: WireCodec,
     axis_name: Optional[str],
+    res: Optional[jnp.ndarray] = None,  # (C_local, Ns_max, D) EF residuals
 ):
+    """One sparse FedS round over padded batched client state.
+
+    Returns ``(emb', hist', down_count)``, plus ``res'`` when ``res`` is
+    given.  With an error-feedback codec (``codec.has_residual``) the
+    residual of each *uploaded* row — what the codec's lossy round-trip
+    dropped — is banked in ``res`` and re-injected into that row's wire
+    value the next time it is selected; rows not uploaded this round keep
+    their banked residual untouched.  Non-residual codecs pass ``res``
+    through unchanged.
+    """
+    if codec.has_residual and res is None:
+        raise ValueError(
+            f"codec {codec!r} carries error-feedback residual state; "
+            "pass the (C, Ns_max, D) res buffer (CycleEngine/SuperstepEngine "
+            "thread it through FederationState)"
+        )
     cl, ns, d = emb.shape
     validf = valid.astype(emb.dtype)
     slot = jnp.arange(k_max)[None, :]
@@ -163,13 +184,26 @@ def batched_sparse_round(
     up_mask = (slot < k[:, None]) & jnp.take_along_axis(valid, up_idx, axis=1)
     up_maskf = up_mask.astype(emb.dtype)
 
-    vals = jnp.take_along_axis(emb, up_idx[:, :, None], axis=1)  # (cl, k_max, d)
-    vals = codec.roundtrip(vals.reshape(-1, d)).reshape(cl, k_max, d)
-
     uploaded = jax.vmap(lambda i, m: jnp.zeros((ns,), emb.dtype).at[i].add(m))(
         up_idx, up_maskf
     )  # (cl, ns) 0/1 — which of my rows went upstream this round
     new_hist = jnp.where(uploaded[:, :, None] > 0, emb, hist)
+
+    vals = jnp.take_along_axis(emb, up_idx[:, :, None], axis=1)  # (cl, k_max, d)
+    if codec.has_residual:
+        # error feedback: re-inject the banked residual before encoding, bank
+        # the fresh encode error after.  Only uploaded rows participate.
+        res_sel = jnp.take_along_axis(res, up_idx[:, :, None], axis=1)
+        corrected = vals + res_sel * up_maskf[:, :, None]
+        vals = codec.roundtrip(corrected.reshape(-1, d)).reshape(cl, k_max, d)
+        err_rows = (corrected - vals) * up_maskf[:, :, None]
+        err_full = jax.vmap(
+            lambda i, e: jnp.zeros((ns, d), emb.dtype).at[i].add(e)
+        )(up_idx, err_rows)
+        new_res = jnp.where(uploaded[:, :, None] > 0, err_full, res)
+    else:
+        vals = codec.roundtrip(vals.reshape(-1, d)).reshape(cl, k_max, d)
+        new_res = res
     # this client's wire-coded uploads scattered back to row positions, for
     # the Eq. 3 own-contribution subtraction below
     own_wire = jax.vmap(
@@ -215,7 +249,9 @@ def batched_sparse_round(
         pri_rows.reshape(-1),
         sign.reshape(-1),
     ).reshape(cl, ns, d).astype(emb.dtype)
-    return new_emb, new_hist, down_count
+    if res is None:
+        return new_emb, new_hist, down_count
+    return new_emb, new_hist, down_count, new_res
 
 
 def batched_sync_round(
@@ -273,6 +309,13 @@ class RoundEngine:
         self.num_global = int(num_global_entities)
         self.dim = int(dim)
         self.codec = codec if codec is not None else IdentityCodec()
+        if self.codec.has_residual:
+            raise ValueError(
+                f"codec {self.codec!r} carries error-feedback residual state; "
+                "RoundEngine is stateless per round — use CycleEngine/"
+                "SuperstepEngine, which thread residuals through "
+                "FederationState"
+            )
         self.num_clients = len(self.views)
         gid, valid, self.k_per_client, self.ns_max, self.k_max = build_padded_views(
             self.views, self.num_global, sparsity_p

@@ -8,8 +8,10 @@ jit.  This module removes both:
 
 * :class:`FederationState` holds the WHOLE federation on device across
   rounds — padded ``(C, E_max, D)`` entity tables, ``(C, R, Rd)`` relation
-  tables, the stacked Adam state, the ``(C, Ns_max, D)`` upload history, and
-  a threaded ``jax.random`` key (replacing the host-side numpy jitter RNG).
+  tables, the stacked Adam state, the ``(C, Ns_max, D)`` upload history, the
+  ``(C, Ns_max, D)`` codec error-feedback residuals (see
+  :mod:`repro.core.codecs`), and a threaded ``jax.random`` key (replacing
+  the host-side numpy jitter RNG).
   It is built once from the per-client state and only scattered back to the
   clients at eval/snapshot boundaries (:meth:`CycleEngine.sync_clients`).
 * :class:`CycleEngine` compiles one *cycle* — ``local_epochs`` of the
@@ -47,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codec import IdentityCodec, WireCodec
+from repro.core.codecs import IdentityCodec, WireCodec
 from repro.core.engine import (
     batched_sparse_round,
     batched_sync_round,
@@ -70,6 +72,10 @@ class StateArrays(NamedTuple):
     params: dict  # {"entity": (C, E_max, D), "relation": (C, R, Rd)}
     opt: AdamState  # step (C,), mu/nu mirroring params
     hist: jnp.ndarray  # (C, Ns_max, D) upload history of shared rows
+    res: jnp.ndarray  # (C, Ns_max, D) codec error-feedback residuals,
+    #                   cleared by sync rounds; (C, 0, D) empty placeholder
+    #                   when the codec carries no residual, so non-EF runs
+    #                   pay no scan-carry traffic for it
 
 
 class CycleConsts(NamedTuple):
@@ -424,7 +430,7 @@ class CycleEngine:
             jitter = jax.vmap(
                 lambda cid: jax.random.uniform(jax.random.fold_in(kj, cid), (ns_max,))
             )(consts.cids)
-            return StateArrays(params, opt, arrays.hist), jitter, loss
+            return StateArrays(params, opt, arrays.hist, arrays.res), jitter, loss
 
         return train_core
 
@@ -445,19 +451,26 @@ class CycleEngine:
                     num_global=num_global, axis_name=axis,
                 )
                 down = jnp.zeros((emb.shape[0],), jnp.int32)
+                # the full exchange transmits exact values: nothing was
+                # dropped, and stale residuals would re-inject pre-sync error
+                # into freshly-repaired rows — so the residual bank clears
+                res = (
+                    jnp.zeros_like(arrays.res)
+                    if codec.has_residual else arrays.res
+                )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)
                 j = jnp.asarray(jitter, jnp.float32) * 0.5
-                rows, hist, down = batched_sparse_round(
+                rows, hist, down, res = batched_sparse_round(
                     emb, arrays.hist, consts.gid, consts.valid, consts.k, j,
                     k_max=k_max, num_global=num_global, codec=codec,
-                    axis_name=axis,
+                    axis_name=axis, res=arrays.res,
                 )
             ent = jax.vmap(lambda t, i, r: t.at[i].set(r, mode="drop"))(
                 ent, consts.scatter_idx, rows
             )
             params = dict(arrays.params, entity=ent)
-            return StateArrays(params, arrays.opt, hist), down
+            return StateArrays(params, arrays.opt, hist, res), down
 
         return comm_core
 
@@ -500,6 +513,12 @@ class CycleEngine:
                 nu={"entity": jnp.asarray(nu_e), "relation": jnp.asarray(nu_r)},
             ),
             hist=jnp.asarray(hist),
+            # error-feedback residual bank: starts all-zero (nothing dropped
+            # yet); zero-width placeholder when the codec banks nothing
+            res=jnp.zeros(
+                (c_n, self.ns_max if self.codec.has_residual else 0, d),
+                jnp.float32,
+            ),
         )
         return FederationState(arrays=arrays, key=jax.random.PRNGKey(seed))
 

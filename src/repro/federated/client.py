@@ -14,7 +14,13 @@ import numpy as np
 
 from repro.data.loader import TripleLoader
 from repro.data.partition import ClientData
-from repro.kge.scoring import KGEModel, init_kge_params, kge_loss, score_triples
+from repro.kge.scoring import (
+    KGEModel,
+    get_score_fn,
+    init_kge_params,
+    loss_from_scores,
+    score_triples,
+)
 from repro.train.optimizer import AdamState, adam_init, adam_update
 
 
@@ -30,12 +36,38 @@ def _train_epoch(
     lr: float,
     temp: float,
 ):
+    # Gradients are computed with respect to the GATHERED embedding rows and
+    # the row-cotangents scatter-added back ONCE per step (same scheme as the
+    # fused trainer in repro.core.state): differentiating the table-indexing
+    # loss directly materializes a dense (E, D) cotangent per gather, which
+    # at FB15k scale costs ~20x the batch math itself.  Same gradient as
+    # kge_loss, summation order aside.
+    score = get_score_fn(method)
+
     def step(carry, batch):
         params, opt_state = carry
         p, nt, nh = batch
-        loss, grads = jax.value_and_grad(kge_loss)(
-            params, p, nt, nh, method, gamma, temp
+        b, n = nt.shape
+        h, r, t = p[:, 0], p[:, 1], p[:, 2]
+        idx = jnp.concatenate([h, t, nt.reshape(-1), nh.reshape(-1)])
+
+        def loss_fn(rows, rel):
+            h_e, t_e = rows[:b], rows[b : 2 * b]
+            nt_e = rows[2 * b : (2 + n) * b].reshape(b, n, -1)
+            nh_e = rows[(2 + n) * b :].reshape(b, n, -1)
+            pos_s = score(h_e, rel, t_e, gamma)
+            neg_t_s = score(h_e[:, None, :], rel[:, None, :], nt_e, gamma)
+            neg_h_s = score(nh_e, rel[:, None, :], t_e[:, None, :], gamma)
+            neg_s = jnp.concatenate([neg_t_s, neg_h_s], axis=-1)
+            return loss_from_scores(pos_s, neg_s, method, temp)
+
+        loss, (g_rows, g_rel) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            params["entity"][idx], params["relation"][r]
         )
+        grads = {
+            "entity": jnp.zeros_like(params["entity"]).at[idx].add(g_rows),
+            "relation": jnp.zeros_like(params["relation"]).at[r].add(g_rel),
+        }
         params, opt_state = adam_update(grads, opt_state, params, lr)
         return (params, opt_state), loss
 

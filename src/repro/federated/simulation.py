@@ -37,7 +37,11 @@ Ledger accounting for the device engines is deferred: per-round download
 counts stay on device and are flushed to the :class:`CommLedger` only at
 eval boundaries (one transfer for all pending rounds), producing bitwise-
 identical totals to per-round flushing.  Wire payloads and their cost
-accounting go through a pluggable :class:`repro.core.codec.WireCodec`.
+accounting go through the pluggable codec registry
+(:mod:`repro.core.codecs`, selected by ``FederatedConfig.codec`` spec
+strings like ``"int8:ef=1"``); error-feedback codecs carry device-resident
+residual state inside :class:`repro.core.state.FederationState` and
+therefore require a device engine.
 """
 from __future__ import annotations
 
@@ -47,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregate import fede_aggregate, personalized_aggregate
-from repro.core.codec import get_codec
+from repro.core.codecs import parse_codec_spec
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
@@ -80,7 +84,11 @@ class FederatedConfig:
     adversarial_temperature: float = 1.0
     gamma: float = 8.0
     sparsity_p: float = 0.4
-    quantize_upload: bool = False  # FedS+Q8: int8 rows on the wire (beyond-paper)
+    # wire-codec spec "name:key=val,..." (repro.core.codecs registry), e.g.
+    # "int8:ef=1" or "lowrank:cols=8,rank=2" — error-feedback (ef) codecs
+    # carry device-resident residual state and need a device engine
+    codec: str = "identity"
+    quantize_upload: bool = False  # legacy alias for codec="int8" (FedS+Q8)
     # fused (one program per cycle) | superstep (one program per ISM span)
     # | batched (per-round programs, oracle) | reference (ragged numpy host)
     engine: str = "fused"
@@ -172,10 +180,24 @@ def run_federated(
     views = build_comm_views(
         [d.local_to_global for d in clients_data], num_global_entities
     )
-    codec = get_codec("int8-rows" if cfg.quantize_upload else "identity")
+    codec_spec = cfg.codec
+    if cfg.quantize_upload:
+        if codec_spec not in ("identity", "int8", "int8-rows"):
+            raise ValueError(
+                f"quantize_upload (legacy alias for codec='int8') conflicts "
+                f"with codec={cfg.codec!r}; set one of the two"
+            )
+        codec_spec = "int8"
+    codec = parse_codec_spec(codec_spec)
     ledger = CommLedger()
 
     use_device = cfg.engine != "reference"
+    if codec.has_residual and not use_device:
+        raise ValueError(
+            f"codec {codec!r} carries device-resident error-feedback "
+            "residual state; engine='reference' (ragged numpy host protocol) "
+            "does not thread it — use a device engine"
+        )
     mesh = None
     if cfg.mesh_devices > 1:
         if not use_device:

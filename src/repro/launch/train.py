@@ -11,13 +11,28 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core.codecs import codec_usage, parse_codec_spec
 from repro.core.sync import comm_ratio_worst_case
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.simulation import FederatedConfig, run_federated
 
 
+def _codec_spec(spec: str) -> str:
+    """Validate a --codec spec eagerly so parse errors surface at argparse
+    time, carrying the registry's own name/kwargs listing."""
+    try:
+        parse_codec_spec(spec)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return spec
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="registered wire codecs (--codec name:key=val,...):\n"
+        + codec_usage(),
+    )
     ap.add_argument("--protocol", default="feds",
                     choices=["feds", "feds_nosync", "fedep", "single"])
     ap.add_argument("--method", default="transe",
@@ -39,8 +54,14 @@ def main() -> None:
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help=">1: pod mode — shard the client axis over a 1-D "
                          "device mesh (clients must divide evenly)")
+    ap.add_argument("--codec", type=_codec_spec, default="identity",
+                    metavar="NAME[:KEY=VAL,...]",
+                    help="wire codec spec (see the registered-codec listing "
+                         "below); ef=1 enables device-resident error-feedback "
+                         "residuals on lossy codecs")
     ap.add_argument("--quantize-upload", action="store_true",
-                    help="FedS+Q8: int8 row payloads on the wire")
+                    help="FedS+Q8: int8 row payloads on the wire "
+                         "(legacy alias for --codec int8)")
     ap.add_argument("--sync-interval", type=int, default=4)
     ap.add_argument("--entities", type=int, default=400)
     ap.add_argument("--triples", type=int, default=5000)
@@ -62,7 +83,7 @@ def main() -> None:
         batch_size=args.batch_size, num_negatives=args.negatives, lr=args.lr,
         sparsity_p=args.sparsity, sync_interval=args.sync_interval,
         engine=args.engine, mesh_devices=args.mesh_devices,
-        quantize_upload=args.quantize_upload,
+        codec=args.codec, quantize_upload=args.quantize_upload,
         seed=args.seed,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)
@@ -70,7 +91,7 @@ def main() -> None:
     ratio_bound = comm_ratio_worst_case(args.sparsity, args.sync_interval, args.dim)
     report = {
         "protocol": args.protocol, "method": args.method,
-        "clients": args.clients,
+        "codec": args.codec, "clients": args.clients,
         "test_mrr": res.test_mrr_cg, "test_hits10": res.test_hits10_cg,
         "best_round": res.best_round, "rounds_run": res.rounds_run,
         "params_transmitted": res.ledger.params_transmitted,

@@ -1,0 +1,362 @@
+"""The codec subsystem (repro.core.codecs): registry + CLI parsing, value
+round-trips with closed-form error bounds, ledger byte math vs closed forms,
+error-feedback residual semantics, and the fused==superstep equivalence
+contract parameterized over every registered codec (seeded deterministic
+versions; tests/test_codecs_property.py holds the hypothesis twins)."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.codecs import (
+    IdentityCodec,
+    Int8RowCodec,
+    LowRankCodec,
+    TopKDimsCodec,
+    codec_usage,
+    get_codec,
+    parse_codec_spec,
+    registered_codecs,
+)
+from repro.core.engine import RoundEngine, batched_sparse_round
+from repro.core.protocol import build_comm_views
+from repro.core.state import SuperstepEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.comm import CommLedger
+from repro.federated.simulation import FederatedConfig, run_federated
+
+# one spec per registered codec, sized for dim=16 test rows (lowrank: D % cols
+# == 0; rank=1 keeps params_per_row below D so compression is real)
+ALL_SPECS = ("identity", "int8", "lowrank:cols=4,rank=1", "topk-dims:frac=0.5")
+EF_SPECS = ("int8:ef=1", "lowrank:cols=4,rank=1,ef=1", "topk-dims:frac=0.5,ef=1")
+
+
+def _rows(seed: int, k: int = 9, d: int = 16) -> jnp.ndarray:
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, d)) * 2.0
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_ships_the_four_codecs():
+    assert set(registered_codecs()) >= {"identity", "int8", "lowrank", "topk-dims"}
+
+
+def test_aliases_and_legacy_get_codec():
+    assert isinstance(get_codec("int8-rows"), Int8RowCodec)
+    assert isinstance(get_codec("identity"), IdentityCodec)
+    assert "int8-rows" not in registered_codecs()  # aliases are not canonical
+
+
+def test_parse_codec_spec_kwargs_and_defaults():
+    c = parse_codec_spec("lowrank:cols=4,rank=3,ef=1")
+    assert isinstance(c, LowRankCodec)
+    assert (c.cols, c.rank, c.ef) == (4, 3, True)
+    assert c.has_residual
+    d = parse_codec_spec("topk-dims")
+    assert isinstance(d, TopKDimsCodec) and d.frac == 0.25 and not d.has_residual
+
+
+def test_parse_error_lists_every_registered_codec_and_kwargs():
+    """Satellite contract: parse errors are self-describing from the registry."""
+    with pytest.raises(ValueError) as ei:
+        parse_codec_spec("zstd")
+    msg = str(ei.value)
+    for name in registered_codecs():
+        assert name in msg
+    # accepted kwargs ride along (single source of truth: WireCodec.ARGS)
+    assert "rank" in msg and "frac" in msg and "ef" in msg
+    # and the same listing backs the usage helper
+    for name in registered_codecs():
+        assert name in codec_usage()
+
+
+def test_parse_error_unknown_kwarg_lists_accepted():
+    with pytest.raises(ValueError, match=r"accepted kwargs.*cols.*rank.*ef"):
+        parse_codec_spec("lowrank:rankk=2")
+    with pytest.raises(ValueError, match="bad codec spec"):
+        parse_codec_spec("int8:ef")
+    with pytest.raises(ValueError, match="expects int"):
+        parse_codec_spec("lowrank:rank=two")
+    with pytest.raises(ValueError, match="expects a bool"):
+        parse_codec_spec("int8:ef=maybe")
+
+
+def test_codecs_are_hashable_leafless_pytrees():
+    c = parse_codec_spec("lowrank:cols=4,rank=1")
+    assert c == LowRankCodec(cols=4, rank=1) and hash(c) == hash(LowRankCodec(cols=4, rank=1))
+    assert c != LowRankCodec(cols=4, rank=2)
+    leaves, treedef = jax.tree_util.tree_flatten(c)
+    assert leaves == []
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == c
+
+
+# ------------------------------------------------------- value round-trips
+@pytest.mark.parametrize("spec", ALL_SPECS + EF_SPECS)
+def test_roundtrip_equals_decode_of_encode(spec):
+    codec = parse_codec_spec(spec)
+    v = _rows(3)
+    np.testing.assert_array_equal(
+        np.asarray(codec.roundtrip(v)), np.asarray(codec.decode(codec.encode(v)))
+    )
+    # and jit agrees with eager
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(codec.roundtrip)(v)), np.asarray(codec.roundtrip(v))
+    )
+
+
+def test_int8_roundtrip_error_bound():
+    """Row-wise symmetric int8: |err| <= scale/2 = max|row| / 254 per row."""
+    v = _rows(1, 12, 32) * 1.5
+    back = np.asarray(Int8RowCodec().roundtrip(v))
+    row_max = np.abs(np.asarray(v)).max(axis=-1, keepdims=True)
+    assert (np.abs(back - np.asarray(v)) <= row_max / 254.0 + 1e-7).all()
+
+
+def test_lowrank_matches_numpy_truncated_svd():
+    """The absorbed FedE-SVD math: reconstruction == numpy rank-r truncation
+    (the optimal rank-r approximation of each row's (m, cols) reshape)."""
+    codec = LowRankCodec(cols=4, rank=2)
+    v = _rows(5, 7, 16)
+    got = np.asarray(codec.roundtrip(v))
+    mat = np.asarray(v).reshape(7, 4, 4)
+    u, s, vt = np.linalg.svd(mat, full_matrices=False)
+    want = np.einsum("kmr,kr,krn->kmn", u[:, :, :2], s[:, :2], vt[:, :2, :])
+    np.testing.assert_allclose(got, want.reshape(7, 16), atol=1e-5)
+
+
+def test_lowrank_full_rank_is_lossless_and_projection_idempotent():
+    codec = LowRankCodec(cols=4, rank=4)  # rank == min(m, cols): no truncation
+    v = _rows(6, 5, 16)
+    np.testing.assert_allclose(np.asarray(codec.roundtrip(v)), np.asarray(v), atol=1e-5)
+    lossy = LowRankCodec(cols=4, rank=1)
+    once = lossy.roundtrip(v)
+    np.testing.assert_allclose(
+        np.asarray(lossy.roundtrip(once)), np.asarray(once), atol=1e-5
+    )
+
+
+def test_lowrank_rejects_indivisible_width():
+    with pytest.raises(ValueError, match="not divisible"):
+        LowRankCodec(cols=5).roundtrip(_rows(0, 3, 16))
+
+
+def test_topk_dims_keeps_largest_and_zeroes_rest():
+    codec = TopKDimsCodec(frac=0.25)  # 4 of 16 dims
+    v = _rows(2, 6, 16)
+    back = np.asarray(codec.roundtrip(v))
+    vn = np.asarray(v)
+    for i in range(vn.shape[0]):
+        kept = np.argsort(-np.abs(vn[i]))[:4]
+        np.testing.assert_array_equal(back[i, kept], vn[i, kept])
+        dropped = np.setdiff1d(np.arange(16), kept)
+        np.testing.assert_array_equal(back[i, dropped], 0.0)
+
+
+# --------------------------------------------------- ledger vs closed forms
+K, DIM, NS = 10, 16, 50
+
+
+def _legs(codec):
+    up, down = CommLedger(), CommLedger()
+    codec.log_upload(up, K, DIM, NS)
+    codec.log_download(down, K, DIM, NS)
+    return up, down
+
+
+def test_identity_ledger_closed_form():
+    up, down = _legs(IdentityCodec())
+    assert (up.params_transmitted, up.bytes_int8_signs) == (
+        K * DIM + NS, K * DIM * 4 + NS + K * 4)
+    assert (down.params_transmitted, down.bytes_int8_signs) == (
+        K * DIM + K + NS, K * DIM * 4 + K * 4 + NS + K * 4)
+
+
+def test_int8_ledger_closed_form():
+    up, down = _legs(Int8RowCodec())
+    assert (up.params_transmitted, up.bytes_int8_signs) == (
+        K * DIM / 4 + K + NS, K * DIM + K * 4 + NS + K * 4)
+    assert (down.params_transmitted, down.bytes_int8_signs) == (
+        K * DIM / 4 + 2 * K + NS, K * (DIM + 8) + K * 4 + NS)
+
+
+def test_lowrank_ledger_closed_form():
+    codec = LowRankCodec(cols=4, rank=2)
+    m, r = DIM // 4, 2
+    ppr = m * r + r + 4 * r  # U + s + V factors per row (Appendix VI-B)
+    assert codec.params_per_row(DIM) == ppr
+    up, down = _legs(codec)
+    assert (up.params_transmitted, up.bytes_int8_signs) == (
+        K * ppr + NS, K * ppr * 4 + K * 4 + NS)
+    assert (down.params_transmitted, down.bytes_int8_signs) == (
+        K * ppr + K + NS, K * ppr * 4 + K * 4 + K * 4 + NS)
+
+
+def test_topk_dims_ledger_closed_form():
+    codec = TopKDimsCodec(frac=0.25)
+    kd = 4  # round(16 * 0.25)
+    assert codec.k_dims(DIM) == kd
+    up, down = _legs(codec)
+    assert (up.params_transmitted, up.bytes_int8_signs) == (
+        K * kd + NS, K * kd * 4 + K * kd * 2 + K * 4 + NS)
+    assert (down.params_transmitted, down.bytes_int8_signs) == (
+        K * kd + K + NS, K * kd * 4 + K * kd * 2 + K * 4 + K * 4 + NS)
+
+
+@pytest.mark.parametrize("spec", ("int8", "lowrank:cols=4,rank=1", "topk-dims:frac=0.25"))
+def test_lossy_codecs_cheaper_than_identity(spec):
+    ident, lossy = CommLedger(), CommLedger()
+    for led, codec in ((ident, IdentityCodec()), (lossy, parse_codec_spec(spec))):
+        codec.log_upload(led, 100, 256, 400)
+        codec.log_download(led, 80, 256, 400)
+    assert lossy.params_transmitted < ident.params_transmitted
+    assert lossy.bytes_int8_signs < ident.bytes_int8_signs
+
+
+def test_ef_does_not_change_ledger_math():
+    """Error feedback changes transmitted VALUES, never counts."""
+    for spec in ("int8", "lowrank:cols=4,rank=1", "topk-dims:frac=0.5"):
+        a, _ = _legs(parse_codec_spec(spec))
+        b, _ = _legs(parse_codec_spec(spec + ":ef=1" if ":" not in spec else spec + ",ef=1"))
+        assert a.params_transmitted == b.params_transmitted
+        assert a.bytes_int8_signs == b.bytes_int8_signs
+
+
+# ------------------------------------------------ error-feedback semantics
+def test_ef_residual_update_rule_unit():
+    """With every row selected (p=1), round t banks exactly
+    corrected_t - roundtrip(corrected_t), with corrected_t = emb_t + res_{t-1}."""
+    codec = get_codec("int8", ef=True)
+    ns, d = 6, 8
+    emb = _rows(11, ns, d)[None]  # (1, ns, d): one client
+    hist = jnp.zeros_like(emb)
+    res = jnp.zeros_like(emb)
+    gid = jnp.arange(ns, dtype=jnp.int32)[None]
+    valid = jnp.ones((1, ns), bool)
+    k = jnp.asarray([ns], jnp.int32)
+    jitter = jnp.zeros((1, ns), jnp.float32)
+
+    _, _, _, res1 = batched_sparse_round(
+        emb, hist, gid, valid, k, jitter, k_max=ns, num_global=ns,
+        codec=codec, axis_name=None, res=res,
+    )
+    # rows travel in score order but the codec is row-wise and the error is
+    # banked back at each row's own slot, so the rule is checkable in place
+    want1 = np.asarray(emb[0]) - np.asarray(codec.roundtrip(emb[0]))
+    np.testing.assert_allclose(np.asarray(res1[0]), want1, atol=1e-6)
+
+    emb2 = emb * 1.5
+    _, _, _, res2 = batched_sparse_round(
+        emb2, hist, gid, valid, k, jitter, k_max=ns, num_global=ns,
+        codec=codec, axis_name=None, res=res1,
+    )
+    corrected = np.asarray(emb2[0]) + np.asarray(res1[0])
+    want2 = corrected - np.asarray(codec.roundtrip(jnp.asarray(corrected)))
+    np.testing.assert_allclose(np.asarray(res2[0]), want2, atol=1e-6)
+
+
+def test_residual_codec_requires_res_buffer():
+    codec = get_codec("int8", ef=True)
+    emb = _rows(0, 4, 8)[None]
+    with pytest.raises(ValueError, match="residual state"):
+        batched_sparse_round(
+            emb, jnp.zeros_like(emb), jnp.arange(4, dtype=jnp.int32)[None],
+            jnp.ones((1, 4), bool), jnp.asarray([2], jnp.int32),
+            jnp.zeros((1, 4), jnp.float32), k_max=2, num_global=4,
+            codec=codec, axis_name=None,
+        )
+
+
+def test_residual_codec_rejected_by_round_engine_and_reference():
+    l2g = [np.array([0, 1, 2]), np.array([1, 2, 3])]
+    views = build_comm_views(l2g, 4)
+    with pytest.raises(ValueError, match="residual"):
+        RoundEngine(views, 4, 8, 0.5, codec=get_codec("int8", ef=True))
+    kg = generate_kg(num_entities=60, num_relations=4, num_triples=200, seed=0)
+    clients = partition_by_relation(kg, 2, seed=0)
+    with pytest.raises(ValueError, match="residual"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(rounds=1, dim=8, engine="reference", codec="int8:ef=1"),
+        )
+
+
+def test_quantize_upload_legacy_alias_and_conflict():
+    kg = generate_kg(num_entities=60, num_relations=4, num_triples=200, seed=0)
+    clients = partition_by_relation(kg, 2, seed=0)
+    with pytest.raises(ValueError, match="conflicts"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(rounds=1, dim=8, quantize_upload=True, codec="lowrank"),
+        )
+
+
+# --------------------------------- fused == superstep over every codec
+def _instance():
+    kg = generate_kg(num_entities=120, num_relations=9, num_triples=900, seed=5)
+    clients = partition_by_relation(kg, 3, seed=0)
+    cfg = dict(
+        method="transe", dim=16, rounds=6, local_epochs=1, batch_size=48,
+        num_negatives=4, lr=5e-3, sparsity_p=0.5, sync_interval=2,
+        eval_every=3, patience=99, max_eval_triples=30, seed=0,
+    )
+    return kg, clients, cfg
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS + EF_SPECS)
+def test_fused_matches_superstep_per_codec(spec):
+    """The engine-equivalence contract holds for every registered codec,
+    including ones whose residual state rides through the superstep scans."""
+    kg, clients, cfg = _instance()
+    fused = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol="feds", engine="fused", codec=spec, **cfg),
+    )
+    sstep = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(protocol="feds", engine="superstep", codec=spec, **cfg),
+    )
+    assert fused.eval_history == sstep.eval_history, spec
+    assert fused.ledger.history == sstep.ledger.history, spec
+    assert fused.ledger.bytes_int8_signs == sstep.ledger.bytes_int8_signs, spec
+    assert fused.test_mrr_cg == sstep.test_mrr_cg, spec
+    assert np.isfinite(fused.test_mrr_cg)
+
+
+def test_residual_state_device_resident_and_bitwise_through_superstep():
+    """The EF residual lives on device, survives a whole scanned superstep
+    bitwise-identically to per-cycle execution, is nonzero after sparse
+    rounds, clears on sync, and never touches padding slots."""
+    kg = generate_kg(num_entities=130, num_relations=9, num_triples=1000, seed=0)
+    cd = partition_by_relation(kg, 3, seed=0)
+
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=48, num_negatives=4,
+                      lr=5e-3, seed=0)
+            for d in cd
+        ]
+
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    engine = SuperstepEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                             local_epochs=2, codec=get_codec("int8", ef=True))
+
+    sa = engine.init_state(mk(), seed=3)
+    assert isinstance(sa.arrays.res, jax.Array)  # device-resident buffer
+    sa, _, _ = engine.superstep(sa, ("sparse", "sparse"))
+    assert float(jnp.abs(sa.arrays.res).max()) > 0  # quantization error banked
+    for c, v in enumerate(engine.views):  # padding slots stay zero
+        np.testing.assert_array_equal(
+            np.asarray(sa.arrays.res)[c, v.num_shared:], 0.0
+        )
+
+    sb = engine.init_state(mk(), seed=3)
+    for kind in ("sparse", "sparse"):
+        sb, _, _ = engine.fused_cycle(sb, sync=False)
+    np.testing.assert_array_equal(np.asarray(sa.arrays.res), np.asarray(sb.arrays.res))
+    np.testing.assert_array_equal(
+        np.asarray(sa.arrays.params["entity"]), np.asarray(sb.arrays.params["entity"])
+    )
+
+    sa, _, _ = engine.superstep(sa, ("sync",))
+    np.testing.assert_array_equal(np.asarray(sa.arrays.res), 0.0)  # sync clears
