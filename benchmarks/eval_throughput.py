@@ -1,0 +1,195 @@
+"""Microbenchmark: host-sync filtered-ranking eval vs the device-batched
+evaluation subsystem.
+
+One validation eval boundary at FB15k-237 scale (E=14541, D=256, C=3,
+~EVAL_TRIPLES eval triples per client; ``REPRO_BENCH_FAST=1`` shrinks to a
+smoke size).  Two rows:
+
+* ``eval.host_sync`` — the pre-PR boundary path: ``sync_clients`` pulls
+  every padded entity table back to per-client host params, then each
+  client ranks its eval split in 256-row jitted chunks with host-side
+  filter masks re-shipped per chunk (``KGEClient.evaluate``).
+* ``eval.device_batched`` — :class:`repro.core.evaluation.BatchedEvaluator`:
+  one compiled program scores all clients' candidate sets at once (E-dim
+  chunked scan, bit-packed filters applied with bitwise ops, ranks reduced
+  on device); the host reads back a single ``(C, 3)`` scalar block.
+
+Derived columns: eval triples/second (both legs counted) and host
+dispatches per boundary (1 sync + one ``_rank_batch`` per 256-row chunk
+per client, vs 1).  ``--json PATH`` writes a machine-readable record (CI
+emits ``BENCH_eval.json`` alongside the other BENCH artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.fused_cycle import (  # noqa: E402
+    BATCH, DIM, FAST, NEGATIVES, NUM_CLIENTS, NUM_GLOBAL, SUBSET, TRIPLES,
+)
+from repro.core.evaluation import BatchedEvaluator  # noqa: E402
+from repro.core.protocol import build_comm_views  # noqa: E402
+from repro.core.state import CycleEngine  # noqa: E402
+from repro.data.partition import ClientData  # noqa: E402
+from repro.federated.client import KGEClient  # noqa: E402
+from repro.federated.metrics import (  # noqa: E402
+    aggregate_eval_block,
+    weighted_average,
+)
+
+EVAL_TRIPLES = 128 if FAST else 500  # per-client valid triples ranked
+
+
+def _make_clients(rng):
+    """FB15k-scale stand-in with a realistic eval split (the fused_cycle
+    helper's 16-row splits would undersell the eval-path costs)."""
+    num_rel = 12
+    datas = []
+    for c in range(NUM_CLIENTS):
+        l2g = np.sort(
+            rng.choice(NUM_GLOBAL, size=int(NUM_GLOBAL * SUBSET), replace=False)
+        ).astype(np.int32)
+        n_local = len(l2g)
+
+        def triples(n):
+            return np.stack(
+                [
+                    rng.integers(0, n_local, n),
+                    rng.integers(0, num_rel, n),
+                    rng.integers(0, n_local, n),
+                ],
+                axis=1,
+            ).astype(np.int32)
+
+        datas.append(
+            ClientData(
+                client_id=c,
+                train=triples(TRIPLES),
+                valid=triples(EVAL_TRIPLES),
+                test=triples(EVAL_TRIPLES),
+                local_to_global=l2g,
+                num_relations=num_rel,
+            )
+        )
+    clients = [
+        KGEClient(d, method="transe", dim=DIM, batch_size=BATCH,
+                  num_negatives=NEGATIVES, lr=1e-4, seed=0)
+        for d in datas
+    ]
+    views = build_comm_views([d.local_to_global for d in datas], NUM_GLOBAL)
+    return datas, clients, views
+
+
+def run(out=print):
+    rng = np.random.default_rng(0)
+    datas, clients, views = _make_clients(rng)
+    total_triples = sum(
+        min(d.valid.shape[0], EVAL_TRIPLES) for d in datas
+    )
+    out(
+        f"\n== eval boundary: {total_triples} triples x 2 legs, "
+        f"E={NUM_GLOBAL} D={DIM} C={NUM_CLIENTS} =="
+    )
+    engine = CycleEngine(clients, views, NUM_GLOBAL, sparsity_p=0.4,
+                         local_epochs=1)
+    state = engine.init_state(clients, seed=0)
+    evaluator = BatchedEvaluator(
+        datas, method="transe", gamma=clients[0].gamma, e_max=engine.e_max,
+        max_triples=EVAL_TRIPLES, splits=("valid",),
+        known=[c._known for c in clients],
+    )
+
+    def host_boundary():
+        engine.sync_clients(state, clients)
+        return weighted_average(
+            [c.evaluate("valid", EVAL_TRIPLES) for c in clients]
+        )
+
+    def device_boundary():
+        return aggregate_eval_block(
+            evaluator.evaluate(state.arrays.params, "valid")
+        )
+
+    # warm/compile both paths (also builds the host filter caches)
+    val_host = host_boundary()
+    val_dev = device_boundary()
+    jax.block_until_ready(state.arrays.params["entity"])
+
+    repeats = 5 if FAST else 3
+    best = {"host_sync": float("inf"), "device_batched": float("inf")}
+    for _ in range(repeats):
+        for name, fn in (("host_sync", host_boundary),
+                         ("device_batched", device_boundary)):
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+
+    chunks = sum(-(-min(d.valid.shape[0], EVAL_TRIPLES) // 256) for d in datas)
+    disp = {"host_sync": 1 + chunks, "device_batched": 1}
+    rows = []
+    for name in ("host_sync", "device_batched"):
+        s = best[name]
+        rows.append((
+            f"eval.{name}", s * 1e3, total_triples * 2 / s, disp[name]
+        ))
+    for name, ms, tps, d in rows:
+        out(f"{name},{ms:.1f}ms,{tps:.0f} triples/s,{d} dispatches")
+    return rows, val_host, val_dev
+
+
+def check_claims(rows, val_host, val_dev):
+    by = {r[0]: r for r in rows}
+    speedup = by["eval.host_sync"][1] / by["eval.device_batched"][1]
+    ok_speed = speedup >= 1.0
+    ok_metric = abs(val_host["mrr"] - val_dev["mrr"]) < 1e-6
+    return [
+        f"[{'PASS' if ok_speed else 'WARN'}] device-batched eval {speedup:.2f}x "
+        f"vs host-sync boundary (expect >= 1.0x; "
+        f"{by['eval.host_sync'][3]} -> {by['eval.device_batched'][3]} host "
+        f"dispatches per boundary)",
+        f"[{'PASS' if ok_metric else 'FAIL'}] device MRR matches host oracle "
+        f"({val_dev['mrr']:.6f} vs {val_host['mrr']:.6f}; integer ranks are "
+        f"property-tested exactly equal in tests/test_evaluation.py)",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write a JSON record here")
+    args = ap.parse_args()
+    rows, val_host, val_dev = run()
+    claims = check_claims(rows, val_host, val_dev)
+    for c in claims:
+        print(c)
+    if args.json:
+        rec = {
+            "bench": "eval_throughput",
+            "fast": FAST,
+            "config": {
+                "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,
+                "eval_triples_per_client": EVAL_TRIPLES,
+            },
+            "ms_per_boundary": {name: ms for name, ms, _, _ in rows},
+            "triples_per_s": {name: tps for name, _, tps, _ in rows},
+            "host_dispatches_per_boundary": {
+                name: d for name, _, _, d in rows
+            },
+            "speedup_device_vs_host": rows[0][1] / rows[1][1],
+            "mrr": {"host": val_host["mrr"], "device": val_dev["mrr"]},
+            "claims": claims,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,9 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,engine,cycle,sstep,codecs,table1,"
-                         "table2,table3,table4,table5,table6,fig2,sweep,q8,"
-                         "roofline")
+                    help="comma list: kernels,engine,cycle,sstep,codecs,eval,"
+                         "table1,table2,table3,table4,table5,table6,fig2,"
+                         "sweep,q8,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -60,6 +60,14 @@ def main() -> None:
         rows, records = codecs.run()
         csv_rows += [tuple(r) for r in rows]
         claims += codecs.check_claims(records)
+
+    if want("eval"):
+        from benchmarks import eval_throughput
+
+        rows, val_host, val_dev = eval_throughput.run()
+        csv_rows += [(name, ms, f"{tps:.0f} triples/s")
+                     for name, ms, tps, _ in rows]
+        claims += eval_throughput.check_claims(rows, val_host, val_dev)
 
     suites = [
         ("table1", "table1_compression"),

@@ -94,6 +94,48 @@ def sparse_upload(
     )
 
 
+def sparse_upload_coded(
+    entity_table: jnp.ndarray,
+    history: jnp.ndarray,
+    view: ClientCommView,
+    p: float,
+    codec,  # repro.core.codecs.WireCodec
+    residual: np.ndarray | None = None,  # (Ns, D) error-feedback bank
+) -> tuple[Upload, jnp.ndarray, np.ndarray | None]:
+    """:func:`sparse_upload` with the wire codec applied host-side.
+
+    The ragged numpy twin of the upstream leg of
+    :func:`repro.core.engine.batched_sparse_round`: selected rows cross the
+    wire through ``codec.roundtrip``, and with an error-feedback codec
+    (``codec.has_residual``) each uploaded row is corrected by its banked
+    residual before encoding and the fresh encode error is banked after —
+    ``corrected = row + res``, ``res' = corrected - roundtrip(corrected)``
+    on uploaded rows, untouched elsewhere.  Returns
+    ``(Upload, new_history, new_residual)``; the paper-faithful oracle for
+    ``ef=1`` device runs.
+    """
+    up, new_history = sparse_upload(entity_table, history, view, p)
+    if not codec.transforms_values:
+        return up, new_history, residual
+    idx = np.asarray(
+        [view.global_to_row[int(g)] for g in up.entity_ids], dtype=np.int32
+    )
+    values = np.asarray(up.values, np.float32)
+    if codec.has_residual:
+        if residual is None:
+            raise ValueError(
+                f"codec {codec!r} carries error-feedback residual state; "
+                "pass the (Ns, D) residual bank"
+            )
+        corrected = values + residual[idx]
+        wire = np.asarray(codec.roundtrip(jnp.asarray(corrected)), np.float32)
+        residual = residual.copy()
+        residual[idx] = corrected - wire
+    else:
+        wire = np.asarray(codec.roundtrip(jnp.asarray(values)), np.float32)
+    return dataclasses.replace(up, values=wire), new_history, residual
+
+
 def full_upload(
     entity_table: jnp.ndarray, view: ClientCommView
 ) -> tuple[Upload, jnp.ndarray]:

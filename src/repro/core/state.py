@@ -525,9 +525,11 @@ class CycleEngine:
     def sync_clients(self, state: FederationState, clients: Sequence["KGEClient"]) -> None:
         """Scatter the device-resident tables back into per-client params.
 
-        The ONLY host transfer of entity tables in the fused/batched paths —
-        called at eval/snapshot boundaries, never per round.  Optimizer state
-        stays on device (clients' own opt_state is not consulted again after
+        The ONLY host transfer of entity tables in the device-engine paths —
+        since the batched evaluator (:mod:`repro.core.evaluation`) took over
+        eval boundaries, the simulation calls this exactly once, at the
+        terminal best-snapshot materialization.  Optimizer state stays on
+        device (clients' own opt_state is not consulted again after
         ``init_state``).
         """
         ent = np.asarray(state.arrays.params["entity"])
@@ -593,6 +595,10 @@ class SuperstepEngine(CycleEngine):
     ``(StateArrays, PRNG key)`` and stacks the per-round download counts and
     losses as device-side ledger accumulators, so the host touches the
     device ONCE per superstep instead of once per round.
+    :meth:`superstep_with_eval` extends the plan vocabulary with ``"eval"``
+    segments (:data:`repro.core.sync.PLAN_KINDS`) running the batched
+    evaluator (:mod:`repro.core.evaluation`) in-program, so an ISM span AND
+    its boundary eval are one dispatch returning a ``(C, 3)`` metric block.
 
     Equivalence contract: each scan step performs *exactly* the per-cycle
     key schedule (one 3-way ``jax.random.split``) and runs the same
@@ -610,11 +616,23 @@ class SuperstepEngine(CycleEngine):
         self._superstep_cache: dict = {}
 
     # ------------------------------------------------------------ compiling
-    def _compile_superstep(self, plan):
+    def _compile_superstep(self, plan, eval_core=None):
+        """Compile one plan into one program.
+
+        ``plan`` is the :func:`repro.core.sync.compress_schedule` RLE of a
+        span; ``("eval", n)`` segments (requiring ``eval_core``) run the
+        batched evaluator's program body in place, on the state as of that
+        point in the span — the program then additionally takes the
+        :class:`repro.core.evaluation.EvalBank` as its last argument and
+        returns the stacked ``(C, 3)`` metric blocks.
+        """
         train_core = self._train_core_fn
         comm_core = self._comm_core_fn
+        has_eval = any(kind == "eval" for kind, _ in plan)
+        if has_eval and eval_core is None:
+            raise ValueError("plan contains eval segments but no eval_core")
 
-        def prog(arrays, key, consts):
+        def prog(arrays, key, consts, *eval_args):
             def seg_step(kind):
                 def step(carry, _):
                     arrays, key = carry
@@ -631,8 +649,16 @@ class SuperstepEngine(CycleEngine):
 
                 return step
 
-            downs, losses = [], []
+            downs, losses, blocks = [], [], []
             for kind, n in plan:
+                if kind == "eval":
+                    # in-program evaluation on the state as of this point —
+                    # no state/key mutation, only the (C, 3) metric block
+                    blocks.extend(
+                        eval_core(arrays.params, eval_args[0])
+                        for _ in range(n)
+                    )
+                    continue
                 # unrolling removes the while-loop carry copies XLA:CPU
                 # inserts around the big resident buffers (~3% per-round at
                 # FB15k scale); capped so pathological eval spans don't
@@ -646,21 +672,27 @@ class SuperstepEngine(CycleEngine):
                     # host never dispatches per-round slice ops
                     downs.extend(d[i] for i in range(n))
                 losses.append(l)
-            return arrays, key, tuple(downs), tuple(losses)
+            out = (arrays, key, tuple(downs), tuple(losses))
+            return out + (tuple(blocks),) if has_eval else out
 
         n_sparse = sum(n for kind, n in plan if kind == "sparse")
+        n_eval = sum(n for kind, n in plan if kind == "eval")
         if self._mesh is None:
             return jax.jit(prog, donate_argnums=(0,))
         p = jax.sharding.PartitionSpec(self._axis)
         r = jax.sharding.PartitionSpec()
         # per-segment loss stacks rounds on axis 0; clients stay on axis 1
         seg = tuple(
-            jax.sharding.PartitionSpec(None, self._axis) for _ in plan
+            jax.sharding.PartitionSpec(None, self._axis)
+            for kind, _ in plan if kind != "eval"
         )
+        in_specs = (p, r, p) + ((p,) if has_eval else ())
+        out_specs = (p, r, (p,) * n_sparse, seg)
+        if has_eval:
+            out_specs = out_specs + ((p,) * n_eval,)
         return jax.jit(
             shard_map(
-                prog, mesh=self._mesh, in_specs=(p, r, p),
-                out_specs=(p, r, (p,) * n_sparse, seg),
+                prog, mesh=self._mesh, in_specs=in_specs, out_specs=out_specs,
             ),
             donate_argnums=(0,),
         )
@@ -680,13 +712,60 @@ class SuperstepEngine(CycleEngine):
         plan segment.
         """
         plan = compress_schedule(kinds)
+        if any(kind == "eval" for kind, _ in plan):
+            raise ValueError(
+                "superstep() takes round kinds only; use superstep_with_eval "
+                "to fold an eval segment into the program"
+            )
         fn = self._superstep_cache.get(plan)
         if fn is None:
             fn = self._superstep_cache[plan] = self._compile_superstep(plan)
         arrays, key, downs, losses = fn(state.arrays, state.key, self.consts)
+        return FederationState(arrays, key), self._align(kinds, downs), losses
+
+    def superstep_with_eval(
+        self,
+        state: FederationState,
+        kinds: Sequence[str],
+        evaluator,  # repro.core.evaluation.BatchedEvaluator
+        split: str = "valid",
+    ):
+        """Run ``len(kinds)`` rounds PLUS the boundary evaluation as one
+        compiled program.
+
+        The plan is ``kinds`` with an ``"eval"`` segment appended
+        (:data:`repro.core.sync.PLAN_KINDS`), so the filtered-ranking eval
+        of :class:`repro.core.evaluation.BatchedEvaluator` runs on-device
+        inside the same scanned program as the rounds — the host never
+        syncs entity tables at the boundary, it reads back one ``(C, 3)``
+        metric block.  Returns ``(state', per_round, losses, block)`` with
+        the first three exactly as :meth:`superstep`.
+        """
+        plan = compress_schedule(tuple(kinds) + ("eval",))
+        # the evaluator is part of the key: its eval_core closes over
+        # method/gamma/chunk, so two evaluators sharing a plan+split must
+        # not reuse each other's compiled program
+        cache_key = (plan, split, evaluator)
+        fn = self._superstep_cache.get(cache_key)
+        if fn is None:
+            fn = self._superstep_cache[cache_key] = self._compile_superstep(
+                plan, eval_core=evaluator.eval_core
+            )
+        arrays, key, downs, losses, blocks = fn(
+            state.arrays, state.key, self.consts, evaluator.banks[split]
+        )
+        return (
+            FederationState(arrays, key),
+            self._align(kinds, downs),
+            losses,
+            blocks[0],
+        )
+
+    @staticmethod
+    def _align(kinds, downs):
+        """Zip per-round kinds with their device-resident download counts."""
         down_iter = iter(downs)
-        per_round = [
+        return [
             (kind, next(down_iter) if kind == "sparse" else None)
             for kind in kinds
         ]
-        return FederationState(arrays, key), per_round, losses

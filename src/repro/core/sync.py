@@ -23,6 +23,15 @@ from typing import Iterable, Tuple
 #: ``"none"``   — local training only (the no-communication baseline).
 ROUND_KINDS = ("sparse", "sync", "none")
 
+#: Superstep *plan* segments are round kinds plus ``"eval"`` — a
+#: device-resident filtered-ranking evaluation
+#: (:class:`repro.core.evaluation.BatchedEvaluator`) folded into the same
+#: scanned program.  ``"eval"`` is never emitted by :func:`round_kind` (it
+#: consumes no round of the schedule); :meth:`repro.core.state.
+#: SuperstepEngine.superstep_with_eval` appends it so an ISM span and its
+#: boundary eval compile together.
+PLAN_KINDS = ROUND_KINDS + ("eval",)
+
 
 def is_sync_round(round_idx: int, interval: int) -> bool:
     """True if ``round_idx`` is a full-synchronization round.
@@ -64,12 +73,14 @@ def compress_schedule(kinds: Iterable[str]) -> Tuple[Tuple[str, int], ...]:
     ``("sparse","sparse","sync") -> (("sparse", 2), ("sync", 1))`` — the
     static superstep plan :class:`repro.core.state.SuperstepEngine` compiles
     (one ``lax.scan`` per segment, all segments in one program).  Hashable,
-    so compiled programs are cached per distinct plan.
+    so compiled programs are cached per distinct plan.  Accepts the full
+    :data:`PLAN_KINDS` vocabulary — ``"eval"`` segments mark in-program
+    evaluation points, not rounds.
     """
     plan: list[tuple[str, int]] = []
     for k in kinds:
-        if k not in ROUND_KINDS:
-            raise ValueError(f"unknown round kind {k!r}; expected {ROUND_KINDS}")
+        if k not in PLAN_KINDS:
+            raise ValueError(f"unknown round kind {k!r}; expected {PLAN_KINDS}")
         if plan and plan[-1][0] == k:
             plan[-1] = (k, plan[-1][1] + 1)
         else:

@@ -12,6 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.evaluation import (
+    build_known_index,
+    num_filter_words,
+    pack_filter_rows,
+    unpack_filter_words,
+)
 from repro.data.loader import TripleLoader
 from repro.data.partition import ClientData
 from repro.kge.scoring import (
@@ -81,15 +87,21 @@ def _train_epoch(
 def _rank_batch(
     params,
     triples,  # (B, 3)
-    filter_tails,  # (B, E) bool — true known tails to mask (excl. the gold one)
-    filter_heads,  # (B, E) bool
+    ft_words,  # (B, W) uint32 — bit-packed known-tail mask (gold bit clear)
+    fh_words,  # (B, W) uint32 — bit-packed known-head mask
     method: str,
     gamma: float,
 ):
-    """Filtered ranks of the gold tail and gold head.  Returns (B,), (B,) ranks."""
+    """Filtered ranks of the gold tail and gold head.  Returns (B,), (B,) ranks.
+
+    Filters arrive bit-packed (``core.evaluation.pack_filter_rows``) and are
+    unpacked on device — the host never materializes ``(B, E)`` bools.
+    """
     h, r, t = triples[:, 0], triples[:, 1], triples[:, 2]
     n_ent = params["entity"].shape[0]
     cand = jnp.arange(n_ent)[None, :].repeat(triples.shape[0], axis=0)  # (B, E)
+    filter_tails = unpack_filter_words(ft_words, n_ent)
+    filter_heads = unpack_filter_words(fh_words, n_ent)
 
     t_scores = score_triples(params, h, r, cand, method, gamma)  # (B, E)
     t_scores = jnp.where(filter_tails, -jnp.inf, t_scores)
@@ -139,19 +151,20 @@ class KGEClient:
             num_negatives=num_negatives,
             seed=seed * 131 + data.client_id,
         )
-        # Filtered-setting lookup: all known triples on this client.
-        self._known = {}
-        all_triples = np.concatenate([data.train, data.valid, data.test], axis=0)
-        for h, r, t in all_triples.tolist():
-            self._known.setdefault(("t", h, r), set()).add(t)
-            self._known.setdefault(("h", r, t), set()).add(h)
-        # Per-split filter-mask cache: rebuilding dense (B, E) masks from
+        # Filtered-setting lookup: all known triples on this client (shared
+        # builder with the device-batched evaluator).
+        self._known = build_known_index(data.train, data.valid, data.test)
+        # Per-(split, n_rows) bit-packed filter cache: rebuilding masks from
         # python sets on every evaluate() call dominated the eval hot loop.
-        # Built lazily on first evaluate() and capped at the requested triple
-        # count, so clients that never evaluate (or only evaluate a few
-        # hundred rows of a large split) pay neither the build time nor the
-        # resident memory.  Maps split -> (n_rows, tail_masks, head_masks).
-        self._filter_cache: dict = {}
+        # Built lazily on first evaluate() and keyed on the exact row count
+        # requested, so a later call with a SMALLER max_triples gets its own
+        # correct entry (sliced from a superset when one exists) instead of
+        # monotonically growing state, and a changed split length naturally
+        # misses.  Rows are packed uint32 words (~32x smaller than the old
+        # dense (B, E) bools); mutating a split's *contents* in place still
+        # requires clearing the cache.  Maps (split, n_rows) ->
+        # (ft_words, fh_words).
+        self._filter_cache: dict[tuple[str, int], tuple] = {}
 
     # ----------------------------------------------------------- training
     def train_local(self, epochs: int) -> float:
@@ -186,50 +199,59 @@ class KGEClient:
         )
 
     # ---------------------------------------------------------------- eval
-    def _filters(self, triples: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        b = triples.shape[0]
-        e = self.data.num_entities
-        ft = np.zeros((b, e), dtype=bool)
-        fh = np.zeros((b, e), dtype=bool)
-        for i, (h, r, t) in enumerate(triples.tolist()):
-            tails = self._known.get(("t", h, r), set())
-            heads = self._known.get(("h", r, t), set())
-            if tails:
-                ft[i, list(tails)] = True
-            if heads:
-                fh[i, list(heads)] = True
-            ft[i, t] = False  # never filter the gold answer itself
-            fh[i, h] = False
-        return ft, fh
+    def _packed_filters(self, split: str, n_rows: int) -> tuple:
+        """(ft_words, fh_words) for the first ``n_rows`` of ``split``."""
+        key = (split, n_rows)
+        got = self._filter_cache.get(key)
+        if got is None:
+            # filter rows are per-triple independent, so a larger cached
+            # block for the same split slices correctly
+            for (sp, n), (ft, fh) in self._filter_cache.items():
+                if sp == split and n >= n_rows:
+                    got = (ft[:n_rows], fh[:n_rows])
+                    break
+            else:
+                got = pack_filter_rows(
+                    getattr(self.data, split)[:n_rows],
+                    self._known,
+                    num_filter_words(self.data.num_entities),
+                )
+            self._filter_cache[key] = got
+        return got
 
-    def evaluate(self, split: str = "valid", max_triples: int = 2000) -> dict:
-        """Filtered MRR / Hits@10 over both tail and head prediction."""
+    def ranks(self, split: str = "valid", max_triples: int = 2000) -> np.ndarray:
+        """Integer filtered ranks, (n, 2): tail-leg and head-leg columns.
+
+        This is the numpy-oracle rank path the device-batched evaluator
+        (:mod:`repro.core.evaluation`) is property-tested exactly equal to.
+        """
         triples = getattr(self.data, split)[:max_triples]
-        if triples.shape[0] == 0:
-            return {"mrr": 0.0, "hits10": 0.0, "count": 0}
-        cached = self._filter_cache.get(split)
-        if cached is None or cached[0] < triples.shape[0]:
-            cached = (triples.shape[0], *self._filters(triples))
-            self._filter_cache[split] = cached
-        ft_all, fh_all = cached[1][: triples.shape[0]], cached[2][: triples.shape[0]]
-        ranks = []
+        n = int(triples.shape[0])
+        if n == 0:
+            return np.zeros((0, 2), np.int64)
+        ft_all, fh_all = self._packed_filters(split, n)
+        out = []
         bs = 256
-        for i in range(0, triples.shape[0], bs):
-            chunk = triples[i : i + bs]
-            ft, fh = ft_all[i : i + bs], fh_all[i : i + bs]
+        for i in range(0, n, bs):
             rt, rh = _rank_batch(
                 self.params,
-                jnp.asarray(chunk),
-                jnp.asarray(ft),
-                jnp.asarray(fh),
+                jnp.asarray(triples[i : i + bs]),
+                jnp.asarray(ft_all[i : i + bs]),
+                jnp.asarray(fh_all[i : i + bs]),
                 self.method,
                 self.gamma,
             )
-            ranks.append(np.asarray(rt))
-            ranks.append(np.asarray(rh))
-        ranks_arr = np.concatenate(ranks).astype(np.float64)
+            out.append(np.stack([np.asarray(rt), np.asarray(rh)], axis=1))
+        return np.concatenate(out).astype(np.int64)
+
+    def evaluate(self, split: str = "valid", max_triples: int = 2000) -> dict:
+        """Filtered MRR / Hits@10 over both tail and head prediction."""
+        ranks = self.ranks(split, max_triples)
+        if ranks.shape[0] == 0:
+            return {"mrr": 0.0, "hits10": 0.0, "count": 0}
+        ranks_arr = ranks.astype(np.float64).reshape(-1)
         return {
             "mrr": float((1.0 / ranks_arr).mean()),
             "hits10": float((ranks_arr <= 10).mean()),
-            "count": int(triples.shape[0]),
+            "count": int(ranks.shape[0]),
         }

@@ -6,6 +6,8 @@ size."
 """
 from __future__ import annotations
 
+import numpy as np
+
 
 def weighted_average(per_client: list[dict]) -> dict:
     """per_client: list of {"mrr", "hits10", "count"} dicts."""
@@ -15,6 +17,25 @@ def weighted_average(per_client: list[dict]) -> dict:
     mrr = sum(m["mrr"] * m["count"] for m in per_client) / total
     hits = sum(m["hits10"] * m["count"] for m in per_client) / total
     return {"mrr": mrr, "hits10": hits, "count": total}
+
+
+def aggregate_eval_block(block) -> dict:
+    """Aggregate the device evaluator's ``(C, 3)`` scalar block.
+
+    ``block`` rows are per-client ``[mrr, hits10, count]`` as produced by
+    :class:`repro.core.evaluation.BatchedEvaluator` — the same weighted
+    average as :func:`weighted_average`, but from the one array an eval
+    boundary reads back instead of per-client dicts.
+    """
+    block = np.asarray(block, dtype=np.float64)
+    total = float(block[:, 2].sum())
+    if total == 0:
+        return {"mrr": 0.0, "hits10": 0.0, "count": 0}
+    return {
+        "mrr": float((block[:, 0] * block[:, 2]).sum() / total),
+        "hits10": float((block[:, 1] * block[:, 2]).sum() / total),
+        "count": int(total),
+    }
 
 
 def first_round_reaching(history: list[tuple[int, float]], target: float) -> int | None:

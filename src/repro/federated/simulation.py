@@ -6,16 +6,16 @@ the per-round work (``FederatedConfig.engine``):
 
 * ``superstep`` — whole spans of the ISM round schedule (``s`` sparse
   rounds + 1 sync round per period, chunked to eval boundaries) run as ONE
-  ``lax.scan``-ned program per superstep
-  (:class:`repro.core.state.SuperstepEngine`): one host touch-point per
-  superstep instead of one per round.  Fastest path; compiles one program
-  per distinct schedule plan.
+  ``lax.scan``-ned program per superstep *including the boundary eval*
+  (:class:`repro.core.state.SuperstepEngine` ``"eval"`` plan segments over
+  :class:`repro.core.evaluation.BatchedEvaluator`): one host touch-point
+  per superstep instead of one per round.  Fastest path; compiles one
+  program per distinct schedule plan.
 * ``fused`` (default) — the whole cycle (``local_epochs`` of local training with
   device-pre-sampled batches + the FedS communication round) is ONE
   compiled program per round over :class:`repro.core.state.FederationState`,
   which keeps every client's entity/relation tables, Adam state, upload
-  history, and the jitter PRNG key device-resident across rounds.  Entity
-  tables only cross the host boundary at eval/snapshot boundaries.
+  history, and the jitter PRNG key device-resident across rounds.
 * ``batched`` — the same device-resident state and random streams, but the
   training scan and the communication round run as separate jitted programs
   per round.  This is the correctness oracle for ``fused`` (same seeds ->
@@ -40,8 +40,19 @@ identical totals to per-round flushing.  Wire payloads and their cost
 accounting go through the pluggable codec registry
 (:mod:`repro.core.codecs`, selected by ``FederatedConfig.codec`` spec
 strings like ``"int8:ef=1"``); error-feedback codecs carry device-resident
-residual state inside :class:`repro.core.state.FederationState` and
-therefore require a device engine.
+residual state inside :class:`repro.core.state.FederationState` on the
+device engines, and host-side numpy banks
+(:func:`repro.core.protocol.sparse_upload_coded`) on the ``reference``
+path.
+
+Evaluation on the device engines is itself device-resident
+(:mod:`repro.core.evaluation`): boundaries read back only a ``(C, 3)``
+``[mrr, hits@10, count]`` block, best-model snapshots are on-device params
+copies taken when MRR improves, and entity tables cross the host exactly
+once — at the terminal snapshot materialization.  A terminal eval boundary
+is guaranteed even when ``rounds % eval_every != 0``.  The ``reference``
+engine keeps the per-client host oracle (``KGEClient.evaluate``) the
+device path is property-tested exactly equal to.
 """
 from __future__ import annotations
 
@@ -52,20 +63,21 @@ import numpy as np
 
 from repro.core.aggregate import fede_aggregate, personalized_aggregate
 from repro.core.codecs import parse_codec_spec
+from repro.core.evaluation import BatchedEvaluator
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
     build_comm_views,
     full_upload,
-    sparse_upload,
+    sparse_upload_coded,
 )
 from repro.core.sparsify import sparsity_k
-from repro.core.state import CycleEngine, SuperstepEngine
+from repro.core.state import CycleEngine, FederationState, SuperstepEngine
 from repro.core.sync import round_kind
 from repro.data.partition import ClientData
 from repro.federated.client import KGEClient
 from repro.federated.comm import CommLedger
-from repro.federated.metrics import weighted_average
+from repro.federated.metrics import aggregate_eval_block, weighted_average
 from repro.launch.mesh import make_federation_mesh
 
 ENGINES = ("fused", "batched", "reference", "superstep")
@@ -192,12 +204,6 @@ def run_federated(
     ledger = CommLedger()
 
     use_device = cfg.engine != "reference"
-    if codec.has_residual and not use_device:
-        raise ValueError(
-            f"codec {codec!r} carries device-resident error-feedback "
-            "residual state; engine='reference' (ragged numpy host protocol) "
-            "does not thread it — use a device engine"
-        )
     mesh = None
     if cfg.mesh_devices > 1:
         if not use_device:
@@ -206,6 +212,7 @@ def run_federated(
                 "not engine='reference'"
             )
         mesh = make_federation_mesh(cfg.mesh_devices)
+    evaluator = None
     if use_device:
         engine_cls = SuperstepEngine if cfg.engine == "superstep" else CycleEngine
         cycle = engine_cls(
@@ -215,12 +222,24 @@ def run_federated(
         )
         state = cycle.init_state(clients, seed=cfg.seed + 777)
         pending: list = []  # (kind, device down_count | None) per round
+        # device-resident batched eval: banks built ONCE, eval boundaries
+        # read back only a (C, 3) scalar block (no sync_clients round-trip)
+        evaluator = BatchedEvaluator(
+            clients_data, method=cfg.method, gamma=cfg.gamma,
+            e_max=cycle.e_max, max_triples=cfg.max_eval_triples,
+            splits=("valid", "test"),
+            known=[c._known for c in clients], mesh=mesh,
+        )
     else:  # ragged numpy reference protocol keeps per-client histories
         rng = np.random.default_rng(cfg.seed + 777)
         histories = [
             clients[c].entity_embeddings[jnp.asarray(views[c].shared_local)]
             for c in range(len(clients))
         ]
+        # host-side error-feedback banks (the ef=1 paper-faithful oracle)
+        residuals = [
+            np.zeros((v.num_shared, cfg.dim), np.float32) for v in views
+        ] if codec.has_residual else None
 
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
@@ -230,17 +249,27 @@ def run_federated(
     # the "single" baseline evaluates on a slower cadence (no comm cost to track)
     ee = max(cfg.eval_every, 10) if cfg.protocol == "single" else cfg.eval_every
 
-    def eval_boundary(round_no: int) -> bool:
-        """Flush+sync+evaluate at ``round_no``; True => early-stop."""
+    def eval_boundary(round_no: int, block=None) -> bool:
+        """Flush+evaluate at ``round_no``; True => early-stop.
+
+        Device engines evaluate on device: ``block`` is the evaluator's
+        ``(C, 3)`` metric block when the superstep program already produced
+        it in-program, else the standalone compiled evaluator runs here —
+        either way no entity table crosses the host, and the best-model
+        snapshot is a cheap on-device copy taken only when MRR improves.
+        """
         nonlocal best, declines, prev_mrr
         if use_device:
             _flush_ledger(
                 ledger, pending, views, codec, cfg.dim, cycle.k_per_client
             )
-            cycle.sync_clients(state, clients)
-        val = weighted_average(
-            [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
-        )
+            if block is None:
+                block = evaluator.evaluate(state.arrays.params, "valid")
+            val = aggregate_eval_block(block)
+        else:
+            val = weighted_average(
+                [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
+            )
         eval_history.append((round_no, val["mrr"], val["hits10"]))
         if verbose:
             print(
@@ -248,10 +277,14 @@ def run_federated(
                 f"Hits@10 {val['hits10']:.4f}  params {ledger.params_transmitted:.3e}"
             )
         if val["mrr"] > best["mrr"]:
+            snap = (
+                {k: jnp.copy(v) for k, v in state.arrays.params.items()}
+                if use_device else _snapshot(clients)
+            )
             best = {
                 "mrr": val["mrr"],
                 "round": round_no,
-                "snap": _snapshot(clients),
+                "snap": snap,
                 "hits": val["hits10"],
             }
         declines = declines + 1 if val["mrr"] < prev_mrr else 0
@@ -260,8 +293,11 @@ def run_federated(
 
     if cfg.engine == "superstep":
         # ------------------- superstep mode: chunk rounds to eval boundaries
-        # so every superstep runs as one compiled program and evals land at
-        # exactly the same rounds as the per-round engines
+        # so every superstep runs as ONE compiled program INCLUDING its
+        # boundary eval (an "eval" plan segment), and evals land at exactly
+        # the same rounds as the per-round engines.  Chunks end either at an
+        # eval boundary or at the final round (terminal eval guarantee), so
+        # every chunk carries an eval segment.
         t = 0
         while t < cfg.rounds:
             chunk = min(((t // ee) + 1) * ee, cfg.rounds) - t
@@ -269,16 +305,18 @@ def run_federated(
                 round_kind(u, cfg.protocol, cfg.sync_interval)
                 for u in range(t, t + chunk)
             )
-            state, per_round, _losses = cycle.superstep(state, kinds)
+            state, per_round, _losses, block = cycle.superstep_with_eval(
+                state, kinds, evaluator, "valid"
+            )
             pending.extend(per_round)
             t += chunk
             rounds_run = t
-            if t % ee == 0 and eval_boundary(t):
+            if eval_boundary(t, block=block):
                 break
         # superstep is always a device engine, so cycle/state/pending exist
         return _finish(
             cfg, clients, use_device, cycle, state, pending,
-            views, codec, ledger, eval_history, best, rounds_run,
+            views, codec, ledger, eval_history, best, rounds_run, evaluator,
         )
 
     for t in range(cfg.rounds):
@@ -306,6 +344,12 @@ def run_federated(
             for c in clients:
                 c.train_local(cfg.local_epochs)
             if comm and sync:
+                if residuals is not None:
+                    # the full exchange transmits exact values: stale banked
+                    # error would re-inject pre-sync loss (same contract as
+                    # the device engines' residual clear)
+                    for res in residuals:
+                        res[:] = 0.0
                 uploads = []
                 for c, v in zip(clients, views):
                     up, hist = full_upload(c.params["entity"], v)
@@ -321,20 +365,18 @@ def run_federated(
             elif comm:  # sparse FedS round, ragged numpy reference path
                 uploads = []
                 for c, v in zip(clients, views):
-                    up, hist = sparse_upload(
+                    # wire codec (and its host-side error-feedback bank,
+                    # when ef=1) applied inside the coded upload
+                    up, hist, res = sparse_upload_coded(
                         c.params["entity"], histories[v.client_id], v,
-                        cfg.sparsity_p,
+                        cfg.sparsity_p, codec,
+                        residuals[v.client_id] if residuals is not None
+                        else None,
                     )
                     histories[v.client_id] = hist
+                    if residuals is not None:
+                        residuals[v.client_id] = res
                     k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
-                    if codec.transforms_values:
-                        # messages are frozen: the transform builds a new one
-                        up = dataclasses.replace(
-                            up,
-                            values=np.asarray(
-                                codec.roundtrip(jnp.asarray(up.values)), np.float32
-                            ),
-                        )
                     codec.log_upload(ledger, k_round, cfg.dim, v.num_shared)
                     uploads.append(up)
                 downloads = personalized_aggregate(
@@ -362,27 +404,48 @@ def run_federated(
             ledger.end_round()
 
         # ------------------------------------------------------- evaluation
-        if (t + 1) % ee == 0 and eval_boundary(t + 1):
+        # terminal-eval guarantee: when rounds is not a multiple of the eval
+        # cadence, the final partial span still ends with an eval boundary
+        # (otherwise the last rounds are never evaluated and can never win
+        # the best-model snapshot)
+        at_boundary = (t + 1) % ee == 0 or (t + 1) == cfg.rounds
+        if at_boundary and eval_boundary(t + 1):
             break
 
     return _finish(
         cfg, clients, use_device, cycle if use_device else None,
         state if use_device else None, pending if use_device else None,
         views, codec, ledger, eval_history, best, rounds_run,
+        evaluator,
     )
 
 
 def _finish(
     cfg, clients, use_device, cycle, state, pending,
-    views, codec, ledger, eval_history, best, rounds_run,
+    views, codec, ledger, eval_history, best, rounds_run, evaluator=None,
 ) -> FederatedResult:
-    """Final flush + best-snapshot restore + test evaluation."""
+    """Final flush + best-snapshot restore + test evaluation.
+
+    Device engines restore the best on-device snapshot into the federation
+    state, run the device-batched test eval, and only then materialize the
+    tables into the per-client params (the single terminal host transfer).
+    """
     if use_device:
         _flush_ledger(ledger, pending, views, codec, cfg.dim, cycle.k_per_client)
+        if best["snap"] is not None:
+            state = FederationState(
+                state.arrays._replace(params=best["snap"]), state.key
+            )
+        test = aggregate_eval_block(
+            evaluator.evaluate(state.arrays.params, "test")
+        )
         cycle.sync_clients(state, clients)
-    if best["snap"] is not None:
-        _restore(clients, best["snap"])
-    test = weighted_average([c.evaluate("test", cfg.max_eval_triples) for c in clients])
+    else:
+        if best["snap"] is not None:
+            _restore(clients, best["snap"])
+        test = weighted_average(
+            [c.evaluate("test", cfg.max_eval_triples) for c in clients]
+        )
     return FederatedResult(
         config=cfg,
         eval_history=eval_history,

@@ -81,6 +81,67 @@ def transe_neg_score_pallas(
     return out[:b, :n]
 
 
+def _dist_cand_kernel(gamma, mode, half, q_ref, c_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)  # (BB, D)
+    c = c_ref[...].astype(jnp.float32)  # (BN, D)
+    d = q[:, None, :] - c[None, :, :]  # (BB, BN, D)
+    if mode == "transe":
+        dist = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=-1), 1e-24))
+    else:  # rotate with the unit-modulus rotation folded into q
+        d_re, d_im = d[:, :, :half], d[:, :, half : 2 * half]
+        dist = jnp.sqrt(d_re * d_re + d_im * d_im + 1e-12).sum(axis=-1)
+    out_ref[...] = gamma - dist
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "method", "block_b", "block_n", "interpret")
+)
+def dist_cand_score_pallas(
+    q: jnp.ndarray,  # (B, D) per-query rows (leg-specific, see kernels.ops)
+    cand: jnp.ndarray,  # (N, D) candidate rows SHARED across the batch
+    gamma: float,
+    method: str = "transe",
+    block_b: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Evaluation-shaped scoring: ``gamma - dist(q_b, cand_n)`` -> (B, N).
+
+    Unlike the training kernels above (per-query ``(B, N, D)`` negatives),
+    filtered-ranking eval scores every query against ONE shared candidate
+    block, so the kernel tiles (query-block x candidate-block) and the
+    ``(B, N, D)`` difference tensor never exists outside VMEM.  Both legs of
+    both distance models reduce to this form with a precomputed query row:
+    TransE tail ``q = h + r``, head ``q = t - r``; RotatE tail ``q = h∘r``,
+    head ``q = t∘conj(r)`` (unit-modulus rotations preserve the distance).
+    D is zero-padded to a lane multiple (exact: padded coordinates cancel in
+    ``q - cand``; RotatE slices its true halves before the modulus).
+    """
+    b, d = q.shape
+    n = cand.shape[0]
+    half = d // 2
+    d_pad = (-d) % 128
+    b_pad = (-b) % block_b
+    n_pad = (-n) % block_n
+    q = jnp.pad(q, ((0, b_pad), (0, d_pad)))
+    cand = jnp.pad(cand, ((0, n_pad), (0, d_pad)))
+    bf, df = q.shape
+    nf = cand.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_dist_cand_kernel, gamma, method, half),
+        grid=(bf // block_b, nf // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, df), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bf, nf), jnp.float32),
+        interpret=interpret,
+    )(q, cand)
+    return out[:b, :n]
+
+
 @functools.partial(
     jax.jit, static_argnames=("gamma", "block_b", "block_n", "interpret")
 )

@@ -16,8 +16,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.change_score import change_score_pallas
-from repro.kernels.kge_score import rotate_neg_score_pallas, transe_neg_score_pallas
+from repro.kernels.kge_score import (
+    dist_cand_score_pallas,
+    rotate_neg_score_pallas,
+    transe_neg_score_pallas,
+)
 from repro.kernels.sparse_apply import sparse_apply_pallas
+from repro.kge import scoring
 
 
 def _mode() -> str:
@@ -50,6 +55,65 @@ def rotate_neg_score(h, phase, t_neg, gamma: float) -> jnp.ndarray:
     if mode == "ref":
         return ref.rotate_neg_score_ref(h, phase, t_neg, gamma)
     return rotate_neg_score_pallas(h, phase, t_neg, gamma, interpret=(mode == "interpret"))
+
+
+def kge_score_rows(h, r, t, method: str, gamma: float) -> jnp.ndarray:
+    """Score already-gathered embedding rows (broadcasting, jnp semantics).
+
+    Always the exact :mod:`repro.kge.scoring` arithmetic — this is the gold
+    path of the batched evaluator, whose rank-exactness contract with the
+    numpy oracle depends on candidate and gold scores sharing one
+    definition.
+    """
+    return scoring.get_score_fn(method)(h, r, t, gamma)
+
+
+def kge_cand_scores(h, r, t, cand, method: str, gamma: float):
+    """Both filtered-ranking legs against a shared candidate block.
+
+    ``h``/``r``/``t``: ``(..., B, D[r])`` gathered query rows;
+    ``cand``: ``(..., N, D)`` candidate entity rows shared across the batch
+    (leading axes, e.g. the client axis, broadcast/vmap through).  Returns
+    ``(tail_scores, head_scores)``, each ``(..., B, N)``.
+
+    Dispatch: TPU/interpret routes TransE/RotatE through the tiled
+    ``dist_cand_score_pallas`` eval kernel (per-leg query rows precomputed,
+    see its docstring for the algebra); the ref path — and ComplEx, whose
+    trilinear form is not a distance — broadcasts the exact
+    :mod:`repro.kge.scoring` functions, which is what the oracle-exactness
+    property tests pin.
+    """
+    mode = _mode()
+    if mode == "ref" or method == "complex":
+        score = scoring.get_score_fn(method)
+        ts = score(
+            h[..., :, None, :], r[..., :, None, :], cand[..., None, :, :], gamma
+        )
+        hs = score(
+            cand[..., None, :, :], r[..., :, None, :], t[..., :, None, :], gamma
+        )
+        return ts, hs
+    if method == "transe":
+        q_t = h + r  # ||(h + r) - cand||
+        q_h = t - r  # ||cand + r - t|| == ||cand - (t - r)||
+    elif method == "rotate":
+        half = h.shape[-1] // 2
+        cos, sin = jnp.cos(r), jnp.sin(r)
+        h_re, h_im = h[..., :half], h[..., half:]
+        t_re, t_im = t[..., :half], t[..., half:]
+        # tail: |h∘r - cand|; head: |cand∘r - t| == |cand - t∘conj(r)|
+        q_t = jnp.concatenate([h_re * cos - h_im * sin,
+                               h_re * sin + h_im * cos], axis=-1)
+        q_h = jnp.concatenate([t_re * cos + t_im * sin,
+                               t_im * cos - t_re * sin], axis=-1)
+    else:
+        raise ValueError(f"no candidate-scoring kernel for method {method!r}")
+    fn = lambda q, c: dist_cand_score_pallas(  # noqa: E731
+        q, c, gamma, method=method, interpret=(mode == "interpret")
+    )
+    for _ in range(h.ndim - 2):  # leading client axes
+        fn = jax.vmap(fn)
+    return fn(q_t, cand), fn(q_h, cand)
 
 
 def sparse_apply(emb, agg, priority, sign) -> jnp.ndarray:

@@ -17,6 +17,14 @@ from repro.data import generate_kg, partition_by_relation
 from repro.federated.simulation import FederatedConfig, run_federated
 
 
+def _positive_int(value: str) -> int:
+    """argparse type for flags that must be >= 1 (cadences, caps)."""
+    n = int(value)
+    if n < 1:
+        raise argparse.ArgumentTypeError(f"expected a positive integer, got {n}")
+    return n
+
+
 def _codec_spec(spec: str) -> str:
     """Validate a --codec spec eagerly so parse errors surface at argparse
     time, carrying the registry's own name/kwargs listing."""
@@ -63,6 +71,12 @@ def main() -> None:
                     help="FedS+Q8: int8 row payloads on the wire "
                          "(legacy alias for --codec int8)")
     ap.add_argument("--sync-interval", type=int, default=4)
+    ap.add_argument("--eval-every", type=_positive_int, default=5,
+                    help="validation cadence in rounds; a terminal eval is "
+                         "guaranteed even when rounds %% eval-every != 0")
+    ap.add_argument("--max-eval-triples", type=_positive_int, default=500,
+                    help="per-client cap on eval triples per split (sizes "
+                         "the device evaluator's padded (C, B_max) banks)")
     ap.add_argument("--entities", type=int, default=400)
     ap.add_argument("--triples", type=int, default=5000)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,6 +96,7 @@ def main() -> None:
         rounds=args.rounds, local_epochs=args.local_epochs,
         batch_size=args.batch_size, num_negatives=args.negatives, lr=args.lr,
         sparsity_p=args.sparsity, sync_interval=args.sync_interval,
+        eval_every=args.eval_every, max_eval_triples=args.max_eval_triples,
         engine=args.engine, mesh_devices=args.mesh_devices,
         codec=args.codec, quantize_upload=args.quantize_upload,
         seed=args.seed,

@@ -267,18 +267,70 @@ def test_residual_codec_requires_res_buffer():
         )
 
 
-def test_residual_codec_rejected_by_round_engine_and_reference():
+def test_residual_codec_rejected_by_round_engine():
     l2g = [np.array([0, 1, 2]), np.array([1, 2, 3])]
     views = build_comm_views(l2g, 4)
     with pytest.raises(ValueError, match="residual"):
         RoundEngine(views, 4, 8, 0.5, codec=get_codec("int8", ef=True))
-    kg = generate_kg(num_entities=60, num_relations=4, num_triples=200, seed=0)
-    clients = partition_by_relation(kg, 2, seed=0)
+
+
+# ------------------------------------------- EF-aware reference (host) path
+def test_reference_ef_upload_banks_exact_residual():
+    """The ragged numpy EF oracle obeys the same update rule as the device
+    engines: corrected = row + res, res' = corrected - roundtrip(corrected)
+    on uploaded rows, untouched elsewhere."""
+    from repro.core.protocol import build_comm_views as bcv, sparse_upload_coded
+
+    rng = np.random.default_rng(0)
+    l2g = [np.arange(6), np.arange(6)]  # all entities shared
+    views = bcv([a.astype(np.int32) for a in l2g], 6)
+    codec = get_codec("int8", ef=True)
+    table = jnp.asarray(rng.standard_normal((6, 8)), jnp.float32)
+    hist = jnp.zeros((6, 8), jnp.float32)
+    res0 = rng.standard_normal((6, 8)).astype(np.float32) * 0.01
+    p = 0.5  # k = 3 of 6 rows selected
+    up, _hist, res1 = sparse_upload_coded(table, hist, views[0], p, codec, res0)
+    rows = np.asarray(
+        [views[0].global_to_row[int(g)] for g in up.entity_ids], np.int32
+    )
+    cur = np.asarray(table)[np.asarray(views[0].shared_local)]
+    corrected = cur[rows] + res0[rows]
+    wire = np.asarray(codec.roundtrip(jnp.asarray(corrected)))
+    np.testing.assert_allclose(up.values, wire, atol=1e-6)
+    np.testing.assert_allclose(res1[rows], corrected - wire, atol=1e-6)
+    unsel = np.setdiff1d(np.arange(6), rows)
+    np.testing.assert_array_equal(res1[unsel], res0[unsel])  # banks persist
+    assert res1 is not res0  # the caller's bank is never mutated in place
+
     with pytest.raises(ValueError, match="residual"):
-        run_federated(
-            clients, kg.num_entities,
-            FederatedConfig(rounds=1, dim=8, engine="reference", codec="int8:ef=1"),
-        )
+        sparse_upload_coded(table, hist, views[0], p, codec, None)
+
+
+def test_reference_ef_runs_and_matches_non_ef_ledger():
+    """engine="reference" now threads host-side EF residuals: the run works,
+    metrics are finite, and (EF changes transmitted VALUES, never counts)
+    the ledger is bitwise identical to the ef=0 run.  Sync rounds clear the
+    banked error, so a sync-every-round schedule transmits exact values and
+    EF must change nothing at all."""
+    kg = generate_kg(num_entities=60, num_relations=4, num_triples=300, seed=0)
+    clients = partition_by_relation(kg, 2, seed=0)
+    cfg = dict(rounds=4, dim=8, local_epochs=1, batch_size=32, lr=5e-3,
+               sync_interval=2, eval_every=2, patience=99,
+               max_eval_triples=20, engine="reference")
+    plain = run_federated(
+        clients, kg.num_entities, FederatedConfig(codec="int8", **cfg))
+    ef = run_federated(
+        clients, kg.num_entities, FederatedConfig(codec="int8:ef=1", **cfg))
+    assert np.isfinite(ef.test_mrr_cg)
+    assert ef.ledger.history == plain.ledger.history
+    assert ef.ledger.bytes_int8_signs == plain.ledger.bytes_int8_signs
+
+    sync_cfg = dict(cfg, sync_interval=0)  # degenerate ISM: sync every round
+    a = run_federated(
+        clients, kg.num_entities, FederatedConfig(codec="int8", **sync_cfg))
+    b = run_federated(
+        clients, kg.num_entities, FederatedConfig(codec="int8:ef=1", **sync_cfg))
+    assert a.eval_history == b.eval_history
 
 
 def test_quantize_upload_legacy_alias_and_conflict():

@@ -1,0 +1,360 @@
+"""Device-batched filtered-ranking eval == the numpy oracle, exactly.
+
+The batched evaluator (repro.core.evaluation) computes integer filtered
+ranks that must be EXACTLY equal — both head and tail legs — to the
+per-client numpy-oracle ranks of ``KGEClient.ranks`` over randomized
+heterogeneous federations, and the superstep program with an ``"eval"``
+plan segment must leave bitwise-identical carried state and produce a
+bitwise-identical metric block to running the rounds and the standalone
+eval program separately.  A 2-device pod spec pins the ``shard_map`` twin.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.evaluation import (
+    BatchedEvaluator,
+    build_eval_bank,
+    build_known_index,
+    num_filter_words,
+    pack_filter_rows,
+    unpack_filter_words,
+)
+from repro.core.protocol import build_comm_views
+from repro.core.state import CycleEngine, SuperstepEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.metrics import aggregate_eval_block, weighted_average
+from repro.federated.simulation import FederatedConfig, run_federated
+
+
+def _federation(seed, method="transe", dim=8):
+    """Randomized heterogeneous federation (seeded, no hypothesis wheel)."""
+    rng = np.random.default_rng(seed)
+    nc = int(rng.integers(2, 5))
+    kg = generate_kg(
+        num_entities=int(rng.integers(80, 200)),
+        num_relations=3 * nc,
+        num_triples=int(rng.integers(600, 1500)),
+        seed=int(rng.integers(0, 1000)),
+    )
+    cd = partition_by_relation(kg, nc, seed=int(rng.integers(0, 10)))
+    clients = [
+        KGEClient(d, method=method, dim=dim, batch_size=32, num_negatives=4,
+                  lr=5e-3, seed=seed)
+        for d in cd
+    ]
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    return kg, cd, clients, views
+
+
+# ------------------------------------------------------------ filter packing
+def test_pack_unpack_roundtrip_matches_bruteforce():
+    rng = np.random.default_rng(3)
+    kg = generate_kg(num_entities=70, num_relations=5, num_triples=400, seed=1)
+    cd = partition_by_relation(kg, 2, seed=0)[0]
+    known = build_known_index(cd.train, cd.valid, cd.test)
+    tri = cd.valid
+    w = num_filter_words(cd.num_entities)
+    ft_w, fh_w = pack_filter_rows(tri, known, w)
+    assert ft_w.dtype == np.uint32 and ft_w.shape == (tri.shape[0], w)
+    ft = np.asarray(unpack_filter_words(jnp.asarray(ft_w), cd.num_entities))
+    fh = np.asarray(unpack_filter_words(jnp.asarray(fh_w), cd.num_entities))
+    for i, (h, r, t) in enumerate(tri.tolist()):
+        assert set(np.nonzero(ft[i])[0]) == set(known[("t", h, r)]) - {t}
+        assert set(np.nonzero(fh[i])[0]) == set(known[("h", r, t)]) - {h}
+    # ~32x memory cut over the dense bool representation
+    assert ft_w.nbytes * 8 <= ft.nbytes + 31 * ft_w.shape[0] * 8
+    del rng
+
+
+def test_bank_requires_covering_e_max():
+    kg = generate_kg(num_entities=70, num_relations=6, num_triples=400, seed=0)
+    cd = partition_by_relation(kg, 2, seed=0)
+    with pytest.raises(ValueError, match="e_max"):
+        BatchedEvaluator(cd, method="transe", gamma=8.0, e_max=4,
+                         max_triples=10)
+
+
+def test_bank_pads_empty_and_capped_splits():
+    kg = generate_kg(num_entities=90, num_relations=6, num_triples=500, seed=0)
+    cd = partition_by_relation(kg, 2, seed=0)
+    e_max = max(d.num_entities for d in cd)
+    bank = build_eval_bank(cd, "valid", max_triples=3, e_max=e_max)
+    assert bank.triples.shape[1] == 3  # capped B_max
+    np.testing.assert_array_equal(np.asarray(bank.count), [3, 3])
+
+
+# ------------------------------------------------- exact oracle equivalence
+@pytest.mark.parametrize("seed,method", [
+    (0, "transe"), (1, "rotate"), (2, "complex"), (3, "transe"), (4, "rotate"),
+])
+def test_batched_ranks_exactly_equal_oracle(seed, method):
+    """Integer filtered ranks (both legs) from the device program == the
+    numpy-oracle ranks, over randomized heterogeneous federations, after
+    real training has moved the tables."""
+    kg, cd, clients, views = _federation(seed, method=method)
+    engine = CycleEngine(clients, views, kg.num_entities,
+                         sparsity_p=0.5, local_epochs=1)
+    state = engine.init_state(clients, seed=seed)
+    for sync in (False, True):
+        state, _, _ = engine.fused_cycle(state, sync=sync)
+    engine.sync_clients(state, clients)
+
+    rng = np.random.default_rng(seed + 100)
+    cap = int(rng.integers(5, 60))
+    chunk = int(rng.choice([7, 64, 512]))
+    ev = BatchedEvaluator(cd, method=method, gamma=clients[0].gamma,
+                          e_max=engine.e_max, max_triples=cap, chunk=chunk)
+    for split in ("valid", "test"):
+        rt, rh = ev.ranks(state.arrays.params, split)
+        block = ev.evaluate(state.arrays.params, split)
+        per_client = []
+        for c, cl in enumerate(clients):
+            oracle = cl.ranks(split, cap)  # (n, 2) tail/head columns
+            n = oracle.shape[0]
+            np.testing.assert_array_equal(oracle[:, 0], rt[c, :n], err_msg=split)
+            np.testing.assert_array_equal(oracle[:, 1], rh[c, :n], err_msg=split)
+            m = cl.evaluate(split, cap)
+            per_client.append(m)
+            assert int(block[c, 2]) == m["count"]
+            # float metric from identical integer ranks: f32 vs f64 only
+            assert abs(block[c, 0] - m["mrr"]) < 1e-6
+            assert abs(block[c, 1] - m["hits10"]) < 1e-6
+        agg = aggregate_eval_block(block)
+        want = weighted_average(per_client)
+        assert agg["count"] == want["count"]
+        assert abs(agg["mrr"] - want["mrr"]) < 1e-6
+
+
+# --------------------------------------------- superstep "eval" plan segment
+def test_superstep_with_eval_bitwise_equals_separate_eval():
+    """One program over (rounds + eval) must leave the SAME carried state
+    (bitwise) as the rounds alone, and its in-program metric block must be
+    bitwise identical to the standalone compiled evaluator on that state."""
+    kg, cd, clients, views = _federation(7)
+
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=7)
+            for d in cd
+        ]
+
+    engine = SuperstepEngine(mk(), views, kg.num_entities,
+                             sparsity_p=0.5, local_epochs=2)
+    ev = BatchedEvaluator(cd, method="transe", gamma=8.0, e_max=engine.e_max,
+                          max_triples=30)
+    kinds = ("sparse", "sparse", "sync", "none")
+
+    sa = engine.init_state(mk(), seed=3)
+    sa, pr_a, _l, block = engine.superstep_with_eval(sa, kinds, ev, "valid")
+
+    sb = engine.init_state(mk(), seed=3)
+    sb, pr_b, _l2 = engine.superstep(sb, kinds)
+    block_sep = ev._eval(sb.arrays.params, ev.banks["valid"])
+
+    np.testing.assert_array_equal(np.asarray(sa.key), np.asarray(sb.key))
+    for name, a, b in (
+        ("entity", sa.arrays.params["entity"], sb.arrays.params["entity"]),
+        ("relation", sa.arrays.params["relation"], sb.arrays.params["relation"]),
+        ("hist", sa.arrays.hist, sb.arrays.hist),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(block), np.asarray(block_sep))
+    downs_a = [np.asarray(d) for k, d in pr_a if k == "sparse"]
+    downs_b = [np.asarray(d) for k, d in pr_b if k == "sparse"]
+    np.testing.assert_array_equal(np.asarray(downs_a), np.asarray(downs_b))
+
+
+def test_superstep_eval_cache_keyed_on_evaluator():
+    """Two evaluators sharing a plan+split must not reuse each other's
+    compiled program (eval_core closes over method/gamma/chunk)."""
+    kg, cd, clients, views = _federation(11)
+
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=11)
+            for d in cd
+        ]
+
+    engine = SuperstepEngine(mk(), views, kg.num_entities,
+                             sparsity_p=0.5, local_epochs=1)
+    ev_a = BatchedEvaluator(cd, method="transe", gamma=8.0,
+                            e_max=engine.e_max, max_triples=10, chunk=32)
+    ev_b = BatchedEvaluator(cd, method="transe", gamma=8.0,
+                            e_max=engine.e_max, max_triples=25, chunk=512)
+    kinds = ("sparse",)
+    sa = engine.init_state(mk(), seed=1)
+    _, _, _, block_a = engine.superstep_with_eval(sa, kinds, ev_a, "valid")
+    sb = engine.init_state(mk(), seed=1)
+    _, _, _, block_b = engine.superstep_with_eval(sb, kinds, ev_b, "valid")
+    # same rounds, different banks/chunking: counts differ, programs must too
+    assert int(np.asarray(block_a)[:, 2].sum()) != int(
+        np.asarray(block_b)[:, 2].sum()
+    )
+    assert len(engine._superstep_cache) == 2
+
+
+def test_superstep_rejects_inline_eval_kind():
+    kg, cd, clients, views = _federation(5)
+    engine = SuperstepEngine(clients, views, kg.num_entities,
+                             sparsity_p=0.5, local_epochs=1)
+    state = engine.init_state(clients, seed=0)
+    with pytest.raises(ValueError, match="superstep_with_eval"):
+        engine.superstep(state, ("sparse", "eval"))
+
+
+# --------------------------------------------------- simulation integration
+@pytest.mark.parametrize("engine", ["superstep", "fused", "reference"])
+def test_terminal_eval_boundary_guaranteed(engine):
+    """rounds % eval_every != 0 must still evaluate the final rounds (the
+    old loops silently dropped them, so they could never win the best-model
+    snapshot), on every engine."""
+    kg = generate_kg(num_entities=100, num_relations=6, num_triples=600, seed=2)
+    clients = partition_by_relation(kg, 2, seed=0)
+    res = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(method="transe", dim=8, rounds=7, local_epochs=1,
+                        batch_size=32, num_negatives=4, lr=5e-3,
+                        sparsity_p=0.5, sync_interval=2, eval_every=5,
+                        patience=99, max_eval_triples=20, engine=engine),
+    )
+    assert [r for r, _, _ in res.eval_history] == [5, 7]
+    assert res.rounds_run == 7
+
+
+def test_simulation_device_eval_history_matches_engines():
+    """All three device engines (standalone eval program for fused/batched,
+    in-program eval segment for superstep) must produce ONE bitwise eval
+    trajectory and the same test metrics."""
+    kg = generate_kg(num_entities=110, num_relations=9, num_triples=800, seed=4)
+    clients = partition_by_relation(kg, 3, seed=0)
+    cfg = dict(method="transe", dim=8, rounds=5, local_epochs=1,
+               batch_size=32, num_negatives=4, lr=5e-3, sparsity_p=0.5,
+               sync_interval=2, eval_every=2, patience=99,
+               max_eval_triples=25, seed=1)
+    out = {
+        eng: run_federated(clients, kg.num_entities,
+                           FederatedConfig(engine=eng, **cfg))
+        for eng in ("fused", "batched", "superstep")
+    }
+    assert out["fused"].eval_history == out["batched"].eval_history
+    assert out["fused"].eval_history == out["superstep"].eval_history
+    assert out["fused"].test_mrr_cg == out["superstep"].test_mrr_cg
+    assert out["fused"].best_round == out["superstep"].best_round
+    assert np.isfinite(out["fused"].test_mrr_cg)
+
+
+# ------------------------------------------------------------- pod (2-device)
+_POD_EVAL_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.engine import make_client_mesh
+from repro.core.evaluation import BatchedEvaluator
+from repro.core.protocol import build_comm_views
+from repro.core.state import SuperstepEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.simulation import FederatedConfig, run_federated
+
+kg = generate_kg(num_entities=120, num_relations=8, num_triples=900, seed=1)
+cd = partition_by_relation(kg, 2, seed=0)
+def mk():
+    return [KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=0) for d in cd]
+views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+
+host = SuperstepEngine(mk(), views, kg.num_entities, sparsity_p=0.5, local_epochs=1)
+pod = SuperstepEngine(mk(), views, kg.num_entities, sparsity_p=0.5, local_epochs=1,
+                      mesh=make_client_mesh(2))
+ev_h = BatchedEvaluator(cd, method="transe", gamma=8.0, e_max=host.e_max,
+                        max_triples=25)
+ev_p = BatchedEvaluator(cd, method="transe", gamma=8.0, e_max=pod.e_max,
+                        max_triples=25, mesh=make_client_mesh(2))
+kinds = ("sparse", "sync")
+sh = host.init_state(mk(), seed=7)
+sp = pod.init_state(mk(), seed=7)
+sh, _, _, bh = host.superstep_with_eval(sh, kinds, ev_h, "valid")
+sp, _, _, bp = pod.superstep_with_eval(sp, kinds, ev_p, "valid")
+rt_h, rh_h = ev_h.ranks(sh.arrays.params, "valid")
+rt_p, rh_p = ev_p.ranks(sp.arrays.params, "valid")
+
+base = dict(method="transe", dim=8, rounds=3, local_epochs=1, batch_size=32,
+            num_negatives=4, lr=5e-3, sparsity_p=0.5, sync_interval=2,
+            eval_every=2, patience=99, max_eval_triples=25, seed=0)
+host_sim = run_federated(cd, kg.num_entities,
+                         FederatedConfig(protocol="feds", engine="fused", **base))
+pod_sim = run_federated(cd, kg.num_entities,
+                        FederatedConfig(protocol="feds", engine="superstep",
+                                        mesh_devices=2, **base))
+print(json.dumps({
+    "block_eq": bool(np.array_equal(np.asarray(bh), np.asarray(bp))),
+    "ranks_eq": bool(np.array_equal(rt_h, rt_p) and np.array_equal(rh_h, rh_p)),
+    "sim_hist_eq": host_sim.eval_history == pod_sim.eval_history,
+    "sim_mrr_eq": host_sim.test_mrr_cg == pod_sim.test_mrr_cg,
+    "tail_evald": [r for r, _, _ in pod_sim.eval_history] == [2, 3],
+}))
+"""
+
+
+def test_pod_eval_matches_host():
+    """The 2-device shard_map evaluator (and a pod superstep simulation with
+    in-program eval, including the terminal partial span) must reproduce the
+    host results bitwise."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _POD_EVAL_WORKER], capture_output=True,
+        text=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out == {
+        "block_eq": True, "ranks_eq": True, "sim_hist_eq": True,
+        "sim_mrr_eq": True, "tail_evald": True,
+    }
+
+
+# -------------------------------------------------------- metric aggregation
+def test_aggregate_eval_block_matches_weighted_average():
+    block = np.asarray([[0.5, 0.8, 10.0], [0.25, 0.4, 30.0], [0.0, 0.0, 0.0]])
+    dicts = [
+        {"mrr": 0.5, "hits10": 0.8, "count": 10},
+        {"mrr": 0.25, "hits10": 0.4, "count": 30},
+        {"mrr": 0.0, "hits10": 0.0, "count": 0},
+    ]
+    a, w = aggregate_eval_block(block), weighted_average(dicts)
+    assert a["count"] == w["count"]
+    assert abs(a["mrr"] - w["mrr"]) < 1e-12
+    assert abs(a["hits10"] - w["hits10"]) < 1e-12
+    assert aggregate_eval_block(np.zeros((2, 3))) == {
+        "mrr": 0.0, "hits10": 0.0, "count": 0,
+    }
+
+
+def test_eval_state_built_once_and_device_resident():
+    """Banks are jax arrays built at construction; evaluate() reads back
+    only the (C, 3) block."""
+    kg, cd, clients, views = _federation(9)
+    engine = CycleEngine(clients, views, kg.num_entities,
+                         sparsity_p=0.5, local_epochs=1)
+    ev = BatchedEvaluator(cd, method="transe", gamma=8.0, e_max=engine.e_max,
+                          max_triples=20)
+    for bank in ev.banks.values():
+        for leaf in bank:
+            assert isinstance(leaf, jax.Array)
+    state = engine.init_state(clients, seed=0)
+    block = ev.evaluate(state.arrays.params, "valid")
+    assert block.shape == (len(clients), 3)

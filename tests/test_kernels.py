@@ -63,6 +63,82 @@ def test_rotate_kernel(b, n, d):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("b,n,d", [(4, 8, 32), (7, 150, 64), (16, 257, 100)])
+@pytest.mark.parametrize("method", ["transe", "rotate"])
+def test_dist_cand_score_kernel(b, n, d, method):
+    """The eval-shaped kernel (shared candidate block across the batch) vs
+    the exact scoring-fn broadcast the ref dispatch path uses."""
+    from repro.kernels.kge_score import dist_cand_score_pallas
+    from repro.kge.scoring import get_score_fn
+
+    if method == "rotate" and d % 2:
+        d += 1
+    ks = jax.random.split(jax.random.PRNGKey(b * n + d), 3)
+    cand = jax.random.normal(ks[2], (n, d))
+    score = get_score_fn(method)
+    if method == "transe":
+        h = jax.random.normal(ks[0], (b, d))
+        r = jax.random.normal(ks[1], (b, d))
+        q = h + r  # tail-leg query rows (see kernels.ops.kge_cand_scores)
+        want = score(h[:, None, :], r[:, None, :], cand[None, :, :], 8.0)
+    else:
+        h = jax.random.normal(ks[0], (b, d))
+        phase = jax.random.uniform(ks[1], (b, d // 2), minval=-3.14, maxval=3.14)
+        half = d // 2
+        h_re, h_im = h[:, :half], h[:, half:]
+        q = jnp.concatenate(
+            [h_re * jnp.cos(phase) - h_im * jnp.sin(phase),
+             h_re * jnp.sin(phase) + h_im * jnp.cos(phase)], axis=-1)
+        want = score(h[:, None, :], phase[:, None, :], cand[None, :, :], 8.0)
+    got = dist_cand_score_pallas(q, cand, 8.0, method=method, block_b=4,
+                                 block_n=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kge_cand_scores_head_leg_algebra():
+    """ops.kge_cand_scores' head-leg query folding (t - r for TransE,
+    t∘conj(r) for RotatE) must agree with scoring the candidates as heads
+    directly."""
+    from repro.kernels import ops
+    from repro.kge.scoring import get_score_fn
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    b, n, d = 6, 40, 16
+    cand = jax.random.normal(ks[3], (n, d))
+    for method, rd in (("transe", d), ("rotate", d // 2)):
+        h = jax.random.normal(ks[0], (b, d))
+        r = jax.random.normal(ks[1], (b, rd))
+        t = jax.random.normal(ks[2], (b, d))
+        _, hs = ops.kge_cand_scores(h, r, t, cand, method, 8.0)
+        want = get_score_fn(method)(
+            cand[None, :, :], r[:, None, :], t[:, None, :], 8.0
+        )
+        np.testing.assert_allclose(np.asarray(hs), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5, err_msg=method)
+
+
+def test_kge_cand_scores_interpret_close_to_ref(monkeypatch):
+    """Pallas dispatch (interpret) of both legs stays within fp tolerance of
+    the exact ref path."""
+    from repro.kernels import ops
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    b, n, d = 5, 33, 32
+    h = jax.random.normal(ks[0], (b, d))
+    r = jax.random.normal(ks[1], (b, d))
+    t = jax.random.normal(ks[2], (b, d))
+    cand = jax.random.normal(ks[3], (n, d))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    ts_a, hs_a = ops.kge_cand_scores(h, r, t, cand, "transe", 8.0)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    ts_b, hs_b = ops.kge_cand_scores(h, r, t, cand, "transe", 8.0)
+    np.testing.assert_allclose(np.asarray(ts_a), np.asarray(ts_b),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hs_a), np.asarray(hs_b),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("shape", [(16, 8), (100, 64), (257, 100)])
 def test_sparse_apply_kernel(shape):
     n, d = shape

@@ -295,24 +295,30 @@ def test_flat_trainer_rejects_unequal_adam_steps():
 
 # ----------------------------------------------------- eval filter-mask cache
 def test_eval_filter_cache_matches_bruteforce():
+    from repro.core.evaluation import unpack_filter_words
+
     _, clients = _make_engine()
     cl = clients[0]
     triples = cl.data.valid
     assert cl._filter_cache == {}  # lazy: nothing built at construction
     n = int(triples.shape[0])
+    e = cl.data.num_entities
     cl.evaluate("valid", n)
-    cached_n, ft, fh = cl._filter_cache["valid"]
-    assert cached_n == n
-    assert ft.shape == (n, cl.data.num_entities)
+    ft_w, fh_w = cl._filter_cache[("valid", n)]
+    assert ft_w.shape == (n, (e + 31) // 32) and ft_w.dtype == np.uint32
+    ft = np.asarray(unpack_filter_words(jnp.asarray(ft_w), e))
+    fh = np.asarray(unpack_filter_words(jnp.asarray(fh_w), e))
     for i, (h, r, t) in enumerate(triples.tolist()):
         tails = set(cl._known.get(("t", h, r), set())) - {t}
         heads = set(cl._known.get(("h", r, t), set())) - {h}
         assert set(np.nonzero(ft[i])[0].tolist()) == tails
         assert set(np.nonzero(fh[i])[0].tolist()) == heads
-    # repeated evaluations are deterministic, hit the cache, and a smaller
-    # request slices the cached masks instead of rebuilding
-    assert cl.evaluate("valid", 50) == cl.evaluate("valid", 50)
-    assert cl._filter_cache["valid"][0] == n
+    # repeated evaluations are deterministic; a smaller request gets its own
+    # (split, n_rows) entry sliced from the cached superset, so the cache
+    # never serves rows from a stale larger build
+    m = min(50, n - 1)
+    assert cl.evaluate("valid", m) == cl.evaluate("valid", m)
+    np.testing.assert_array_equal(cl._filter_cache[("valid", m)][0], ft_w[:m])
 
 
 # ------------------------------------------------------------- SPMD == host
