@@ -4,21 +4,91 @@ Prints per-benchmark tables, a final ``name,us_per_call,derived`` CSV, and a
 claim-validation summary (PASS/WARN per paper claim).  Full run takes tens of
 minutes on this single CPU core; set REPRO_BENCH_FAST=1 for a quick pass, or
 select suites with ``--only table3,roofline``.
+
+``--aggregate [DIR]`` instead collects every ``--json`` record the CI
+producers emitted into one schema-checked ``BENCH_summary.json``, and fails
+loudly (non-zero exit) when a producer silently wrote nothing — the failure
+mode where the "recorded perf trajectory" is quietly empty.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import sys
 import time
+
+# Every benchmark that records a JSON trajectory in CI: artifact file ->
+# (producer module, required "bench" tag).  tools/docs_lint.py checks each
+# artifact is referenced in EXPERIMENTS.md; CI uploads them all.
+JSON_PRODUCERS = {
+    "BENCH_cycle.json": ("fused_cycle", "fused_cycle"),
+    "BENCH_superstep.json": ("superstep", "superstep"),
+    "BENCH_codecs.json": ("codecs", "codecs"),
+    "BENCH_eval.json": ("eval_throughput", "eval_throughput"),
+    "BENCH_scale.json": ("scale_entities", "scale_entities"),
+}
+
+
+def aggregate(bench_dir: str) -> int:
+    """Merge all producer records into BENCH_summary.json; exit non-zero on
+    a missing/empty/mistagged record so CI can't silently lose coverage."""
+    records, errors = {}, []
+    for fname, (module, tag) in sorted(JSON_PRODUCERS.items()):
+        path = os.path.join(bench_dir, fname)
+        if not os.path.exists(path):
+            errors.append(f"{fname}: missing — benchmarks/{module}.py "
+                          f"produced no JSON record")
+            continue
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except ValueError as e:
+            errors.append(f"{fname}: unparseable JSON ({e})")
+            continue
+        if not isinstance(rec, dict) or rec.get("bench") != tag:
+            errors.append(f"{fname}: bad record — expected a dict with "
+                          f'bench == "{tag}", got '
+                          f"{rec.get('bench') if isinstance(rec, dict) else type(rec).__name__!r}")
+            continue
+        if not isinstance(rec.get("fast"), bool) or not rec.get("claims"):
+            errors.append(f"{fname}: schema violation — every record needs "
+                          f"a bool 'fast' and a non-empty 'claims' list")
+            continue
+        records[fname] = rec
+    claims = [c for rec in records.values() for c in rec["claims"]]
+    n_warn = sum("WARN" in c for c in claims)
+    summary = {
+        "records": records,
+        "claims": claims,
+        "claims_pass": len(claims) - n_warn,
+        "claims_total": len(claims),
+        "errors": errors,
+    }
+    out_path = os.path.join(bench_dir, "BENCH_summary.json")
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"aggregated {len(records)}/{len(JSON_PRODUCERS)} records -> "
+          f"{out_path} ({summary['claims_pass']}/{len(claims)} claims PASS)")
+    for e in errors:
+        print(f"  ERROR {e}", file=sys.stderr)
+    return 1 if errors else 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: kernels,engine,cycle,sstep,codecs,eval,"
-                         "table1,table2,table3,table4,table5,table6,fig2,"
-                         "sweep,q8,roofline")
+                         "scale,table1,table2,table3,table4,table5,table6,"
+                         "fig2,sweep,q8,roofline")
+    ap.add_argument("--aggregate", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="don't run suites; merge the BENCH_*.json records "
+                         "in DIR (default .) into BENCH_summary.json and "
+                         "fail if any producer wrote nothing")
     args = ap.parse_args()
+    if args.aggregate is not None:
+        sys.exit(aggregate(args.aggregate))
     only = set(args.only.split(",")) if args.only else None
 
     def want(name: str) -> bool:
@@ -68,6 +138,13 @@ def main() -> None:
         csv_rows += [(name, ms, f"{tps:.0f} triples/s")
                      for name, ms, tps, _ in rows]
         claims += eval_throughput.check_claims(rows, val_host, val_dev)
+
+    if want("scale"):
+        from benchmarks import scale_entities
+
+        rows = scale_entities.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += scale_entities.check_claims(rows)
 
     suites = [
         ("table1", "table1_compression"),

@@ -127,8 +127,25 @@ class WireCodec:
 
         The fused path the compiled engines apply; defaults to
         ``decode(encode(values))`` and must stay consistent with it.
+
+        The decoded rows are canonicalized through a value-preserving
+        ``where(x == 0, 0, x)`` select.  XLA:CPU freely contracts a
+        decoder's final multiply (int8's ``q * scale``) into whatever add
+        consumes it, as a true fma — straight through
+        ``jax.lax.optimization_barrier`` and simplifier-foldable
+        identities like ``+ 0.0`` — and whether that fires depends on
+        fusion decisions that vary with program structure, so the "same
+        wire bytes" could decode to values a ulp apart between the
+        unsharded and entity-sharded engines, breaking their
+        bitwise-equality contract.  A data-dependent select is opaque to
+        the algebraic simplifier and breaks the multiply->add adjacency
+        the contraction needs, so every consumer in every program sees the
+        exactly rounded multiply (with the side effect that a decoded
+        ``-0.0`` becomes ``+0.0``, uniformly across all engine and oracle
+        paths).
         """
-        return self.decode(self.encode(values))
+        out = self.decode(self.encode(values))
+        return jnp.where(out == 0.0, 0.0, out)
 
     # ----------------------------------------------------- ledger accounting
     def log_upload(self, ledger: CommLedger, k: int, dim: int, num_shared: int) -> None:

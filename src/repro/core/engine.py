@@ -50,8 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import eshard
 from repro.core.codecs import IdentityCodec, WireCodec
-from repro.core.sparsify import change_scores, sparsity_k
+from repro.core.sparsify import change_scores, sparsity_k, top_k_select
 from repro.kernels import ops as kernel_ops
 
 # --------------------------------------------------------------------------
@@ -114,7 +115,7 @@ def downstream_sign(
     Rows with zero priority are never selected (the paper's "fewer than K
     available" rule).
     """
-    _, sel = jax.lax.top_k(rank_key, k)
+    sel = top_k_select(rank_key, k)
     sign = jnp.zeros(pri.shape[0], jnp.int8).at[sel].set(1)
     return jnp.where(pri > 0, sign, 0)
 
@@ -154,6 +155,7 @@ def batched_sparse_round(
     codec: WireCodec,
     axis_name: Optional[str],
     res: Optional[jnp.ndarray] = None,  # (C_local, Ns_max, D) EF residuals
+    entity_axis: Optional[str] = None,
 ):
     """One sparse FedS round over padded batched client state.
 
@@ -164,6 +166,17 @@ def batched_sparse_round(
     value the next time it is selected; rows not uploaded this round keep
     their banked residual untouched.  Non-residual codecs pass ``res``
     through unchanged.
+
+    With ``entity_axis`` the ``(..., D)`` row buffers (``emb``, ``hist``,
+    ``res``) are this shard's ``(C, Ns_pad / n_shards, D)`` blocks of a
+    row-sharded slot axis, while the cheap per-slot vectors (``gid``,
+    ``valid``, ``jitter``) stay replicated at full ``(C, Ns_pad)`` width.
+    Change scoring and the Eq. 4 apply run on the local block only; the two
+    Top-K selections become per-shard ``top_k`` + one ``(K, score)``
+    candidate merge (:func:`repro.core.sparsify.top_k_select`); the Eq. 3
+    segment-sum runs redundantly per shard on the replicated merged uploads
+    so its f32 summation order — hence the result, bit for bit — matches
+    the unsharded round.
     """
     if codec.has_residual and res is None:
         raise ValueError(
@@ -171,44 +184,50 @@ def batched_sparse_round(
             "pass the (C, Ns_max, D) res buffer (CycleEngine/SuperstepEngine "
             "thread it through FederationState)"
         )
-    cl, ns, d = emb.shape
-    validf = valid.astype(emb.dtype)
+    ea = entity_axis
+    cl, ns_blk, d = emb.shape  # ns_blk == full Ns_max when unsharded
+    gid_blk = eshard.local_block(gid, ea, ns_blk)
+    valid_blk = eshard.local_block(valid, ea, ns_blk)
+    jitter_blk = eshard.local_block(jitter, ea, ns_blk)
+    validf = valid_blk.astype(emb.dtype)
     slot = jnp.arange(k_max)[None, :]
 
     # -- upstream Top-K (Eq. 1-2): one fused kernel call across all clients
     scores = change_scores(
-        emb.reshape(cl * ns, d), hist.reshape(cl * ns, d)
-    ).reshape(cl, ns)
-    scores = jnp.where(valid, scores, -jnp.inf)
-    _, up_idx = jax.lax.top_k(scores, k_max)  # (cl, k_max)
+        emb.reshape(cl * ns_blk, d), hist.reshape(cl * ns_blk, d)
+    ).reshape(cl, ns_blk)
+    scores = jnp.where(valid_blk, scores, -jnp.inf)
+    up_idx = top_k_select(scores, k_max, entity_axis=ea)  # (cl, k_max) global
     up_mask = (slot < k[:, None]) & jnp.take_along_axis(valid, up_idx, axis=1)
     up_maskf = up_mask.astype(emb.dtype)
 
-    uploaded = jax.vmap(lambda i, m: jnp.zeros((ns,), emb.dtype).at[i].add(m))(
-        up_idx, up_maskf
-    )  # (cl, ns) 0/1 — which of my rows went upstream this round
+    # (cl, ns_blk) 0/1 — which of my local rows went upstream this round
+    uploaded = eshard.scatter_add_vec(
+        jnp.zeros((cl, ns_blk), emb.dtype), up_idx, up_maskf, ea
+    )
     new_hist = jnp.where(uploaded[:, :, None] > 0, emb, hist)
 
-    vals = jnp.take_along_axis(emb, up_idx[:, :, None], axis=1)  # (cl, k_max, d)
+    vals = eshard.dist_take_rows(emb, up_idx, ea)  # (cl, k_max, d)
     if codec.has_residual:
         # error feedback: re-inject the banked residual before encoding, bank
         # the fresh encode error after.  Only uploaded rows participate.
-        res_sel = jnp.take_along_axis(res, up_idx[:, :, None], axis=1)
+        res_sel = eshard.dist_take_rows(res, up_idx, ea)
         corrected = vals + res_sel * up_maskf[:, :, None]
         vals = codec.roundtrip(corrected.reshape(-1, d)).reshape(cl, k_max, d)
         err_rows = (corrected - vals) * up_maskf[:, :, None]
-        err_full = jax.vmap(
-            lambda i, e: jnp.zeros((ns, d), emb.dtype).at[i].add(e)
-        )(up_idx, err_rows)
+        err_full = eshard.scatter_add_rows(
+            jnp.zeros((cl, ns_blk, d), emb.dtype), up_idx, err_rows, ea
+        )
         new_res = jnp.where(uploaded[:, :, None] > 0, err_full, res)
     else:
         vals = codec.roundtrip(vals.reshape(-1, d)).reshape(cl, k_max, d)
         new_res = res
     # this client's wire-coded uploads scattered back to row positions, for
     # the Eq. 3 own-contribution subtraction below
-    own_wire = jax.vmap(
-        lambda i, v, m: jnp.zeros((ns, d), emb.dtype).at[i].add(v * m[:, None])
-    )(up_idx, vals, up_maskf)
+    own_wire = eshard.scatter_add_rows(
+        jnp.zeros((cl, ns_blk, d), emb.dtype), up_idx,
+        vals * up_maskf[:, :, None], ea,
+    )
 
     # -- exchange: one all-gather of fixed-size buffers (no-op on host)
     up_gid = jnp.where(up_mask, jnp.take_along_axis(gid, up_idx, axis=1), num_global)
@@ -217,7 +236,9 @@ def batched_sparse_round(
         vals = jax.lax.all_gather(vals, axis_name).reshape(-1, k_max, d)
         up_maskf = jax.lax.all_gather(up_maskf, axis_name).reshape(-1, k_max)
 
-    # -- Eq. 3 over the global entity space (+1 padding segment)
+    # -- Eq. 3 over the global entity space (+1 padding segment); under
+    # entity sharding this runs redundantly per shard on replicated inputs,
+    # preserving the unsharded f32 summation order bit for bit
     agg, cnt = segment_aggregate(
         up_gid.reshape(-1),
         (vals * up_maskf[:, :, None]).reshape(-1, d),
@@ -226,19 +247,19 @@ def batched_sparse_round(
     )
 
     # -- personalized views: subtract the own wire-coded contribution
-    agg_rows = agg[gid] - own_wire
-    pri_rows = (cnt[gid] - uploaded) * validf
+    agg_rows = agg[gid_blk] - own_wire
+    pri_rows = (cnt[gid_blk] - uploaded) * validf
     # downstream leg crosses the wire too
-    agg_rows = codec.roundtrip(agg_rows.reshape(-1, d)).reshape(cl, ns, d)
+    agg_rows = codec.roundtrip(agg_rows.reshape(-1, d)).reshape(cl, ns_blk, d)
 
     # -- downstream Top-K by priority; jitter < 1 never reorders priorities
-    rank = jnp.where(valid, pri_rows + jitter, -1.0)
-    _, dn_idx = jax.lax.top_k(rank, k_max)
+    rank = jnp.where(valid_blk, pri_rows + jitter_blk, -1.0)
+    dn_idx = top_k_select(rank, k_max, entity_axis=ea)
     dn_mask = (slot < k[:, None]) & (
-        jnp.take_along_axis(pri_rows, dn_idx, axis=1) > 0
+        eshard.dist_take_vec(pri_rows, dn_idx, ea) > 0
     )
-    sign = jax.vmap(lambda i, m: jnp.zeros((ns,), jnp.int8).at[i].add(m))(
-        dn_idx, dn_mask.astype(jnp.int8)
+    sign = eshard.scatter_add_vec(
+        jnp.zeros((cl, ns_blk), jnp.int8), dn_idx, dn_mask.astype(jnp.int8), ea
     )
     down_count = dn_mask.sum(axis=1).astype(jnp.int32)
 
@@ -248,7 +269,7 @@ def batched_sparse_round(
         agg_rows.reshape(-1, d),
         pri_rows.reshape(-1),
         sign.reshape(-1),
-    ).reshape(cl, ns, d).astype(emb.dtype)
+    ).reshape(cl, ns_blk, d).astype(emb.dtype)
     if res is None:
         return new_emb, new_hist, down_count
     return new_emb, new_hist, down_count, new_res
@@ -261,26 +282,37 @@ def batched_sync_round(
     *,
     num_global: int,
     axis_name: Optional[str],
+    entity_axis: Optional[str] = None,
 ):
     """Intermittent synchronization (§III-E): FedE mean over owning clients.
 
     Returns (synchronized rows, refreshed history).  History is the PRE-sync
     rows — the protocol refreshes it with what was uploaded, matching
     :func:`repro.core.protocol.full_upload`.
+
+    With ``entity_axis``, ``emb`` is this shard's slot block; the blocks are
+    all-gathered once and the Eq. 3-style segment mean computed redundantly
+    per shard in the unsharded summation order (a per-shard partial sum +
+    f32 psum would reorder the additions and break the bitwise contract),
+    then each shard keeps its local slice of the synchronized rows.
     """
-    cl, ns, d = emb.shape
+    blk = emb.shape[1]
+    emb_full = eshard.all_blocks(emb, entity_axis)
+    cl, ns, d = emb_full.shape
     validf = valid.astype(emb.dtype)
     ids = jnp.where(valid, gid, num_global).reshape(-1)
     total, cnt = segment_aggregate(
-        ids, (emb * validf[:, :, None]).reshape(-1, d), validf.reshape(-1),
+        ids, (emb_full * validf[:, :, None]).reshape(-1, d), validf.reshape(-1),
         num_global + 1,
     )
     if axis_name is not None:
         total = jax.lax.psum(total, axis_name)
         cnt = jax.lax.psum(cnt, axis_name)
     mean = total / jnp.maximum(cnt, 1.0)[:, None]
-    new_emb = jnp.where(valid[:, :, None], mean[gid], emb)
-    return new_emb, emb
+    new_emb = jnp.where(valid[:, :, None], mean[gid], emb_full)
+    if entity_axis is None:
+        return new_emb, emb
+    return eshard.local_block(new_emb, entity_axis, blk), emb
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,206 @@
+"""Entity-axis sharding primitives (the ``entities`` mesh axis).
+
+The federation engines historically assumed every padded row-major table —
+``(C, E_max, D)`` entity embeddings, the matching Adam moments, and the
+``(C, Ns_max, D)`` upload history / error-feedback residuals — fits on one
+device.  This module provides the cross-shard building blocks that let the
+same programs run with those tables block-sharded along their row axis over
+a second mesh axis (``launch/mesh.py:make_federation_mesh(...,
+entity_devices=n)``), while staying **bitwise identical** to the unsharded
+programs:
+
+* :func:`merged_top_k` — per-shard ``lax.top_k`` + one ``all_gather`` of the
+  ``(K, score)`` candidates + a two-key ``lax.sort`` merge.  ``lax.top_k``
+  breaks score ties toward the lower index; sorting the merged candidates on
+  ``(-score, global_index)`` reproduces exactly that order, so the selected
+  index sequence equals a global ``top_k`` bit for bit (scores are
+  canonicalized with ``+ 0.0`` so a stray ``-0.0`` cannot invert a tie that
+  ``top_k``'s ``>`` comparison would treat as equal).
+* :func:`dist_take_rows` / :func:`dist_take_vec` — exact distributed gather:
+  every shard contributes its local candidate rows, one ``all_gather``, then
+  a select-by-owner ``take``.  No floating-point reduction is involved (a
+  masked ``psum`` could turn ``-0.0`` into ``+0.0``), so the gathered rows
+  are the unsharded rows, not merely numerically close.
+* :func:`own_local` / :func:`scatter_rows` / :func:`scatter_add_rows` —
+  ownership tests and drop-mode local scatters.  A shard scatters exactly
+  the contributions whose destination row it owns, in the order they appear
+  in the full index list, so per-row accumulation order matches the
+  unsharded scatter.
+
+Everything here is shape-polymorphic over a leading batch axis via ``vmap``
+(collectives batch correctly under ``vmap`` inside ``shard_map``); callers
+in :mod:`repro.core.engine` / :mod:`repro.core.state` /
+:mod:`repro.core.evaluation` pass ``entity_axis=None`` to stay on the
+unsharded fast path, which is compiled out entirely.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def axis_size(axis_name: str) -> int:
+    """Static mesh-axis size inside shard_map, on either jax generation.
+
+    (Defined here rather than imported from :mod:`repro.core.engine` —
+    ``engine`` imports :mod:`repro.core.sparsify`, which imports this
+    module for the shard-aware Top-K.)
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # constant-folded on jax <= 0.4.x
+
+
+def shard_offset(axis_name: str, block: int) -> jnp.ndarray:
+    """First global row index of this shard's block."""
+    return jax.lax.axis_index(axis_name) * block
+
+
+def pad_rows(n: int, shards: int, multiple: int = 1) -> int:
+    """Round ``n`` up so it splits into ``shards`` equal blocks, each a
+    multiple of ``multiple`` rows (``32`` aligns eval filter words)."""
+    unit = shards * multiple
+    return max(unit, -(-int(n) // unit) * unit)
+
+
+def own_local(idx: jnp.ndarray, base: jnp.ndarray, block: int):
+    """Ownership mask + local index for global row ids against one block.
+
+    Returns ``(own (bool), local (int32))``; ``local`` is only meaningful
+    where ``own`` — callers route non-owned ids to a drop sentinel.
+    """
+    loc = idx.astype(jnp.int32) - base
+    own = (loc >= 0) & (loc < block)
+    return own, loc
+
+
+def merged_top_k(
+    scores: jnp.ndarray,  # (C, n_blk) this shard's score block
+    k: int,
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Global ``lax.top_k`` indices over row-sharded scores, bitwise.
+
+    With ``axis_name=None`` this IS ``lax.top_k`` over the full scores.
+    Sharded: each shard's local top-``min(k, n_blk)`` candidates (their
+    global indices and scores) are all-gathered and merged with a stable
+    two-key sort on ``(-score, global_index)`` — every global top-``k`` row
+    is somewhere in the candidate pool, and the sort reproduces ``top_k``'s
+    descending-score / ascending-index order exactly.
+    """
+    if axis_name is None:
+        _, idx = jax.lax.top_k(scores, k)
+        return idx.astype(jnp.int32)
+    n_blk = scores.shape[-1]
+    base = shard_offset(axis_name, n_blk)
+    k_loc = min(k, n_blk)
+    v, i = jax.lax.top_k(scores + 0.0, k_loc)  # +0.0: canonicalize -0.0
+    gi = i.astype(jnp.int32) + base
+    v = jax.lax.all_gather(v, axis_name, axis=-1, tiled=True)
+    gi = jax.lax.all_gather(gi, axis_name, axis=-1, tiled=True)
+    _, idx = jax.lax.sort((-v, gi), num_keys=2, dimension=-1)
+    return jax.lax.slice_in_dim(idx, 0, k, axis=-1)
+
+
+def _take_rows_one(table: jnp.ndarray, idx: jnp.ndarray, axis_name: str):
+    """(n_blk, ...) block + (m,) global ids -> (m, ...) exact rows."""
+    n_blk = table.shape[0]
+    shards = axis_size(axis_name)
+    base = shard_offset(axis_name, n_blk)
+    own, loc = own_local(idx, base, n_blk)
+    cand = jnp.take(table, jnp.clip(loc, 0, n_blk - 1), axis=0)
+    gathered = jax.lax.all_gather(cand, axis_name)  # (S, m, ...)
+    owner = jnp.clip(idx.astype(jnp.int32) // n_blk, 0, shards - 1)
+    owner = owner.reshape(owner.shape + (1,) * (cand.ndim - 1))
+    out = jnp.take_along_axis(jnp.moveaxis(gathered, 0, 1), owner[:, None], axis=1)
+    return out[:, 0]
+
+
+def dist_take_rows(
+    table: jnp.ndarray,  # (C, n_blk, D) row-sharded blocks
+    idx: jnp.ndarray,  # (C, m) global row ids (out-of-range ids yield junk
+    #                    rows the caller must mask, like a clipped take)
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Exact batched distributed row gather; ``== take_along_axis`` unsharded."""
+    if axis_name is None:
+        return jnp.take_along_axis(table, idx[:, :, None], axis=1)
+    return jax.vmap(functools.partial(_take_rows_one, axis_name=axis_name))(
+        table, idx
+    )
+
+
+def dist_take_vec(
+    vec: jnp.ndarray,  # (C, n_blk) row-sharded scalar-per-row blocks
+    idx: jnp.ndarray,  # (C, m) global row ids
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Exact batched distributed gather of per-row scalars."""
+    if axis_name is None:
+        return jnp.take_along_axis(vec, idx, axis=1)
+    out = jax.vmap(functools.partial(_take_rows_one, axis_name=axis_name))(
+        vec[:, :, None], idx
+    )
+    return out[..., 0]
+
+
+def _local_idx(idx: jnp.ndarray, axis_name: Optional[str], block: int):
+    """Global ids -> local ids with a drop sentinel for non-owned rows."""
+    if axis_name is None:
+        return idx
+    base = shard_offset(axis_name, block)
+    own, loc = own_local(idx, base, block)
+    return jnp.where(own, loc, block)
+
+
+def scatter_rows(
+    table: jnp.ndarray,  # (C, n_blk, D) row-sharded blocks
+    idx: jnp.ndarray,  # (C, m) global row ids (sentinel >= n_total drops)
+    rows: jnp.ndarray,  # (C, m, D)
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Set rows by global id; each shard writes only the rows it owns."""
+    block = table.shape[1]
+    loc = _local_idx(idx, axis_name, block)
+    return jax.vmap(lambda t, i, r: t.at[i].set(r, mode="drop"))(table, loc, rows)
+
+
+def scatter_add_rows(
+    table: jnp.ndarray,  # (C, n_blk, D) row-sharded blocks
+    idx: jnp.ndarray,  # (C, m) global row ids
+    rows: jnp.ndarray,  # (C, m, D)
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Add rows by global id, owned rows only, in full-list order."""
+    block = table.shape[1]
+    loc = _local_idx(idx, axis_name, block)
+    return jax.vmap(lambda t, i, r: t.at[i].add(r, mode="drop"))(table, loc, rows)
+
+
+def scatter_add_vec(
+    vec: jnp.ndarray,  # (C, n_blk) row-sharded per-row scalars
+    idx: jnp.ndarray,  # (C, m) global row ids
+    vals: jnp.ndarray,  # (C, m)
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    block = vec.shape[1]
+    loc = _local_idx(idx, axis_name, block)
+    return jax.vmap(lambda t, i, v: t.at[i].add(v, mode="drop"))(vec, loc, vals)
+
+
+def local_block(full: jnp.ndarray, axis_name: Optional[str], block: int, axis: int = 1):
+    """Slice this shard's block out of a replicated full-width array."""
+    if axis_name is None:
+        return full
+    base = shard_offset(axis_name, block)
+    return jax.lax.dynamic_slice_in_dim(full, base, block, axis=axis)
+
+
+def all_blocks(blk: jnp.ndarray, axis_name: Optional[str], axis: int = 1):
+    """Concatenate every shard's block back into the full-width array."""
+    if axis_name is None:
+        return blk
+    return jax.lax.all_gather(blk, axis_name, axis=axis, tiled=True)

@@ -20,8 +20,13 @@ layout the engines already share:
   chunked via ``lax.scan`` over the scoring ops of
   :mod:`repro.kernels.ops` so the ``(C, B_max, E_max)`` score tensor is
   never materialized, applies the packed filters with bitwise ops, and
-  reduces filtered ranks to a per-client ``(mrr, hits@10, count)`` block on
-  device — the host reads back only ``(C, 3)`` scalars per boundary.
+  reduces filtered ranks to a per-client ``(mrr, hits@1, hits@3, hits@10,
+  count)`` block on device — the host reads back only
+  ``(C, EVAL_BLOCK_COLS)`` scalars per boundary.  Under an entity-sharded
+  2-D mesh (:func:`repro.launch.mesh.make_federation_mesh` with
+  ``entity_devices > 1``) each shard scans only its own candidate block and
+  the integer beat counts ``psum`` exactly, so ranks stay bitwise equal to
+  the unsharded scan.
 
 Exactness contract: on the default (ref) scoring dispatch the integer
 filtered ranks (both head and tail legs) are **exactly equal** to the
@@ -55,14 +60,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import eshard
 from repro.data.partition import ClientData
 from repro.kernels import ops as kernel_ops
 
 #: Bits per packed filter word.
 WORD_BITS = 32
 
-#: Hits@K cutoff used by the paper's protocol.
+#: Hits@K cutoffs in the metric block, lowest first.  The paper's protocol
+#: reports Hits@10; @1/@3 ride along in the same on-device reduction.
+HITS_LEVELS = (1, 3, 10)
+
+#: Hits@K cutoff used by the paper's headline protocol.
 HITS_AT = 10
+
+#: Columns of the per-client metric block: [mrr, hits@1, hits@3, hits@10,
+#: count] — see :func:`repro.federated.metrics.aggregate_eval_block`.
+EVAL_BLOCK_COLS = 2 + len(HITS_LEVELS)
 
 
 # ------------------------------------------------------------- filter packing
@@ -187,7 +201,8 @@ class BatchedEvaluator:
     with a 1-D client mesh the same core runs under ``shard_map`` (the
     reduction is fully per-client, so no collective is needed).
 
-    ``eval_core(params, bank) -> (C, 3)`` is the pure program body — the
+    ``eval_core(params, bank) -> (C, EVAL_BLOCK_COLS)`` is the pure program
+    body — the
     :class:`repro.core.state.SuperstepEngine` inlines it as the ``"eval"``
     plan segment of a scanned superstep, which is what makes "one host
     dispatch per superstep" true through eval boundaries.
@@ -206,6 +221,7 @@ class BatchedEvaluator:
         known: Optional[Sequence[dict]] = None,
         mesh=None,
         axis_name: str = "clients",
+        entity_axis: Optional[str] = None,
     ):
         self.method = method
         self.gamma = float(gamma)
@@ -222,7 +238,22 @@ class BatchedEvaluator:
         # candidate (32x the bandwidth of the packed representation).
         chunk = max(1, min(int(chunk), self.e_max))
         self.chunk = -(-chunk // WORD_BITS) * WORD_BITS
-        self.e_pad = -(-self.e_max // self.chunk) * self.chunk
+        self._eaxis = entity_axis if mesh is not None else None
+        if self._eaxis is not None and self._eaxis not in dict(mesh.shape):
+            raise ValueError(
+                f"entity_axis {self._eaxis!r} not in mesh axes {tuple(mesh.shape)}"
+            )
+        n_e = int(dict(mesh.shape)[self._eaxis]) if self._eaxis else 1
+        self.n_eshards = n_e
+        if self._eaxis is not None:
+            # entity-sharded: the candidate axis must mirror the engine's
+            # padded state layout (pad_rows(e_max, n_e, 32)) so the entity
+            # table blocks AND the packed filter word axis split evenly;
+            # each shard then scans its own block span, chunk-padded
+            # locally, and the integer beat counts psum exactly.
+            self.e_pad = eshard.pad_rows(self.e_max, n_e, WORD_BITS)
+        else:
+            self.e_pad = -(-self.e_max // self.chunk) * self.chunk
         self.banks: Dict[str, EvalBank] = {
             s: build_eval_bank(datas, s, max_triples, self.e_max, known=known,
                                num_words=self.e_pad // WORD_BITS)
@@ -237,27 +268,67 @@ class BatchedEvaluator:
             from repro.core.engine import shard_map  # jax-version shim
 
             p = jax.sharding.PartitionSpec(axis_name)
+            pp = self._params_spec(axis_name)
+            pb = self._bank_spec(axis_name)
             self._eval = jax.jit(shard_map(
-                self.eval_core, mesh=mesh, in_specs=(p, p), out_specs=p,
+                self.eval_core, mesh=mesh, in_specs=(pp, pb), out_specs=p,
             ))
             self._ranks = jax.jit(shard_map(
-                self._rank_core, mesh=mesh, in_specs=(p, p), out_specs=(p, p),
+                self._rank_core, mesh=mesh, in_specs=(pp, pb), out_specs=(p, p),
             ))
+
+    # --------------------------------------------------------------- specs
+    def _params_spec(self, axis_name: str):
+        """PartitionSpec pytree for the padded params dict under the mesh."""
+        p = jax.sharding.PartitionSpec(axis_name)
+        if self._eaxis is None:
+            return p
+        return {
+            "entity": jax.sharding.PartitionSpec(axis_name, self._eaxis),
+            "relation": p,
+        }
+
+    def _bank_spec(self, axis_name: str):
+        """:class:`EvalBank` spec — filter words shard on the word axis."""
+        p = jax.sharding.PartitionSpec(axis_name)
+        if self._eaxis is None:
+            return p
+        pw = jax.sharding.PartitionSpec(axis_name, None, self._eaxis)
+        return EvalBank(triples=p, count=p, ft_words=pw, fh_words=pw, num_ent=p)
 
     # ------------------------------------------------------- program bodies
     def _make_rank_core(self):
         method, gamma = self.method, self.gamma
         chunk, e_pad = self.chunk, self.e_pad
+        eaxis = self._eaxis
 
         def rank_core(params, bank: EvalBank):
-            """Filtered ranks ``(rank_t, rank_h)``, each (C, B_max) int32."""
-            ent = params["entity"]  # (C, E_max, D)
-            c_n, e_n, _d = ent.shape
-            ent_p = jnp.pad(ent, ((0, 0), (0, e_pad - e_n), (0, 0)))
+            """Filtered ranks ``(rank_t, rank_h)``, each (C, B_max) int32.
+
+            Entity-sharded (``eaxis`` set): ``params['entity']`` and the
+            bank's packed filter words arrive as per-shard blocks; each
+            shard scans its own chunk-padded candidate span with global
+            candidate ids ``base + local``, masks candidates past its block
+            edge, and the integer beat counts ``psum`` exactly — rank
+            output is bitwise identical to the unsharded scan because only
+            whole-boolean counts cross the shard boundary.
+            """
+            ent = params["entity"]  # (C, E_blk, D) block (full when unsharded)
+            c_n, e_blk, _d = ent.shape
+            if eaxis is None:
+                span, base = e_pad, 0
+            else:
+                span = -(-e_blk // chunk) * chunk
+                base = eshard.shard_offset(eaxis, e_blk)
+            ent_p = jnp.pad(ent, ((0, 0), (0, span - e_blk), (0, 0)))
+            ftw, fhw = bank.ft_words, bank.fh_words
+            if span > e_blk and eaxis is not None:
+                pw = ((0, 0), (0, 0), (0, (span - e_blk) // WORD_BITS))
+                ftw, fhw = jnp.pad(ftw, pw), jnp.pad(fhw, pw)
             tri = bank.triples
             h, r, t = tri[..., 0], tri[..., 1], tri[..., 2]
-            h_e = jnp.take_along_axis(ent, h[:, :, None], axis=1)  # (C,B,D)
-            t_e = jnp.take_along_axis(ent, t[:, :, None], axis=1)
+            h_e = eshard.dist_take_rows(ent, h, eaxis)  # (C, B, D)
+            t_e = eshard.dist_take_rows(ent, t, eaxis)
             r_e = jnp.take_along_axis(params["relation"], r[:, :, None], axis=1)
             # the gold triple's score — shared by both legs; the gold
             # CANDIDATE is excluded from the counts below, so rank equality
@@ -276,16 +347,21 @@ class BatchedEvaluator:
 
             def step(carry, e0):
                 cnt_t, cnt_h = carry
-                cand = e0 + jnp.arange(chunk, dtype=jnp.int32)  # (Ec,)
+                cand_loc = e0 + jnp.arange(chunk, dtype=jnp.int32)  # (Ec,)
+                cand = base + cand_loc  # global candidate ids
                 ce = jax.lax.dynamic_slice_in_dim(ent_p, e0, chunk, axis=1)
                 # both legs' candidate scores, (C, B, Ec) tiles
                 ts, hs = kernel_ops.kge_cand_scores(
                     h_e, r_e, t_e, ce, method, gamma
                 )
                 w0 = e0 // WORD_BITS
-                fb_t = unpack_chunk(bank.ft_words, w0)
-                fb_h = unpack_chunk(bank.fh_words, w0)
+                fb_t = unpack_chunk(ftw, w0)
+                fb_h = unpack_chunk(fhw, w0)
                 ok = cand[None, :] < bank.num_ent[:, None]  # (C, Ec)
+                if eaxis is not None:
+                    # span-padding candidates would alias the NEXT shard's
+                    # global ids — mask past this shard's block edge
+                    ok = ok & (cand_loc[None, :] < e_blk)
                 beat_t = (
                     (ts > gold[:, :, None])
                     & (fb_t == 0)
@@ -305,8 +381,11 @@ class BatchedEvaluator:
 
             (cnt_t, cnt_h), _ = jax.lax.scan(
                 step, (zero, zero),
-                jnp.arange(0, e_pad, chunk, dtype=jnp.int32),
+                jnp.arange(0, span, chunk, dtype=jnp.int32),
             )
+            if eaxis is not None:
+                cnt_t = jax.lax.psum(cnt_t, eaxis)
+                cnt_h = jax.lax.psum(cnt_h, eaxis)
             return cnt_t + 1, cnt_h + 1
 
         return rank_core
@@ -315,22 +394,28 @@ class BatchedEvaluator:
         rank_core = self._make_rank_core()
 
         def eval_core(params, bank: EvalBank):
-            """(C, 3) per-client ``[mrr, hits@10, count]`` scalar block."""
+            """(C, 5) per-client ``[mrr, hits@1, hits@3, hits@10, count]``
+            scalar block (column order fixed by :data:`HITS_LEVELS`)."""
             rank_t, rank_h = rank_core(params, bank)
             b_max = rank_t.shape[1]
             valid = jnp.arange(b_max)[None, :] < bank.count[:, None]
             rt = rank_t.astype(jnp.float32)
             rh = rank_h.astype(jnp.float32)
             recip = jnp.where(valid, 1.0 / rt + 1.0 / rh, 0.0).sum(axis=1)
-            hits = jnp.where(
-                valid,
-                (rank_t <= HITS_AT).astype(jnp.float32)
-                + (rank_h <= HITS_AT).astype(jnp.float32),
-                0.0,
-            ).sum(axis=1)
+            hits = [
+                jnp.where(
+                    valid,
+                    (rank_t <= lvl).astype(jnp.float32)
+                    + (rank_h <= lvl).astype(jnp.float32),
+                    0.0,
+                ).sum(axis=1)
+                for lvl in HITS_LEVELS
+            ]
             denom = jnp.maximum(2.0 * bank.count.astype(jnp.float32), 1.0)
             return jnp.stack(
-                [recip / denom, hits / denom, bank.count.astype(jnp.float32)],
+                [recip / denom]
+                + [h / denom for h in hits]
+                + [bank.count.astype(jnp.float32)],
                 axis=1,
             )
 
@@ -338,13 +423,13 @@ class BatchedEvaluator:
 
     # --------------------------------------------------------------- driving
     def evaluate(self, params: dict, split: str) -> np.ndarray:
-        """Run the compiled program; returns the (C, 3) block as numpy —
-        the ONLY host transfer an eval boundary performs."""
+        """Run the compiled program; returns the (C, EVAL_BLOCK_COLS) block
+        as numpy — the ONLY host transfer an eval boundary performs."""
         return np.asarray(self._eval(params, self.banks[split]))
 
     def ranks(self, params: dict, split: str) -> tuple[np.ndarray, np.ndarray]:
         """Integer filtered ranks (tail leg, head leg), each (C, B_max) —
         padded rows carry garbage; mask with ``bank.count``.  Test/debug
-        path: production reads only the (C, 3) block of :meth:`evaluate`."""
+        path: production reads only the block of :meth:`evaluate`."""
         rt, rh = self._ranks(params, self.banks[split])
         return np.asarray(rt), np.asarray(rh)

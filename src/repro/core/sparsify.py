@@ -10,9 +10,12 @@ TPU shard_map collective both build on them.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import eshard
 from repro.kernels import ops as kernel_ops
 
 
@@ -37,12 +40,28 @@ def change_scores(
     return 1.0 - num / jnp.maximum(den, 1e-12)
 
 
+def top_k_select(
+    scores: jnp.ndarray, k: int, *, entity_axis: Optional[str] = None
+) -> jnp.ndarray:
+    """THE Top-K selection used by every engine (upload, download, and the
+    ranked-key/sign variants): ``lax.top_k`` index order — descending score,
+    ties toward the lower index — over the trailing axis.
+
+    ``scores`` may have leading batch axes.  With ``entity_axis`` set the
+    trailing axis is this shard's block of a row-sharded score vector and
+    the returned indices are GLOBAL row ids, merged across shards via
+    :func:`repro.core.eshard.merged_top_k` — bitwise identical to a global
+    ``top_k`` of the concatenated scores.
+    """
+    return eshard.merged_top_k(scores, k, entity_axis)
+
+
 def select_top_k(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Top-K entity indices by change score + 0/1 sign vector.
 
     Returns (indices (k,) int32 in descending-score order, sign (N,) int8).
     """
-    _, idx = jax.lax.top_k(scores, k)
+    idx = top_k_select(scores, k)
     sign = jnp.zeros(scores.shape[0], dtype=jnp.int8).at[idx].set(1)
     return idx.astype(jnp.int32), sign
 

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import eshard
 from repro.core.codecs import IdentityCodec, WireCodec
 from repro.core.engine import (
     batched_sparse_round,
@@ -56,6 +57,7 @@ from repro.core.engine import (
     build_padded_views,
     shard_map,
 )
+from repro.core.evaluation import EvalBank
 from repro.core.sync import compress_schedule
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_score_fn, loss_from_scores, per_sample_losses
@@ -126,6 +128,7 @@ class CycleEngine:
         codec: Optional[WireCodec] = None,
         mesh=None,
         axis_name: str = "clients",
+        entity_axis: Optional[str] = None,
     ):
         self.views = list(views)
         self.num_global = int(num_global_entities)
@@ -160,10 +163,32 @@ class CycleEngine:
             self.views, self.num_global, sparsity_p
         )
 
+        # entity-axis sharding: every row-major table — entity embeddings and
+        # Adam moments along E, upload history / EF residuals along Ns — is
+        # block-sharded over the mesh's second axis.  Row counts pad up so
+        # the blocks split evenly (E additionally to whole 32-entity filter
+        # words, so the eval word axis shards evenly too); the padding slots
+        # are invalid/zero rows the round and trainer masks already ignore.
+        self._eaxis = entity_axis if mesh is not None else None
+        if self._eaxis is not None and self._eaxis not in dict(mesh.shape):
+            raise ValueError(
+                f"entity_axis {self._eaxis!r} not in mesh axes {tuple(mesh.shape)}"
+            )
+        n_e = int(dict(mesh.shape)[self._eaxis]) if self._eaxis else 1
+        self.n_eshards = n_e
+        self.ns_pad = eshard.pad_rows(self.ns_max, n_e) if n_e > 1 else self.ns_max
+        if self.ns_pad > self.ns_max:
+            pad = self.ns_pad - self.ns_max
+            gid = np.pad(gid, ((0, 0), (0, pad)), constant_values=self.num_global)
+            valid = np.pad(valid, ((0, 0), (0, pad)))
+
         self.num_entities = np.asarray(
             [c.model.num_entities for c in clients], np.int32
         )
         self.e_max = int(self.num_entities.max())
+        self.e_pad = (
+            eshard.pad_rows(self.e_max, n_e, 32) if n_e > 1 else self.e_max
+        )
         triples, counts = stack_padded_triples([c.data.train for c in clients])
         batch_sizes = np.asarray([c.loader.batch_size for c in clients], np.int32)
         steps = np.asarray([c.loader.batches_per_epoch for c in clients], np.int32)
@@ -185,8 +210,8 @@ class CycleEngine:
         # ``where``s — are dead weight, so they are compiled out entirely.
         self._uniform_steps = bool(step_mask.all())
         self._uniform_batches = bool((sample_w == 1.0).all())
-        gather_idx = np.zeros((self.num_clients, self.ns_max), np.int32)
-        scatter_idx = np.full((self.num_clients, self.ns_max), self.e_max, np.int32)
+        gather_idx = np.zeros((self.num_clients, self.ns_pad), np.int32)
+        scatter_idx = np.full((self.num_clients, self.ns_pad), self.e_pad, np.int32)
         for c, v in enumerate(self.views):
             gather_idx[c, : v.num_shared] = v.shared_local
             scatter_idx[c, : v.num_shared] = v.shared_local
@@ -238,38 +263,71 @@ class CycleEngine:
             self._fused_sparse = jax.jit(fused_sparse, donate_argnums=(0,))
             self._fused_sync = jax.jit(fused_sync, donate_argnums=(0,))
         else:
-            if self.num_clients % mesh.devices.size != 0:
+            n_c = int(dict(mesh.shape)[axis_name])
+            if self.num_clients % n_c != 0:
                 raise ValueError(
                     f"{self.num_clients} clients not divisible by "
-                    f"{mesh.devices.size} mesh devices"
+                    f"{n_c} client-axis mesh devices"
                 )
+            pa = self._arrays_spec()  # StateArrays-shaped (or plain prefix)
             p = jax.sharding.PartitionSpec(axis_name)
             r = jax.sharding.PartitionSpec()
             self._train = jax.jit(shard_map(
-                train_core, mesh=mesh, in_specs=(p, r, r, p), out_specs=(p, p, p),
+                train_core, mesh=mesh, in_specs=(pa, r, r, p), out_specs=(pa, p, p),
             ), donate_argnums=(0,))
             self._comm_sparse = jax.jit(shard_map(
-                comm_sparse, mesh=mesh, in_specs=(p, p, p), out_specs=(p, p),
+                comm_sparse, mesh=mesh, in_specs=(pa, p, p), out_specs=(pa, p),
             ), donate_argnums=(0,))
             self._comm_sync = jax.jit(shard_map(
-                comm_sync, mesh=mesh, in_specs=(p, p), out_specs=(p, p),
+                comm_sync, mesh=mesh, in_specs=(pa, p), out_specs=(pa, p),
             ), donate_argnums=(0,))
             self._fused_sparse = jax.jit(shard_map(
-                fused_sparse, mesh=mesh, in_specs=(p, r, r, p),
-                out_specs=(p, p, p),
+                fused_sparse, mesh=mesh, in_specs=(pa, r, r, p),
+                out_specs=(pa, p, p),
             ), donate_argnums=(0,))
             self._fused_sync = jax.jit(shard_map(
-                fused_sync, mesh=mesh, in_specs=(p, r, r, p),
-                out_specs=(p, p, p),
+                fused_sync, mesh=mesh, in_specs=(pa, r, r, p),
+                out_specs=(pa, p, p),
             ), donate_argnums=(0,))
+
+    def _arrays_spec(self):
+        """PartitionSpec pytree for :class:`StateArrays` under the mesh.
+
+        Client-only sharding keeps the historical single-spec prefix; with
+        an entity axis the row-sharded leaves (entity table + its Adam
+        moments, history, residuals) get the 2-D ``(clients, entities)``
+        spec while relation tables and step counts stay client-only.
+        """
+        p = jax.sharding.PartitionSpec(self._axis)
+        if self._eaxis is None:
+            return p
+        pe = jax.sharding.PartitionSpec(self._axis, self._eaxis)
+        ent_like = {"entity": pe, "relation": p}
+        return StateArrays(
+            params=ent_like,
+            opt=AdamState(step=p, mu=dict(ent_like), nu=dict(ent_like)),
+            hist=pe,
+            res=pe,
+        )
+
+    def _bank_spec(self):
+        """PartitionSpec pytree for :class:`EvalBank` under the mesh —
+        packed filter words row-shard on the word axis (32 rows per word,
+        and every entity block is 32-aligned, so the split is exact)."""
+        p = jax.sharding.PartitionSpec(self._axis)
+        if self._eaxis is None:
+            return p
+        pw = jax.sharding.PartitionSpec(self._axis, None, self._eaxis)
+        return EvalBank(triples=p, count=p, ft_words=pw, fh_words=pw, num_ent=p)
 
     # ------------------------------------------------------- program bodies
     def _make_train_core(self):
         scan_len, b_max, n_neg = self.scan_len, self.b_max, self.num_negatives
         method, gamma, lr, temp = self.method, self.gamma, self.lr, self.temp
-        ns_max = self.ns_max
+        ns_max, ns_pad = self.ns_max, self.ns_pad
         uniform_steps = self._uniform_steps
         uniform_batches = self._uniform_batches
+        eaxis, n_eshards = self._eaxis, self.n_eshards
 
         def sample_one(cid, tri, t_c, e_c, kb):
             """Pre-sample the whole cycle's batches for one client on device."""
@@ -321,7 +379,6 @@ class CycleEngine:
                 mu=jax.tree.map(flat, opt.mu),
                 nu=jax.tree.map(flat, opt.nu),
             )
-            eoff = jnp.arange(c_n, dtype=jnp.int32) * e_m
             roff = jnp.arange(c_n, dtype=jnp.int32) * r_n
             # objective = sum over clients of each client's (weighted) mean
             # loss — cross-client gradients are disjoint, so one backward
@@ -331,15 +388,47 @@ class CycleEngine:
             else:
                 wn = s_w / jnp.maximum(s_w.sum(axis=1, keepdims=True), 1.0)
 
+            # client id of every row of the flattened [h; t; neg_t; neg_h]
+            # gather list — the entity-sharded gather/scatter keys on
+            # (client, entity) pairs instead of pre-folded flat indices
+            cid_rows = jnp.concatenate(
+                [jnp.repeat(jnp.arange(c_n, dtype=jnp.int32), b_max)] * 2
+                + [jnp.repeat(jnp.arange(c_n, dtype=jnp.int32), b_max * n_neg)] * 2
+            )
+
+            def gather_rows(table, e_idx):
+                """rows ``table[c * E + e]`` with E row-sharded; exact."""
+                if eaxis is None:
+                    return table[cid_rows * e_m + e_idx]
+                base = jax.lax.axis_index(eaxis) * e_m  # e_m == local block
+                loc = jnp.clip(e_idx - base, 0, e_m - 1)
+                cand = table[cid_rows * e_m + loc]
+                g = jax.lax.all_gather(cand, eaxis)  # (S, M, d)
+                owner = jnp.clip(e_idx // e_m, 0, n_eshards - 1)
+                out = jnp.take_along_axis(
+                    jnp.moveaxis(g, 0, 1), owner[:, None, None], axis=1
+                )
+                return out[:, 0]
+
+            def scatter_grads(table, e_idx, g_rows):
+                """Drop-mode scatter-add of owned contributions, full-list
+                order — per-row accumulation order matches unsharded."""
+                if eaxis is None:
+                    return jnp.zeros_like(table).at[cid_rows * e_m + e_idx].add(g_rows)
+                base = jax.lax.axis_index(eaxis) * e_m
+                loc = e_idx - base
+                own = (loc >= 0) & (loc < e_m)
+                flat = jnp.where(own, cid_rows * e_m + loc, c_n * e_m)
+                return jnp.zeros_like(table).at[flat].add(g_rows, mode="drop")
+
             def step_fn(carry, x):
                 params_f, opt_f = carry
                 p, nt, nh = x  # (C, B, 3), (C, B, N)
-                h = (p[:, :, 0] + eoff[:, None]).reshape(-1)
-                t = (p[:, :, 2] + eoff[:, None]).reshape(-1)
                 r = (p[:, :, 1] + roff[:, None]).reshape(-1)
-                ntf = (nt + eoff[:, None, None]).reshape(-1)
-                nhf = (nh + eoff[:, None, None]).reshape(-1)
-                idx = jnp.concatenate([h, t, ntf, nhf])
+                e_idx = jnp.concatenate([
+                    p[:, :, 0].reshape(-1), p[:, :, 2].reshape(-1),
+                    nt.reshape(-1), nh.reshape(-1),
+                ])
 
                 def loss_fn(rows, rel):
                     pos_s, neg_s = scores_of(rows, rel, cb)
@@ -349,9 +438,9 @@ class CycleEngine:
 
                 (_, loss_c), (g_rows, g_rel) = jax.value_and_grad(
                     loss_fn, argnums=(0, 1), has_aux=True
-                )(params_f["entity"][idx], params_f["relation"][r])
+                )(gather_rows(params_f["entity"], e_idx), params_f["relation"][r])
                 grads = {
-                    "entity": jnp.zeros_like(params_f["entity"]).at[idx].add(g_rows),
+                    "entity": scatter_grads(params_f["entity"], e_idx, g_rows),
                     "relation": jnp.zeros_like(params_f["relation"]).at[r].add(g_rel),
                 }
                 params_f, opt_f = adam_update(grads, opt_f, params_f, lr)
@@ -387,11 +476,24 @@ class CycleEngine:
                 pos_s, neg_s = scores_of(rows, rel, b_max)
                 return loss_from_scores(pos_s, neg_s, method, temp, weight)
 
+            if eaxis is None:
+                rows_in = ent[idx]
+            else:  # collectives batch under the client vmap (one per shard)
+                rows_in = eshard._take_rows_one(ent, idx, eaxis)
             loss, (g_rows, g_rel) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-                ent[idx], rel_tab[r]
+                rows_in, rel_tab[r]
             )
+            if eaxis is None:
+                g_ent = jnp.zeros_like(ent).at[idx].add(g_rows)
+            else:
+                e_blk = ent.shape[0]
+                loc = idx - jax.lax.axis_index(eaxis) * e_blk
+                own = (loc >= 0) & (loc < e_blk)
+                g_ent = jnp.zeros_like(ent).at[
+                    jnp.where(own, loc, e_blk)
+                ].add(g_rows, mode="drop")
             grads = {
-                "entity": jnp.zeros_like(ent).at[idx].add(g_rows),
+                "entity": g_ent,
                 "relation": jnp.zeros_like(rel_tab).at[r].add(g_rel),
             }
             return loss, grads
@@ -427,9 +529,13 @@ class CycleEngine:
                 )
             # Downstream tie-break jitter for the round that follows; computed
             # here so the per-round oracle consumes bit-identical noise.
+            # Always drawn at the LOGICAL ns_max shape — the draw shape feeds
+            # the PRNG, so padding must happen after, not in the draw.
             jitter = jax.vmap(
                 lambda cid: jax.random.uniform(jax.random.fold_in(kj, cid), (ns_max,))
             )(consts.cids)
+            if ns_pad > ns_max:
+                jitter = jnp.pad(jitter, ((0, 0), (0, ns_pad - ns_max)))
             return StateArrays(params, opt, arrays.hist, arrays.res), jitter, loss
 
         return train_core
@@ -437,20 +543,25 @@ class CycleEngine:
     def _make_comm_core(self):
         k_max, num_global = self.k_max, self.num_global
         codec, axis = self.codec, self._axis
+        eaxis, ns_blk = self._eaxis, self.ns_pad // self.n_eshards
 
         def comm_core(arrays, jitter, consts, do_sync):
             ent = arrays.params["entity"]
             # device-side gather of shared rows; padding slots zeroed exactly
             # like RoundEngine.gather so the round functions see identical
-            # inputs to the per-round engine path
-            emb = jnp.take_along_axis(ent, consts.gather_idx[:, :, None], axis=1)
+            # inputs to the per-round engine path.  Entity-sharded, this is
+            # the exact distributed gather at full Ns_pad width — the round
+            # then works on this shard's slot block while the cheap per-slot
+            # vectors (gid / valid / jitter) stay replicated.
+            emb = eshard.dist_take_rows(ent, consts.gather_idx, eaxis)
             emb = jnp.where(consts.valid[:, :, None], emb, 0.0)
+            emb = eshard.local_block(emb, eaxis, ns_blk)
             if do_sync:
                 rows, hist = batched_sync_round(
                     emb, consts.gid, consts.valid,
-                    num_global=num_global, axis_name=axis,
+                    num_global=num_global, axis_name=axis, entity_axis=eaxis,
                 )
-                down = jnp.zeros((emb.shape[0],), jnp.int32)
+                down = jnp.zeros((rows.shape[0],), jnp.int32)
                 # the full exchange transmits exact values: nothing was
                 # dropped, and stale residuals would re-inject pre-sync error
                 # into freshly-repaired rows — so the residual bank clears
@@ -464,11 +575,10 @@ class CycleEngine:
                 rows, hist, down, res = batched_sparse_round(
                     emb, arrays.hist, consts.gid, consts.valid, consts.k, j,
                     k_max=k_max, num_global=num_global, codec=codec,
-                    axis_name=axis, res=arrays.res,
+                    axis_name=axis, res=arrays.res, entity_axis=eaxis,
                 )
-            ent = jax.vmap(lambda t, i, r: t.at[i].set(r, mode="drop"))(
-                ent, consts.scatter_idx, rows
-            )
+            rows_full = eshard.all_blocks(rows, eaxis)
+            ent = eshard.scatter_rows(ent, consts.scatter_idx, rows_full, eaxis)
             params = dict(arrays.params, entity=ent)
             return StateArrays(params, arrays.opt, hist, res), down
 
@@ -477,13 +587,15 @@ class CycleEngine:
     # ------------------------------------------------------- state plumbing
     def init_state(self, clients: Sequence["KGEClient"], seed: int = 0) -> FederationState:
         """Stack per-client params / optimizer state into padded device arrays."""
-        c_n, e_m, d = self.num_clients, self.e_max, self.dim
-        ent = np.zeros((c_n, e_m, d), np.float32)
+        c_n, d = self.num_clients, self.dim
+        # e_pad / ns_pad == e_max / ns_max unless entity-sharded (then rows
+        # are padded so the tables split into equal per-shard blocks)
+        ent = np.zeros((c_n, self.e_pad, d), np.float32)
         rel = np.zeros((c_n, self.num_relations, self.rel_dim), np.float32)
         mu_e, nu_e = np.zeros_like(ent), np.zeros_like(ent)
         mu_r, nu_r = np.zeros_like(rel), np.zeros_like(rel)
         step = np.zeros((c_n,), np.int32)
-        hist = np.zeros((c_n, self.ns_max, d), np.float32)
+        hist = np.zeros((c_n, self.ns_pad, d), np.float32)
         for c, cl in enumerate(clients):
             n = cl.model.num_entities
             ent[c, :n] = np.asarray(cl.params["entity"], np.float32)
@@ -516,7 +628,7 @@ class CycleEngine:
             # error-feedback residual bank: starts all-zero (nothing dropped
             # yet); zero-width placeholder when the codec banks nothing
             res=jnp.zeros(
-                (c_n, self.ns_max if self.codec.has_residual else 0, d),
+                (c_n, self.ns_pad if self.codec.has_residual else 0, d),
                 jnp.float32,
             ),
         )
@@ -598,7 +710,7 @@ class SuperstepEngine(CycleEngine):
     :meth:`superstep_with_eval` extends the plan vocabulary with ``"eval"``
     segments (:data:`repro.core.sync.PLAN_KINDS`) running the batched
     evaluator (:mod:`repro.core.evaluation`) in-program, so an ISM span AND
-    its boundary eval are one dispatch returning a ``(C, 3)`` metric block.
+    its boundary eval are one dispatch returning a ``(C, 5)`` metric block.
 
     Equivalence contract: each scan step performs *exactly* the per-cycle
     key schedule (one 3-way ``jax.random.split``) and runs the same
@@ -624,7 +736,7 @@ class SuperstepEngine(CycleEngine):
         batched evaluator's program body in place, on the state as of that
         point in the span — the program then additionally takes the
         :class:`repro.core.evaluation.EvalBank` as its last argument and
-        returns the stacked ``(C, 3)`` metric blocks.
+        returns the stacked ``(C, 5)`` metric blocks.
         """
         train_core = self._train_core_fn
         comm_core = self._comm_core_fn
@@ -651,9 +763,14 @@ class SuperstepEngine(CycleEngine):
 
             downs, losses, blocks = [], [], []
             for kind, n in plan:
+                if kind == "prefetch":
+                    # host-store staging marker (repro.core.store): a pure
+                    # scheduling hint consumed by the tiered driver; the
+                    # device program has nothing to stage
+                    continue
                 if kind == "eval":
                     # in-program evaluation on the state as of this point —
-                    # no state/key mutation, only the (C, 3) metric block
+                    # no state/key mutation, only the (C, 5) metric block
                     blocks.extend(
                         eval_core(arrays.params, eval_args[0])
                         for _ in range(n)
@@ -679,15 +796,16 @@ class SuperstepEngine(CycleEngine):
         n_eval = sum(n for kind, n in plan if kind == "eval")
         if self._mesh is None:
             return jax.jit(prog, donate_argnums=(0,))
+        pa = self._arrays_spec()  # StateArrays-shaped (or plain prefix)
         p = jax.sharding.PartitionSpec(self._axis)
         r = jax.sharding.PartitionSpec()
         # per-segment loss stacks rounds on axis 0; clients stay on axis 1
         seg = tuple(
             jax.sharding.PartitionSpec(None, self._axis)
-            for kind, _ in plan if kind != "eval"
+            for kind, _ in plan if kind not in ("eval", "prefetch")
         )
-        in_specs = (p, r, p) + ((p,) if has_eval else ())
-        out_specs = (p, r, (p,) * n_sparse, seg)
+        in_specs = (pa, r, p) + ((self._bank_spec(),) if has_eval else ())
+        out_specs = (pa, r, (p,) * n_sparse, seg)
         if has_eval:
             out_specs = out_specs + ((p,) * n_eval,)
         return jax.jit(
@@ -737,7 +855,7 @@ class SuperstepEngine(CycleEngine):
         (:data:`repro.core.sync.PLAN_KINDS`), so the filtered-ranking eval
         of :class:`repro.core.evaluation.BatchedEvaluator` runs on-device
         inside the same scanned program as the rounds — the host never
-        syncs entity tables at the boundary, it reads back one ``(C, 3)``
+        syncs entity tables at the boundary, it reads back one ``(C, 5)``
         metric block.  Returns ``(state', per_round, losses, block)`` with
         the first three exactly as :meth:`superstep`.
         """

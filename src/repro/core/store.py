@@ -1,0 +1,765 @@
+"""Host-tiered embedding store: device hot-row cache over host-resident tables.
+
+Every other engine in the repo (:mod:`repro.core.state`) keeps the whole
+padded ``(C, E_pad, D)`` entity table — plus Adam moments, ~3x that — device
+resident, which makes the largest trainable graph a function of accelerator
+memory.  Entity-axis sharding (``entity_axis`` on the engines) divides that
+footprint by the mesh size; this module removes E from the device footprint
+altogether, the way the large-scale KGE stacks train web-scale graphs: the
+full tables live in **host** memory and only the rows a cycle actually
+touches are staged into a fixed-size device cache.
+
+The tier boundary is row-granular and exact:
+
+* :class:`HostTieredStore` — host numpy tables (entity embeddings + Adam
+  ``mu``/``nu``) plus the cache directory: slot occupancy, per-slot
+  *temperature*, LRU clocks, and dirty bits.  Slots ``[0, ns_pad)`` pin the
+  shared-entity rows (the FedS protocol reads/writes them every round);
+  the remaining slots hold the training working set.  Eviction picks the
+  coldest non-pinned slot, where temperature is an EMA of the paper's Eq. 1
+  change score ``1 - cos(row_after_cycle, row_before_cycle)`` — the same
+  signal the upload sparsifier ranks rows by, reused as cache admission
+  policy (rows that are still moving stay resident).
+* :class:`TieredCycleEngine` — the cycle driver.  Each cycle it (1) runs
+  the same device batch-sampling program as
+  :class:`repro.core.state.CycleEngine` (indices only — no embedding
+  traffic), (2) splits the training scan into **stage segments** of
+  ``stage_steps`` steps each: per segment, the unique touched rows are
+  computed on host, misses staged into the cache (dirty evictees flushed
+  to the host tier first), and one compiled program trains over the
+  fixed-width **working view** ``W = ns_pad + stage_steps*B*(2+2N)`` and
+  scatters it back, and (3) runs the FedS round on the pinned prefix —
+  the shared rows are always resident, so communication (same
+  :func:`repro.core.engine.batched_sparse_round` / ``batched_sync_round``
+  bodies, codecs and EF residuals included) never touches the host tier.
+  ``stage_steps``, not E, sets the device working-set width: a full epoch
+  touches nearly every entity, so whole-cycle staging would degenerate to
+  ``W ~ E``; per-segment staging is what makes the device footprint a
+  config value.
+
+Contracts (tests/test_store.py):
+
+* **Cache-size transparency**: the compiled program only ever sees the
+  working view, whose width and contents are independent of the cache
+  capacity ``H`` — so trajectories are **bitwise identical** across cache
+  sizes; ``H`` only changes how often a touched row is already resident
+  (the hit rate / host<->device traffic the scale benchmark measures).
+* **Sparse-Adam semantics**: rows outside a cycle's working view receive
+  no moment decay that cycle (the dense engines decay every row every
+  step), so the tiered trajectory is intentionally NOT bitwise equal to
+  :class:`repro.core.state.CycleEngine` — it is the standard semantics of
+  every host-tiered KGE trainer, and the convergence benchmarks treat it
+  as its own engine family.
+
+``"prefetch"`` plan segments (:data:`repro.core.sync.PLAN_KINDS`) mark the
+points of a superstep plan where this driver re-stages the cache; compiled
+engine programs skip them, so plans with and without markers are
+schedule-equivalent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codecs import IdentityCodec, WireCodec
+from repro.core.engine import (
+    batched_sparse_round,
+    batched_sync_round,
+    build_padded_views,
+)
+from repro.core.sparsify import change_scores
+from repro.data.loader import stack_padded_triples
+from repro.kge.scoring import get_score_fn, per_sample_losses
+from repro.train.optimizer import AdamState, adam_update
+
+
+class DeviceCache(NamedTuple):
+    """The device-resident hot tier: ``H`` row slots per client."""
+
+    ent: jnp.ndarray  # (C, H, D) embedding rows
+    mu: jnp.ndarray  # (C, H, D) Adam first moments
+    nu: jnp.ndarray  # (C, H, D) Adam second moments
+
+
+class TieredState(NamedTuple):
+    """Device-resident state of the tiered driver (everything but the cold
+    entity rows, which live in :class:`HostTieredStore`)."""
+
+    cache: DeviceCache
+    rel: jnp.ndarray  # (C, R, Dr) relation tables (fully resident — small)
+    rel_mu: jnp.ndarray
+    rel_nu: jnp.ndarray
+    step: jnp.ndarray  # () int32 shared Adam step (lockstep clients)
+    hist: jnp.ndarray  # (C, Ns, D) upload history
+    res: jnp.ndarray  # (C, Ns | 0, D) EF residual bank
+    key: jnp.ndarray  # cycle PRNG key
+
+
+@jax.jit
+def _cache_gather(cache: DeviceCache, ci, si):
+    return cache.ent[ci, si], cache.mu[ci, si], cache.nu[ci, si]
+
+
+@jax.jit
+def _cache_scatter(cache: DeviceCache, ci, si, ent, mu, nu):
+    return DeviceCache(
+        ent=cache.ent.at[ci, si].set(ent),
+        mu=cache.mu.at[ci, si].set(mu),
+        nu=cache.nu.at[ci, si].set(nu),
+    )
+
+
+class HostTieredStore:
+    """Host tier + cache directory.  All device arrays flow functionally
+    through :meth:`stage` / :meth:`flush`; the store itself holds only host
+    numpy state and bookkeeping."""
+
+    def __init__(
+        self,
+        ent: np.ndarray,  # (C, E, D) host entity tables (padded rows zero)
+        mu: np.ndarray,
+        nu: np.ndarray,
+        pinned: Sequence[np.ndarray],  # per-client local row ids, pinned
+        cache_slots: int,
+        ns_pad: int,
+        temp_beta: float = 0.9,
+    ):
+        self.ent, self.mu, self.nu = ent, mu, nu
+        self.c_n, self.e_rows, self.dim = ent.shape
+        self.ns_pad = int(ns_pad)
+        self.h = int(cache_slots)
+        if self.h <= self.ns_pad:
+            raise ValueError(
+                f"cache_slots={self.h} leaves no dynamic slots beyond the "
+                f"{self.ns_pad} pinned shared-row slots"
+            )
+        self.temp_beta = float(temp_beta)
+        # directory: slot -> host row (-1 free), row -> slot (dynamic only)
+        self.slot_row = np.full((self.c_n, self.h), -1, np.int64)
+        self.row_slot: list[dict] = [dict() for _ in range(self.c_n)]
+        self.pin_pos: list[dict] = []
+        self.temp = np.zeros((self.c_n, self.h), np.float32)
+        self.clock = np.zeros((self.c_n, self.h), np.int64)
+        self.dirty = np.zeros((self.c_n, self.h), bool)
+        self._free: list[list[int]] = [
+            list(range(self.h - 1, self.ns_pad - 1, -1)) for _ in range(self.c_n)
+        ]
+        self._tick = 0
+        self.stats = {
+            "hits": 0, "misses": 0, "evictions": 0,
+            "h2d_bytes": 0, "d2h_bytes": 0, "cycles": 0,
+        }
+        for c, rows in enumerate(pinned):
+            rows = np.asarray(rows, np.int64)
+            self.slot_row[c, : len(rows)] = rows
+            self.pin_pos.append({int(e): i for i, e in enumerate(rows)})
+
+    # ------------------------------------------------------------- tiering
+    def seed_cache(self) -> DeviceCache:
+        """Fresh cache with the pinned shared rows staged."""
+        cache = DeviceCache(
+            ent=jnp.zeros((self.c_n, self.h, self.dim), jnp.float32),
+            mu=jnp.zeros((self.c_n, self.h, self.dim), jnp.float32),
+            nu=jnp.zeros((self.c_n, self.h, self.dim), jnp.float32),
+        )
+        ci, si = np.nonzero(self.slot_row >= 0)
+        rows = self.slot_row[ci, si]
+        return _cache_scatter(
+            cache, jnp.asarray(ci), jnp.asarray(si),
+            jnp.asarray(self.ent[ci, rows]),
+            jnp.asarray(self.mu[ci, rows]),
+            jnp.asarray(self.nu[ci, rows]),
+        )
+
+    def stage(
+        self, cache: DeviceCache, touched: Sequence[np.ndarray]
+    ) -> tuple[DeviceCache, list[np.ndarray]]:
+        """Make each client's ``touched`` (unique, non-pinned) rows resident.
+
+        Flushes dirty evictees to the host tier, stages the misses from it,
+        and returns the per-client slot arrays aligned with ``touched``.
+        Values are exact row copies both ways, which is what makes the
+        trajectory independent of the cache capacity.
+        """
+        self._tick += 1
+        slot_lists: list[np.ndarray] = []
+        pendings: list[list[int]] = []
+        victims: list[list[int]] = []
+        ev_c: list[int] = []
+        ev_s: list[int] = []
+        ev_rows: list[int] = []
+        # pass 1: hits + victim selection (directory untouched so far)
+        for c, rows in enumerate(touched):
+            rs = self.row_slot[c]
+            slots = np.full(len(rows), -1, np.int64)
+            pending = []  # indices into `rows` that missed
+            held = set()  # slots this cycle must not evict
+            for i, e in enumerate(rows):
+                s = rs.get(int(e), -1)
+                if s >= 0:
+                    slots[i] = s
+                    held.add(s)
+                else:
+                    pending.append(i)
+            self.stats["hits"] += len(rows) - len(pending)
+            self.stats["misses"] += len(pending)
+            vics: list[int] = []
+            n_evict = max(0, len(pending) - len(self._free[c]))
+            if n_evict:
+                cand = [
+                    s for s in range(self.ns_pad, self.h)
+                    if self.slot_row[c, s] >= 0 and s not in held
+                ]
+                if len(cand) < n_evict:
+                    raise ValueError(
+                        f"cache overflow: client {c} touches "
+                        f"{len(rows)} rows but only "
+                        f"{self.h - self.ns_pad} dynamic slots exist"
+                    )
+                order = np.lexsort((self.clock[c, cand], self.temp[c, cand]))
+                vics = [cand[j] for j in order[:n_evict]]
+                for s in vics:
+                    if self.dirty[c, s]:
+                        ev_c.append(c)
+                        ev_s.append(s)
+                        ev_rows.append(int(self.slot_row[c, s]))
+            slot_lists.append(slots)
+            pendings.append(pending)
+            victims.append(vics)
+        # flush dirty evictees device -> host BEFORE their slots are reused
+        if ev_c:
+            ent, mu, nu = _cache_gather(
+                cache, jnp.asarray(np.asarray(ev_c)),
+                jnp.asarray(np.asarray(ev_s)),
+            )
+            ec, er = np.asarray(ev_c), np.asarray(ev_rows)
+            self.ent[ec, er] = np.asarray(ent)
+            self.mu[ec, er] = np.asarray(mu)
+            self.nu[ec, er] = np.asarray(nu)
+            self.stats["d2h_bytes"] += int(len(ev_c)) * self.dim * 4 * 3
+        # pass 2: retire victims, assign miss slots
+        miss_c: list[int] = []
+        miss_s: list[int] = []
+        miss_rows: list[int] = []
+        for c, rows in enumerate(touched):
+            rs = self.row_slot[c]
+            free = self._free[c]
+            for s in victims[c]:
+                del rs[int(self.slot_row[c, s])]
+                self.slot_row[c, s] = -1
+                self.dirty[c, s] = False
+                free.append(s)
+            self.stats["evictions"] += len(victims[c])
+            slots = slot_lists[c]
+            for i in pendings[c]:
+                s = free.pop()
+                e = int(rows[i])
+                slots[i] = s
+                rs[e] = s
+                self.slot_row[c, s] = e
+                self.temp[c, s] = 0.0
+                miss_c.append(c)
+                miss_s.append(s)
+                miss_rows.append(e)
+        if miss_c:
+            ci = jnp.asarray(np.asarray(miss_c))
+            si = jnp.asarray(np.asarray(miss_s))
+            rows = np.asarray(miss_rows)
+            mc = np.asarray(miss_c)
+            cache = _cache_scatter(
+                cache, ci, si,
+                jnp.asarray(self.ent[mc, rows]),
+                jnp.asarray(self.mu[mc, rows]),
+                jnp.asarray(self.nu[mc, rows]),
+            )
+            self.stats["h2d_bytes"] += int(rows.size) * self.dim * 4 * 3
+        return cache, slot_lists
+
+    def after_segment(self, view: np.ndarray, temp_sig: np.ndarray) -> None:
+        """Fold a segment's change-score signal into slot temperatures and
+        mark the view's slots dirty.  ``view``/``temp_sig`` are (C, W)."""
+        b = self.temp_beta
+        for c in range(self.c_n):
+            m = view[c] < self.h
+            s = view[c][m]
+            self.temp[c, s] = b * self.temp[c, s] + (1.0 - b) * temp_sig[c][m]
+            self.clock[c, s] = self._tick
+            self.dirty[c, s] = True
+
+    def mark_pinned_dirty(self) -> None:
+        """Flag the pinned prefix for write-back (a comm round mutated it).
+
+        Unoccupied pinned padding slots flip too, but :meth:`flush` masks on
+        slot occupancy so they never reach the host tier."""
+        self.dirty[:, : self.ns_pad] = True
+
+    def flush(self, cache: DeviceCache) -> None:
+        """Write every dirty resident slot back to the host tier."""
+        ci, si = np.nonzero(self.dirty & (self.slot_row >= 0))
+        if not len(ci):
+            return
+        ent, mu, nu = _cache_gather(cache, jnp.asarray(ci), jnp.asarray(si))
+        rows = self.slot_row[ci, si]
+        self.ent[ci, rows] = np.asarray(ent)
+        self.mu[ci, rows] = np.asarray(mu)
+        self.nu[ci, rows] = np.asarray(nu)
+        self.dirty[ci, si] = False
+        self.stats["d2h_bytes"] += int(len(ci)) * self.dim * 4 * 3
+
+    # --------------------------------------------------------------- stats
+    @property
+    def hit_rate(self) -> float:
+        n = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / n if n else 1.0
+
+    def device_bytes(self) -> int:
+        """Resident device footprint of the hot tier (cache slots x 3)."""
+        return self.c_n * self.h * self.dim * 4 * 3
+
+    def host_bytes(self) -> int:
+        """Host-tier footprint (full tables x 3)."""
+        return self.c_n * self.e_rows * self.dim * 4 * 3
+
+
+class TieredCycleEngine:
+    """Train+communicate cycles over :class:`HostTieredStore` state.
+
+    Same federation inputs as :class:`repro.core.state.CycleEngine`
+    (homogeneous clients — the tiered trainer supports only the lockstep
+    flat path), but device memory holds ``cache_slots`` rows per client
+    instead of ``E_max``.  Training runs as stage segments over the fixed
+    working view ``W = ns_pad + t_cap``, whose width is set by the batch
+    plan (``t_cap`` bounds a SEGMENT's unique non-pinned rows), NOT by the
+    cache size — which is what makes trajectories cache-size transparent.
+    """
+
+    def __init__(
+        self,
+        clients: Sequence,
+        views: Sequence,
+        num_global_entities: int,
+        *,
+        sparsity_p: float,
+        local_epochs: int,
+        codec: Optional[WireCodec] = None,
+        cache_slots: int = 0,
+        stage_steps: int = 0,
+        temp_beta: float = 0.9,
+    ):
+        self.views = list(views)
+        self.num_global = int(num_global_entities)
+        self.num_clients = len(clients)
+        c0 = clients[0]
+        self.method = c0.method
+        self.gamma = float(c0.gamma)
+        self.lr = float(c0.lr)
+        self.temp = float(c0.temp)
+        self.dim = int(c0.model.dim)
+        self.rel_dim = int(c0.model.rel_dim)
+        self.num_relations = int(c0.model.num_relations)
+        self.local_epochs = int(local_epochs)
+        self.num_negatives = int(c0.loader.num_negatives)
+        self.codec = codec if codec is not None else IdentityCodec()
+        gid, valid, self.k_per_client, self.ns_max, self.k_max = (
+            build_padded_views(self.views, self.num_global, sparsity_p)
+        )
+        self.ns_pad = self.ns_max
+        self.num_entities = np.asarray(
+            [c.model.num_entities for c in clients], np.int32
+        )
+        self.e_max = int(self.num_entities.max())
+        triples, counts = stack_padded_triples([c.data.train for c in clients])
+        batch_sizes = np.asarray([c.loader.batch_size for c in clients])
+        steps = np.asarray([c.loader.batches_per_epoch for c in clients])
+        if len(set(batch_sizes.tolist())) > 1 or len(set(steps.tolist())) > 1:
+            raise ValueError(
+                "TieredCycleEngine supports only lockstep clients "
+                "(equal batch size and batches-per-epoch)"
+            )
+        self.b_max = int(batch_sizes.max())
+        self.s_max = int(steps.max())
+        self.scan_len = self.local_epochs * self.s_max
+        self.stage_steps = (
+            self.scan_len if stage_steps <= 0
+            else min(int(stage_steps), self.scan_len)
+        )
+        # worst-case unique non-pinned rows one STAGE SEGMENT can touch —
+        # this, not E, sets the device working-set width
+        self.t_cap = int(min(
+            self.e_max,
+            self.stage_steps * self.b_max * (2 + 2 * self.num_negatives),
+        ))
+        self.w = self.ns_pad + self.t_cap
+        self.cache_slots = max(int(cache_slots), self.w)
+        self.temp_beta = float(temp_beta)
+        self._gid = jnp.asarray(gid)
+        self._valid = jnp.asarray(valid)
+        self._k = jnp.asarray(self.k_per_client)
+        self._cids = jnp.arange(self.num_clients, dtype=jnp.int32)
+        self._triples = jnp.asarray(triples)
+        self._num_train = jnp.asarray(counts)
+        self._num_ent = jnp.asarray(self.num_entities)
+        self._plan = self._make_plan()
+        self._jitter_fn = self._make_jitter()
+        self._train_seg = jax.jit(self._make_train_seg(), donate_argnums=(0,))
+        comm = self._make_comm()
+        self._comm = {
+            kind: jax.jit(
+                functools.partial(comm, do_sync=kind == "sync"),
+                donate_argnums=(0,),
+            )
+            for kind in ("sparse", "sync")
+        }
+
+    # ----------------------------------------------------- device programs
+    def _make_plan(self):
+        scan_len, b_max, n_neg = self.scan_len, self.b_max, self.num_negatives
+
+        def sample_one(cid, tri, t_c, e_c, kb):
+            # EXACT copy of CycleEngine's sampler: same fold_in sequence and
+            # draw shapes -> same batches for the same cycle key
+            kc = jax.random.fold_in(kb, cid)
+            pi = jax.random.randint(
+                jax.random.fold_in(kc, 1), (scan_len, b_max), 0, t_c
+            )
+            pos = jnp.take(tri, pi, axis=0)
+            neg_t = jax.random.randint(
+                jax.random.fold_in(kc, 2), (scan_len, b_max, n_neg), 0, e_c
+            )
+            neg_h = jax.random.randint(
+                jax.random.fold_in(kc, 3), (scan_len, b_max, n_neg), 0, e_c
+            )
+            return pos, neg_t, neg_h
+
+        def plan(kb):
+            return jax.vmap(sample_one, in_axes=(0, 0, 0, 0, None))(
+                self._cids, self._triples, self._num_train, self._num_ent, kb
+            )
+
+        return jax.jit(plan)
+
+    def _make_jitter(self):
+        ns_max = self.ns_max
+
+        def jit_jitter(kj):
+            return jax.vmap(
+                lambda cid: jax.random.uniform(
+                    jax.random.fold_in(kj, cid), (ns_max,)
+                )
+            )(self._cids)
+
+        return jax.jit(jit_jitter)
+
+    def _make_train_seg(self):
+        """One stage segment: gather working view -> train scan -> scatter
+        back.  ``pos``/``neg_*`` carry the segment's steps; the program
+        retraces once per distinct segment length (at most two: the body
+        and a shorter tail)."""
+        c_n, w, d = self.num_clients, self.w, self.dim
+        r_n, r_d = self.num_relations, self.rel_dim
+        b_max, n_neg = self.b_max, self.num_negatives
+        method, gamma, lr, temp = self.method, self.gamma, self.lr, self.temp
+        score = get_score_fn(method)
+        cb = c_n * b_max
+
+        def scores_of(rows, rel):
+            h_e, t_e = rows[:cb], rows[cb : 2 * cb]
+            nt_e = rows[2 * cb : (2 + n_neg) * cb].reshape(cb, n_neg, -1)
+            nh_e = rows[(2 + n_neg) * cb :].reshape(cb, n_neg, -1)
+            pos_s = score(h_e, rel, t_e, gamma)
+            neg_t_s = score(h_e[:, None, :], rel[:, None, :], nt_e, gamma)
+            neg_h_s = score(nh_e, rel[:, None, :], t_e[:, None, :], gamma)
+            return pos_s, jnp.concatenate([neg_t_s, neg_h_s], -1)
+
+        cid_rows = jnp.concatenate(
+            [jnp.repeat(jnp.arange(c_n, dtype=jnp.int32), b_max)] * 2
+            + [jnp.repeat(jnp.arange(c_n, dtype=jnp.int32), b_max * n_neg)] * 2
+        )
+        roff = jnp.arange(c_n, dtype=jnp.int32) * r_n
+
+        def train_seg(cache, rel, rel_mu, rel_nu, step, view, pos, neg_t, neg_h):
+            h_slots = cache.ent.shape[1]
+            sent = view >= h_slots  # (C, W) sentinel (unused view tail)
+            vi = jnp.where(sent, 0, view)
+            live = (~sent)[:, :, None]
+            take = lambda t: jnp.where(  # noqa: E731
+                live, jnp.take_along_axis(t, vi[:, :, None], axis=1), 0.0
+            )
+            ent_w, mu_w, nu_w = take(cache.ent), take(cache.mu), take(cache.nu)
+            old_ent = ent_w
+            params_f = {
+                "entity": ent_w.reshape(c_n * w, d),
+                "relation": rel.reshape(c_n * r_n, r_d),
+            }
+            opt_f = AdamState(
+                step=step,
+                mu={"entity": mu_w.reshape(c_n * w, d),
+                    "relation": rel_mu.reshape(c_n * r_n, r_d)},
+                nu={"entity": nu_w.reshape(c_n * w, d),
+                    "relation": rel_nu.reshape(c_n * r_n, r_d)},
+            )
+            wn = jnp.full((c_n, b_max), 1.0 / b_max, jnp.float32)
+
+            def step_fn(carry, x):
+                params_f, opt_f = carry
+                p, nt, nh = x  # view-space indices, (C, B, 3) / (C, B, N)
+                r = (p[:, :, 1] + roff[:, None]).reshape(-1)
+                e_idx = cid_rows * w + jnp.concatenate([
+                    p[:, :, 0].reshape(-1), p[:, :, 2].reshape(-1),
+                    nt.reshape(-1), nh.reshape(-1),
+                ])
+
+                def loss_fn(rows, rel_rows):
+                    pos_s, neg_s = scores_of(rows, rel_rows)
+                    per = per_sample_losses(pos_s, neg_s, method, temp)
+                    loss_c = (per.reshape(c_n, b_max) * wn).sum(axis=1) / 2.0
+                    return loss_c.sum(), loss_c
+
+                (_, loss_c), (g_rows, g_rel) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True
+                )(params_f["entity"][e_idx], params_f["relation"][r])
+                grads = {
+                    "entity": jnp.zeros_like(params_f["entity"])
+                    .at[e_idx].add(g_rows),
+                    "relation": jnp.zeros_like(params_f["relation"])
+                    .at[r].add(g_rel),
+                }
+                params_f, opt_f = adam_update(grads, opt_f, params_f, lr)
+                return (params_f, opt_f), loss_c
+
+            (params_f, opt_f), losses = jax.lax.scan(
+                step_fn, (params_f, opt_f),
+                (jnp.moveaxis(pos, 0, 1), jnp.moveaxis(neg_t, 0, 1),
+                 jnp.moveaxis(neg_h, 0, 1)),
+            )
+            ent_w = params_f["entity"].reshape(c_n, w, d)
+            mu_w = opt_f.mu["entity"].reshape(c_n, w, d)
+            nu_w = opt_f.nu["entity"].reshape(c_n, w, d)
+            # -------- Eq. 1 change score of the segment = slot temperature
+            temp_sig = change_scores(
+                ent_w.reshape(c_n * w, d), old_ent.reshape(c_n * w, d)
+            ).reshape(c_n, w)
+            temp_sig = jnp.where(sent, 0.0, temp_sig)
+            # -------------------- scatter the view back into the cache
+            cw = jnp.broadcast_to(
+                jnp.arange(c_n, dtype=view.dtype)[:, None], (c_n, w)
+            )
+            flat = jnp.where(
+                sent, c_n * h_slots, cw * h_slots + view
+            ).reshape(-1)
+            put = lambda t, v: (  # noqa: E731
+                t.reshape(-1, d).at[flat].set(v.reshape(-1, d), mode="drop")
+                .reshape(c_n, h_slots, d)
+            )
+            cache = DeviceCache(
+                ent=put(cache.ent, ent_w),
+                mu=put(cache.mu, mu_w),
+                nu=put(cache.nu, nu_w),
+            )
+            return (
+                cache,
+                params_f["relation"].reshape(c_n, r_n, r_d),
+                opt_f.mu["relation"].reshape(c_n, r_n, r_d),
+                opt_f.nu["relation"].reshape(c_n, r_n, r_d),
+                opt_f.step, losses, temp_sig,
+            )
+
+        return train_seg
+
+    def _make_comm(self):
+        """The FedS round over the pinned prefix — the shared rows are
+        always cache-resident at slots ``[0, ns_pad)``, so communication
+        never touches the host tier."""
+        c_n, ns_pad, k_max = self.num_clients, self.ns_pad, self.k_max
+        num_global, codec = self.num_global, self.codec
+
+        def comm(cache, hist, res, jitter, gid, valid, k, *, do_sync):
+            emb = jnp.where(valid[:, :, None], cache.ent[:, :ns_pad], 0.0)
+            if do_sync:
+                rows, hist = batched_sync_round(
+                    emb, gid, valid, num_global=num_global, axis_name=None,
+                )
+                down = jnp.zeros((c_n,), jnp.int32)
+                # full exchange transmits exact values; stale residuals would
+                # re-inject pre-sync error (matches CycleEngine comm_core)
+                res = jnp.zeros_like(res) if codec.has_residual else res
+            else:
+                # halve after the f32 cast (mirrors RoundEngine.sparse_round)
+                j = jnp.asarray(jitter, jnp.float32) * 0.5
+                rows, hist, down, res = batched_sparse_round(
+                    emb, hist, gid, valid, k, j,
+                    k_max=k_max, num_global=num_global, codec=codec,
+                    axis_name=None, res=res,
+                )
+            ent = cache.ent.at[:, :ns_pad].set(
+                jnp.where(valid[:, :, None], rows, cache.ent[:, :ns_pad])
+            )
+            return DeviceCache(ent, cache.mu, cache.nu), hist, res, down
+
+        return comm
+
+    # ------------------------------------------------------ state plumbing
+    def init_state(
+        self, clients: Sequence, seed: int = 0
+    ) -> tuple[HostTieredStore, TieredState]:
+        c_n, d = self.num_clients, self.dim
+        ent = np.zeros((c_n, self.e_max, d), np.float32)
+        mu = np.zeros_like(ent)
+        nu = np.zeros_like(ent)
+        rel = np.zeros((c_n, self.num_relations, self.rel_dim), np.float32)
+        rel_mu, rel_nu = np.zeros_like(rel), np.zeros_like(rel)
+        hist = np.zeros((c_n, self.ns_pad, d), np.float32)
+        steps = set()
+        for c, cl in enumerate(clients):
+            n = cl.model.num_entities
+            ent[c, :n] = np.asarray(cl.params["entity"], np.float32)
+            rel[c] = np.asarray(cl.params["relation"], np.float32)
+            mu[c, :n] = np.asarray(cl.opt_state.mu["entity"], np.float32)
+            nu[c, :n] = np.asarray(cl.opt_state.nu["entity"], np.float32)
+            rel_mu[c] = np.asarray(cl.opt_state.mu["relation"], np.float32)
+            rel_nu[c] = np.asarray(cl.opt_state.nu["relation"], np.float32)
+            steps.add(int(cl.opt_state.step))
+            v = self.views[c]
+            if v.num_shared:
+                hist[c, : v.num_shared] = ent[c][v.shared_local]
+        if len(steps) > 1:
+            raise ValueError(
+                "clients have unequal Adam step counts; the tiered trainer "
+                "requires lockstep steps"
+            )
+        store = HostTieredStore(
+            ent, mu, nu,
+            pinned=[np.asarray(v.shared_local) for v in self.views],
+            cache_slots=self.cache_slots, ns_pad=self.ns_pad,
+            temp_beta=self.temp_beta,
+        )
+        state = TieredState(
+            cache=store.seed_cache(),
+            rel=jnp.asarray(rel),
+            rel_mu=jnp.asarray(rel_mu),
+            rel_nu=jnp.asarray(rel_nu),
+            step=jnp.asarray(steps.pop() if steps else 0, jnp.int32),
+            hist=jnp.asarray(hist),
+            res=jnp.zeros(
+                (c_n, self.ns_pad if self.codec.has_residual else 0, d),
+                jnp.float32,
+            ),
+            key=jax.random.PRNGKey(seed),
+        )
+        return store, state
+
+    def run_cycle(
+        self, store: HostTieredStore, state: TieredState, kind: str
+    ) -> tuple[TieredState, np.ndarray, np.ndarray]:
+        """One ``local_epochs``-train + ``kind``-round cycle.
+
+        Training runs as ``ceil(scan_len / stage_steps)`` stage segments —
+        host remap + cache staging, then the compiled segment program —
+        followed by the communication round on the always-resident pinned
+        prefix.  Returns ``(state', down_counts (C,), loss (C,))``.  The
+        per-cycle key schedule matches
+        :class:`repro.core.state.CycleEngine` (one 3-way split; ``kb``
+        feeds the batch plan, ``kj`` the jitter).
+        """
+        key, kb, kj = jax.random.split(state.key, 3)
+        pos, neg_t, neg_h = self._plan(kb)
+        pos_h = np.asarray(pos)
+        nt_h = np.asarray(neg_t)
+        nh_h = np.asarray(neg_h)
+        cache, rel, rel_mu, rel_nu, step = (
+            state.cache, state.rel, state.rel_mu, state.rel_nu, state.step
+        )
+        losses = []
+        for s0 in range(0, self.scan_len, self.stage_steps):
+            sl = slice(s0, min(s0 + self.stage_steps, self.scan_len))
+            cache, view, pos_v, nt_v, nh_v = self._stage(
+                store, cache, pos_h[:, sl], nt_h[:, sl], nh_h[:, sl]
+            )
+            cache, rel, rel_mu, rel_nu, step, seg_loss, temp_sig = (
+                self._train_seg(
+                    cache, rel, rel_mu, rel_nu, step, jnp.asarray(view),
+                    jnp.asarray(pos_v), jnp.asarray(nt_v), jnp.asarray(nh_v),
+                )
+            )
+            store.after_segment(view, np.asarray(temp_sig))
+            losses.append(np.asarray(seg_loss))
+        hist, res = state.hist, state.res
+        if kind == "none":
+            down = np.zeros((self.num_clients,), np.int32)
+        else:
+            jitter = (
+                self._jitter_fn(kj) if kind == "sparse"
+                else jnp.zeros((self.num_clients, self.ns_pad), jnp.float32)
+            )
+            cache, hist, res, down = self._comm[kind](
+                cache, hist, res, jitter, self._gid, self._valid, self._k
+            )
+            store.mark_pinned_dirty()
+            down = np.asarray(down)
+        store.stats["cycles"] += 1
+        new_state = TieredState(
+            cache=cache, rel=rel, rel_mu=rel_mu, rel_nu=rel_nu, step=step,
+            hist=hist, res=res, key=key,
+        )
+        return new_state, down, np.concatenate(losses, axis=0).mean(axis=0)
+
+    def _stage(self, store, cache, pos_h, nt_h, nh_h):
+        """Touched-row discovery + cache staging + view-space remap for one
+        segment's ``(C, seg, B, ...)`` index slices."""
+        c_n = self.num_clients
+        view = np.full((c_n, self.w), store.h, np.int32)
+        view[:, : self.ns_pad] = np.arange(self.ns_pad)
+        pos_v = pos_h.copy()
+        nt_v = np.empty_like(nt_h)
+        nh_v = np.empty_like(nh_h)
+        touched: list[np.ndarray] = []
+        remaps = []
+        for c in range(c_n):
+            rows_all = np.concatenate([
+                pos_h[c, :, :, 0].ravel(), pos_h[c, :, :, 2].ravel(),
+                nt_h[c].ravel(), nh_h[c].ravel(),
+            ])
+            uniq, inv = np.unique(rows_all, return_inverse=True)
+            pin = store.pin_pos[c]
+            vp = np.empty(len(uniq), np.int64)
+            nonshared = []
+            for j, e in enumerate(uniq.tolist()):
+                p = pin.get(e, -1)
+                if p >= 0:
+                    vp[j] = p
+                else:
+                    vp[j] = self.ns_pad + len(nonshared)
+                    nonshared.append(e)
+            touched.append(np.asarray(nonshared, np.int64))
+            remaps.append((uniq, inv, vp, len(nonshared)))
+        cache, slot_lists = store.stage(cache, touched)
+        for c in range(c_n):
+            _uniq, inv, vp, n_ns = remaps[c]
+            if n_ns:
+                view[c, self.ns_pad : self.ns_pad + n_ns] = slot_lists[c]
+            mapped = vp[inv].astype(pos_h.dtype)
+            n_ht = pos_h[c, :, :, 0].size
+            n_neg = nt_h[c].size
+            pos_v[c, :, :, 0] = mapped[:n_ht].reshape(pos_h[c, :, :, 0].shape)
+            pos_v[c, :, :, 2] = mapped[n_ht : 2 * n_ht].reshape(
+                pos_h[c, :, :, 2].shape
+            )
+            nt_v[c] = mapped[2 * n_ht : 2 * n_ht + n_neg].reshape(nt_h[c].shape)
+            nh_v[c] = mapped[2 * n_ht + n_neg :].reshape(nh_h[c].shape)
+        return cache, view, pos_v, nt_v, nh_v
+
+    def materialize_params(
+        self, store: HostTieredStore, state: TieredState
+    ) -> dict:
+        """Flush the cache and assemble full padded params (the ONE point
+        where a full ``(C, E_max, D)`` table is materialized — eval / final
+        snapshot boundaries only)."""
+        store.flush(state.cache)
+        return {
+            "entity": jnp.asarray(store.ent),
+            "relation": state.rel,
+        }

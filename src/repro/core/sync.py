@@ -23,14 +23,20 @@ from typing import Iterable, Tuple
 #: ``"none"``   — local training only (the no-communication baseline).
 ROUND_KINDS = ("sparse", "sync", "none")
 
-#: Superstep *plan* segments are round kinds plus ``"eval"`` — a
-#: device-resident filtered-ranking evaluation
+#: Superstep *plan* segments are round kinds plus two zero-round markers:
+#: ``"eval"`` — a device-resident filtered-ranking evaluation
 #: (:class:`repro.core.evaluation.BatchedEvaluator`) folded into the same
-#: scanned program.  ``"eval"`` is never emitted by :func:`round_kind` (it
-#: consumes no round of the schedule); :meth:`repro.core.state.
-#: SuperstepEngine.superstep_with_eval` appends it so an ISM span and its
-#: boundary eval compile together.
-PLAN_KINDS = ROUND_KINDS + ("eval",)
+#: scanned program — and ``"prefetch"`` — a host-tier staging point where
+#: the :class:`repro.core.store.HostTieredStore` driver refreshes the
+#: device hot-row cache from the host-resident table before the following
+#: rounds run.  Neither is ever emitted by :func:`round_kind` (they consume
+#: no round of the schedule): :meth:`repro.core.state.SuperstepEngine.
+#: superstep_with_eval` appends ``"eval"`` so an ISM span and its boundary
+#: eval compile together, and the tiered driver inserts ``"prefetch"``
+#: via :func:`insert_prefetch`.  Compiled engine programs skip
+#: ``"prefetch"`` segments (a no-op on device), so plans with and without
+#: them produce bitwise-identical state.
+PLAN_KINDS = ROUND_KINDS + ("eval", "prefetch")
 
 
 def is_sync_round(round_idx: int, interval: int) -> bool:
@@ -86,6 +92,48 @@ def compress_schedule(kinds: Iterable[str]) -> Tuple[Tuple[str, int], ...]:
         else:
             plan.append((k, 1))
     return tuple(plan)
+
+
+def insert_prefetch(
+    plan: Tuple[Tuple[str, int], ...], every: int
+) -> Tuple[Tuple[str, int], ...]:
+    """Insert ``("prefetch", 1)`` staging markers into a compressed plan.
+
+    Splits round-consuming segments so a marker lands before every
+    ``every``-th round of the span (and one before round 0) — the points
+    where a host-tiered driver re-stages its device cache.  Zero-round
+    segments (``"eval"``, existing ``"prefetch"``) pass through untouched
+    and do not advance the round counter.  ``every <= 0`` returns the plan
+    unchanged.  Engines treat ``"prefetch"`` as a no-op, so the expanded
+    plan is schedule-equivalent to the input.
+    """
+    if every <= 0:
+        return plan
+    out: list[tuple[str, int]] = []
+    t = 0  # rounds consumed so far
+    for kind, n in plan:
+        if kind not in ROUND_KINDS:
+            out.append((kind, n))
+            continue
+        while n > 0:
+            if t % every == 0:
+                out.append(("prefetch", 1))
+            take = min(n, every - (t % every))
+            out.append((kind, take))
+            t += take
+            n -= take
+    # re-merge adjacent same-kind segments the splitting may have created
+    return tuple(_merge(out))
+
+
+def _merge(segs):
+    merged: list[tuple[str, int]] = []
+    for kind, n in segs:
+        if merged and merged[-1][0] == kind and kind != "prefetch":
+            merged[-1] = (kind, merged[-1][1] + n)
+        else:
+            merged.append((kind, n))
+    return merged
 
 
 def comm_ratio_worst_case(p: float, s: int, dim: int) -> float:

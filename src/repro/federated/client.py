@@ -245,13 +245,16 @@ class KGEClient:
         return np.concatenate(out).astype(np.int64)
 
     def evaluate(self, split: str = "valid", max_triples: int = 2000) -> dict:
-        """Filtered MRR / Hits@10 over both tail and head prediction."""
+        """Filtered MRR / Hits@{1,3,10} over both tail and head prediction."""
         ranks = self.ranks(split, max_triples)
         if ranks.shape[0] == 0:
-            return {"mrr": 0.0, "hits10": 0.0, "count": 0}
+            return {"mrr": 0.0, "hits1": 0.0, "hits3": 0.0, "hits10": 0.0,
+                    "count": 0}
         ranks_arr = ranks.astype(np.float64).reshape(-1)
         return {
             "mrr": float((1.0 / ranks_arr).mean()),
+            "hits1": float((ranks_arr <= 1).mean()),
+            "hits3": float((ranks_arr <= 3).mean()),
             "hits10": float((ranks_arr <= 10).mean()),
             "count": int(ranks.shape[0]),
         }

@@ -8,34 +8,56 @@ from __future__ import annotations
 
 import numpy as np
 
+#: Metric-dict keys for the rate columns of the evaluator's block, in
+#: column order (column 0 .. n-2; the last column is always ``count``).
+#: Mirrors :data:`repro.core.evaluation.HITS_LEVELS` = (1, 3, 10).
+RATE_KEYS = ("mrr", "hits1", "hits3", "hits10")
+
+
+def _zero() -> dict:
+    out = {k: 0.0 for k in RATE_KEYS}
+    out["count"] = 0
+    return out
+
 
 def weighted_average(per_client: list[dict]) -> dict:
-    """per_client: list of {"mrr", "hits10", "count"} dicts."""
+    """per_client: list of {"mrr", "hits1", "hits3", "hits10", "count"}
+    dicts (missing rate keys are treated as 0)."""
     total = sum(m["count"] for m in per_client)
     if total == 0:
-        return {"mrr": 0.0, "hits10": 0.0, "count": 0}
-    mrr = sum(m["mrr"] * m["count"] for m in per_client) / total
-    hits = sum(m["hits10"] * m["count"] for m in per_client) / total
-    return {"mrr": mrr, "hits10": hits, "count": total}
+        return _zero()
+    out = {
+        k: sum(m.get(k, 0.0) * m["count"] for m in per_client) / total
+        for k in RATE_KEYS
+    }
+    out["count"] = total
+    return out
 
 
 def aggregate_eval_block(block) -> dict:
-    """Aggregate the device evaluator's ``(C, 3)`` scalar block.
+    """Aggregate the device evaluator's ``(C, EVAL_BLOCK_COLS)`` scalar
+    block.
 
-    ``block`` rows are per-client ``[mrr, hits10, count]`` as produced by
-    :class:`repro.core.evaluation.BatchedEvaluator` — the same weighted
-    average as :func:`weighted_average`, but from the one array an eval
-    boundary reads back instead of per-client dicts.
+    ``block`` rows are per-client ``[mrr, hits@1, hits@3, hits@10, count]``
+    as produced by :class:`repro.core.evaluation.BatchedEvaluator` — the
+    same weighted average as :func:`weighted_average`, but from the one
+    array an eval boundary reads back instead of per-client dicts.
     """
     block = np.asarray(block, dtype=np.float64)
-    total = float(block[:, 2].sum())
+    if block.shape[1] != len(RATE_KEYS) + 1:
+        raise ValueError(
+            f"eval block has {block.shape[1]} columns, expected "
+            f"{len(RATE_KEYS) + 1} ({RATE_KEYS} + count)"
+        )
+    total = float(block[:, -1].sum())
     if total == 0:
-        return {"mrr": 0.0, "hits10": 0.0, "count": 0}
-    return {
-        "mrr": float((block[:, 0] * block[:, 2]).sum() / total),
-        "hits10": float((block[:, 1] * block[:, 2]).sum() / total),
-        "count": int(total),
+        return _zero()
+    out = {
+        k: float((block[:, i] * block[:, -1]).sum() / total)
+        for i, k in enumerate(RATE_KEYS)
     }
+    out["count"] = int(total)
+    return out
 
 
 def first_round_reaching(history: list[tuple[int, float]], target: float) -> int | None:

@@ -46,8 +46,8 @@ device engines, and host-side numpy banks
 path.
 
 Evaluation on the device engines is itself device-resident
-(:mod:`repro.core.evaluation`): boundaries read back only a ``(C, 3)``
-``[mrr, hits@10, count]`` block, best-model snapshots are on-device params
+(:mod:`repro.core.evaluation`): boundaries read back only a ``(C, 5)``
+``[mrr, hits@1, hits@3, hits@10, count]`` block, best-model snapshots are on-device params
 copies taken when MRR improves, and entity tables cross the host exactly
 once — at the terminal snapshot materialization.  A terminal eval boundary
 is guaranteed even when ``rounds % eval_every != 0``.  The ``reference``
@@ -73,6 +73,7 @@ from repro.core.protocol import (
 )
 from repro.core.sparsify import sparsity_k
 from repro.core.state import CycleEngine, FederationState, SuperstepEngine
+from repro.core.store import TieredCycleEngine
 from repro.core.sync import round_kind
 from repro.data.partition import ClientData
 from repro.federated.client import KGEClient
@@ -80,7 +81,7 @@ from repro.federated.comm import CommLedger
 from repro.federated.metrics import aggregate_eval_block, weighted_average
 from repro.launch.mesh import make_federation_mesh
 
-ENGINES = ("fused", "batched", "reference", "superstep")
+ENGINES = ("fused", "batched", "reference", "superstep", "tiered")
 
 
 @dataclasses.dataclass
@@ -107,6 +108,22 @@ class FederatedConfig:
     # >1: pod mode — shard the client axis over a 1-D device mesh
     # (launch/mesh.py); requires a device engine and C % mesh_devices == 0
     mesh_devices: int = 0
+    # >1: entity-sharded pod mode — a 2-D (clients, entities) mesh; the
+    # padded entity/hist/residual state and the eval candidate scan shard
+    # over the entity axis so per-device memory scales as E_pad / shards.
+    # Bitwise identical to the unsharded engines (tests/test_eshard*.py).
+    # Total devices used = max(mesh_devices, 1) * mesh_entities.
+    mesh_entities: int = 0
+    # host-tiered embedding store (engine="tiered", or host_store=True as an
+    # alias): the device holds only the pinned shared prefix plus a
+    # temperature/LRU row cache — E_max becomes a config value instead of a
+    # device-memory obligation.  Training is lockstep (clients' train sets
+    # are truncated to the common minimum) and uses sparse-Adam segment
+    # semantics, so trajectories are NOT bitwise equal to the dense engines
+    # (they ARE bitwise invariant to cache_slots — see tests/test_store.py).
+    host_store: bool = False
+    cache_slots: int = 0  # 0 -> floor: exactly the working-view width W
+    stage_steps: int = 0  # batches per staging segment; 0 -> whole epoch
     sync_interval: int = 4
     eval_every: int = 5
     patience: int = 3
@@ -175,6 +192,20 @@ def run_federated(
         raise ValueError(
             f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
         )
+    if cfg.host_store or cfg.engine == "tiered":
+        if cfg.mesh_devices > 1 or cfg.mesh_entities > 1:
+            raise ValueError(
+                "the host-tiered engine is a host-loop path; it composes "
+                "with neither mesh_devices nor mesh_entities"
+            )
+        if cfg.engine not in ("tiered", "fused"):
+            raise ValueError(
+                f"host_store=True selects engine='tiered'; it conflicts "
+                f"with engine={cfg.engine!r}"
+            )
+        return _run_federated_tiered(
+            clients_data, num_global_entities, cfg, verbose
+        )
     clients = [
         KGEClient(
             d,
@@ -205,30 +236,37 @@ def run_federated(
 
     use_device = cfg.engine != "reference"
     mesh = None
-    if cfg.mesh_devices > 1:
+    entity_axis = None
+    if cfg.mesh_devices > 1 or cfg.mesh_entities > 1:
         if not use_device:
             raise ValueError(
-                "pod mode (mesh_devices > 1) requires a device engine, "
-                "not engine='reference'"
+                "pod mode (mesh_devices/mesh_entities > 1) requires a "
+                "device engine, not engine='reference'"
             )
-        mesh = make_federation_mesh(cfg.mesh_devices)
+        mesh = make_federation_mesh(
+            max(cfg.mesh_devices, 1),
+            entity_devices=max(cfg.mesh_entities, 1),
+        )
+        entity_axis = "entities" if cfg.mesh_entities > 1 else None
     evaluator = None
     if use_device:
         engine_cls = SuperstepEngine if cfg.engine == "superstep" else CycleEngine
         cycle = engine_cls(
             clients, views, num_global_entities,
             sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
-            codec=codec, mesh=mesh,
+            codec=codec, mesh=mesh, entity_axis=entity_axis,
         )
         state = cycle.init_state(clients, seed=cfg.seed + 777)
         pending: list = []  # (kind, device down_count | None) per round
         # device-resident batched eval: banks built ONCE, eval boundaries
-        # read back only a (C, 3) scalar block (no sync_clients round-trip)
+        # read back only a (C, EVAL_BLOCK_COLS) scalar block (no
+        # sync_clients round-trip)
         evaluator = BatchedEvaluator(
             clients_data, method=cfg.method, gamma=cfg.gamma,
             e_max=cycle.e_max, max_triples=cfg.max_eval_triples,
             splits=("valid", "test"),
             known=[c._known for c in clients], mesh=mesh,
+            entity_axis=entity_axis,
         )
     else:  # ragged numpy reference protocol keeps per-client histories
         rng = np.random.default_rng(cfg.seed + 777)
@@ -253,7 +291,7 @@ def run_federated(
         """Flush+evaluate at ``round_no``; True => early-stop.
 
         Device engines evaluate on device: ``block`` is the evaluator's
-        ``(C, 3)`` metric block when the superstep program already produced
+        ``(C, 5)`` metric block when the superstep program already produced
         it in-program, else the standalone compiled evaluator runs here —
         either way no entity table crosses the host, and the best-model
         snapshot is a cheap on-device copy taken only when MRR improves.
@@ -446,6 +484,118 @@ def _finish(
         test = weighted_average(
             [c.evaluate("test", cfg.max_eval_triples) for c in clients]
         )
+    return FederatedResult(
+        config=cfg,
+        eval_history=eval_history,
+        ledger=ledger,
+        best_round=int(best["round"]),
+        val_mrr_cg=float(best["mrr"]),
+        test_mrr_cg=float(test["mrr"]),
+        test_hits10_cg=float(test["hits10"]),
+        rounds_run=rounds_run,
+    )
+
+
+def _run_federated_tiered(
+    clients_data: list[ClientData],
+    num_global_entities: int,
+    cfg: FederatedConfig,
+    verbose: bool = False,
+) -> FederatedResult:
+    """The host-tiered simulation loop (engine="tiered" / host_store=True).
+
+    Same round schedule, ledger accounting, eval cadence, patience, and
+    best-snapshot protocol as the dense device engines, but federation
+    state lives in :class:`repro.core.store.HostTieredStore`: the device
+    holds the pinned shared prefix + a bounded row cache, and each eval
+    boundary materializes the full tables once (the tiered tradeoff — the
+    dense engines never move entity tables across the host).
+
+    The tiered engine trains clients in lockstep, so train sets are
+    truncated to the common minimum triple count up front.
+    """
+    n_tr = min(len(d.train) for d in clients_data)
+    if verbose and any(len(d.train) != n_tr for d in clients_data):
+        print(f"tiered engine: truncating train sets to lockstep ({n_tr} "
+              f"triples/client)")
+    train_data = [
+        dataclasses.replace(d, train=d.train[:n_tr]) for d in clients_data
+    ]
+
+    def mk_clients():
+        return [
+            KGEClient(
+                d, method=cfg.method, dim=cfg.dim, gamma=cfg.gamma,
+                batch_size=cfg.batch_size, num_negatives=cfg.num_negatives,
+                lr=cfg.lr,
+                adversarial_temperature=cfg.adversarial_temperature,
+                seed=cfg.seed,
+            )
+            for d in train_data
+        ]
+
+    clients = mk_clients()
+    views = build_comm_views(
+        [d.local_to_global for d in clients_data], num_global_entities
+    )
+    codec_spec = "int8" if cfg.quantize_upload else cfg.codec
+    codec = parse_codec_spec(codec_spec)
+    eng = TieredCycleEngine(
+        clients, views, num_global_entities,
+        sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
+        codec=codec, cache_slots=cfg.cache_slots,
+        stage_steps=cfg.stage_steps,
+    )
+    store, ts = eng.init_state(mk_clients(), seed=cfg.seed + 777)
+    evaluator = BatchedEvaluator(
+        clients_data, method=cfg.method, gamma=cfg.gamma, e_max=eng.e_max,
+        max_triples=cfg.max_eval_triples, splits=("valid", "test"),
+        known=[c._known for c in clients],
+    )
+    ledger = CommLedger()
+    pending: list = []
+    eval_history: list[tuple[int, float, float]] = []
+    best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
+    declines = 0
+    prev_mrr = -1.0
+    rounds_run = 0
+    ee = max(cfg.eval_every, 10) if cfg.protocol == "single" else cfg.eval_every
+
+    for t in range(cfg.rounds):
+        rounds_run = t + 1
+        kind = round_kind(t, cfg.protocol, cfg.sync_interval)
+        ts, down, _loss = eng.run_cycle(store, ts, kind)
+        pending.append((kind, down if kind == "sparse" else None))
+        if (t + 1) % ee == 0 or (t + 1) == cfg.rounds:
+            _flush_ledger(
+                ledger, pending, views, codec, cfg.dim, eng.k_per_client
+            )
+            params = eng.materialize_params(store, ts)
+            val = aggregate_eval_block(evaluator.evaluate(params, "valid"))
+            eval_history.append((t + 1, val["mrr"], val["hits10"]))
+            if verbose:
+                print(
+                    f"round {t + 1:4d}  val MRR {val['mrr']:.4f}  "
+                    f"Hits@10 {val['hits10']:.4f}  "
+                    f"params {ledger.params_transmitted:.3e}  "
+                    f"cache hit {store.hit_rate:.3f}"
+                )
+            if val["mrr"] > best["mrr"]:
+                best = {
+                    "mrr": val["mrr"], "round": t + 1, "hits": val["hits10"],
+                    "snap": {k: np.asarray(v) for k, v in params.items()},
+                }
+            declines = declines + 1 if val["mrr"] < prev_mrr else 0
+            prev_mrr = val["mrr"]
+            if declines >= cfg.patience:
+                break
+
+    _flush_ledger(ledger, pending, views, codec, cfg.dim, eng.k_per_client)
+    if best["snap"] is not None:
+        params = {k: jnp.asarray(v) for k, v in best["snap"].items()}
+    else:
+        params = eng.materialize_params(store, ts)
+    test = aggregate_eval_block(evaluator.evaluate(params, "test"))
     return FederatedResult(
         config=cfg,
         eval_history=eval_history,

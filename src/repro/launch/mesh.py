@@ -32,18 +32,35 @@ def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
 
 
 def make_federation_mesh(
-    num_devices: int, axis_name: str = "clients"
+    num_devices: int,
+    axis_name: str = "clients",
+    entity_devices: int = 1,
+    entity_axis: str = "entities",
 ) -> jax.sharding.Mesh:
-    """1-D client-axis mesh for the federation engines (pod-mode simulation).
+    """Mesh for the federation engines (pod-mode simulation).
 
-    ``federated/simulation.py`` builds this when ``mesh_devices > 1`` and
-    hands it to :class:`repro.core.state.CycleEngine` /
+    ``federated/simulation.py`` builds this when ``mesh_devices > 1`` or
+    ``mesh_entities > 1`` and hands it to
+    :class:`repro.core.state.CycleEngine` /
     :class:`~repro.core.state.SuperstepEngine`, which ``shard_map`` their
-    per-cycle / per-superstep programs over the ``clients`` axis (the client
-    count must be divisible by ``num_devices``).  The only collectives are
-    the round's one all-gather (sparse) / psum (sync).
+    per-cycle / per-superstep programs over it.
+
+    * ``entity_devices == 1`` (default): the historical 1-D ``clients`` mesh
+      — the client count must be divisible by ``num_devices``, and the only
+      collectives are the round's one all-gather (sparse) / psum (sync).
+    * ``entity_devices > 1``: a 2-D ``(clients, entities)`` mesh.  The
+      second axis block-shards every padded row-major table — entity
+      embeddings + Adam moments along ``E_pad``, upload history / EF
+      residuals along ``Ns_pad``, eval filter words along the packed word
+      axis — so per-device resident state shrinks by ``entity_devices``
+      while staying bitwise identical to the unsharded engines
+      (:mod:`repro.core.eshard`).
     """
-    return _make_mesh((num_devices,), (axis_name,))
+    if entity_devices <= 1:
+        return _make_mesh((num_devices,), (axis_name,))
+    return _make_mesh(
+        (num_devices, entity_devices), (axis_name, entity_axis)
+    )
 
 
 def mesh_context(mesh: jax.sharding.Mesh):

@@ -54,14 +54,32 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--sparsity", type=float, default=0.4)
     ap.add_argument("--engine", default="fused",
-                    choices=["fused", "superstep", "batched", "reference"],
+                    choices=["fused", "superstep", "batched", "reference",
+                             "tiered"],
                     help="fused = one device-resident program per cycle; "
                          "superstep = one scanned program per ISM span; "
                          "batched = per-round jitted programs (oracle); "
-                         "reference = numpy host protocol")
+                         "reference = numpy host protocol; "
+                         "tiered = host-tiered embedding store "
+                         "(E_max-scalable, see --host-store)")
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help=">1: pod mode — shard the client axis over a 1-D "
                          "device mesh (clients must divide evenly)")
+    ap.add_argument("--mesh-entities", type=int, default=0,
+                    help=">1: shard the ENTITY axis over a 2-D (clients, "
+                         "entities) mesh — per-device entity state scales as "
+                         "E_pad / shards, bitwise identical to unsharded")
+    ap.add_argument("--host-store", action="store_true",
+                    help="host-tiered embedding store (engine='tiered'): "
+                         "device holds only the shared prefix + a bounded "
+                         "row cache; E_max becomes a config value, not a "
+                         "device-memory obligation")
+    ap.add_argument("--cache-slots", type=int, default=0,
+                    help="tiered engine device cache rows per client "
+                         "(0 = floor: exactly the working-view width)")
+    ap.add_argument("--stage-steps", type=int, default=0,
+                    help="tiered engine batches per staging segment — sets "
+                         "the device working-set width (0 = whole epoch)")
     ap.add_argument("--codec", type=_codec_spec, default="identity",
                     metavar="NAME[:KEY=VAL,...]",
                     help="wire codec spec (see the registered-codec listing "
@@ -98,6 +116,9 @@ def main() -> None:
         sparsity_p=args.sparsity, sync_interval=args.sync_interval,
         eval_every=args.eval_every, max_eval_triples=args.max_eval_triples,
         engine=args.engine, mesh_devices=args.mesh_devices,
+        mesh_entities=args.mesh_entities,
+        host_store=args.host_store or args.engine == "tiered",
+        cache_slots=args.cache_slots, stage_steps=args.stage_steps,
         codec=args.codec, quantize_upload=args.quantize_upload,
         seed=args.seed,
     )

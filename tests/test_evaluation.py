@@ -123,10 +123,11 @@ def test_batched_ranks_exactly_equal_oracle(seed, method):
             np.testing.assert_array_equal(oracle[:, 1], rh[c, :n], err_msg=split)
             m = cl.evaluate(split, cap)
             per_client.append(m)
-            assert int(block[c, 2]) == m["count"]
+            assert int(block[c, 4]) == m["count"]
             # float metric from identical integer ranks: f32 vs f64 only
             assert abs(block[c, 0] - m["mrr"]) < 1e-6
-            assert abs(block[c, 1] - m["hits10"]) < 1e-6
+            for j, key in enumerate(("hits1", "hits3", "hits10"), start=1):
+                assert abs(block[c, j] - m[key]) < 1e-6
         agg = aggregate_eval_block(block)
         want = weighted_average(per_client)
         assert agg["count"] == want["count"]
@@ -197,8 +198,8 @@ def test_superstep_eval_cache_keyed_on_evaluator():
     sb = engine.init_state(mk(), seed=1)
     _, _, _, block_b = engine.superstep_with_eval(sb, kinds, ev_b, "valid")
     # same rounds, different banks/chunking: counts differ, programs must too
-    assert int(np.asarray(block_a)[:, 2].sum()) != int(
-        np.asarray(block_b)[:, 2].sum()
+    assert int(np.asarray(block_a)[:, -1].sum()) != int(
+        np.asarray(block_b)[:, -1].sum()
     )
     assert len(engine._superstep_cache) == 2
 
@@ -329,24 +330,30 @@ def test_pod_eval_matches_host():
 
 # -------------------------------------------------------- metric aggregation
 def test_aggregate_eval_block_matches_weighted_average():
-    block = np.asarray([[0.5, 0.8, 10.0], [0.25, 0.4, 30.0], [0.0, 0.0, 0.0]])
+    block = np.asarray([
+        [0.5, 0.3, 0.6, 0.8, 10.0],
+        [0.25, 0.1, 0.2, 0.4, 30.0],
+        [0.0, 0.0, 0.0, 0.0, 0.0],
+    ])
     dicts = [
-        {"mrr": 0.5, "hits10": 0.8, "count": 10},
-        {"mrr": 0.25, "hits10": 0.4, "count": 30},
-        {"mrr": 0.0, "hits10": 0.0, "count": 0},
+        {"mrr": 0.5, "hits1": 0.3, "hits3": 0.6, "hits10": 0.8, "count": 10},
+        {"mrr": 0.25, "hits1": 0.1, "hits3": 0.2, "hits10": 0.4, "count": 30},
+        {"mrr": 0.0, "hits1": 0.0, "hits3": 0.0, "hits10": 0.0, "count": 0},
     ]
     a, w = aggregate_eval_block(block), weighted_average(dicts)
     assert a["count"] == w["count"]
-    assert abs(a["mrr"] - w["mrr"]) < 1e-12
-    assert abs(a["hits10"] - w["hits10"]) < 1e-12
-    assert aggregate_eval_block(np.zeros((2, 3))) == {
-        "mrr": 0.0, "hits10": 0.0, "count": 0,
+    for key in ("mrr", "hits1", "hits3", "hits10"):
+        assert abs(a[key] - w[key]) < 1e-12
+    assert aggregate_eval_block(np.zeros((2, 5))) == {
+        "mrr": 0.0, "hits1": 0.0, "hits3": 0.0, "hits10": 0.0, "count": 0,
     }
+    with pytest.raises(ValueError, match="columns"):
+        aggregate_eval_block(np.zeros((2, 3)))
 
 
 def test_eval_state_built_once_and_device_resident():
     """Banks are jax arrays built at construction; evaluate() reads back
-    only the (C, 3) block."""
+    only the (C, 5) block."""
     kg, cd, clients, views = _federation(9)
     engine = CycleEngine(clients, views, kg.num_entities,
                          sparsity_p=0.5, local_epochs=1)
@@ -357,4 +364,4 @@ def test_eval_state_built_once_and_device_resident():
             assert isinstance(leaf, jax.Array)
     state = engine.init_state(clients, seed=0)
     block = ev.evaluate(state.arrays.params, "valid")
-    assert block.shape == (len(clients), 3)
+    assert block.shape == (len(clients), 5)

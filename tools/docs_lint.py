@@ -5,6 +5,11 @@ and ROADMAP.md: external (``http``/``mailto``) and intra-page (``#``)
 targets are skipped; everything else must exist on disk relative to the
 linking file (anchors stripped).  Exits non-zero listing broken links.
 
+Also checks benchmark-record coverage: every ``BENCH_*.json`` a CI step
+produces (parsed from .github/workflows/ci.yml) must be mentioned in
+EXPERIMENTS.md alongside its producer script, so the recorded perf
+trajectory stays documented as producers are added.
+
   python tools/docs_lint.py
 
 CI pairs this with ``python -m compileall -q src`` as the docs-lint step.
@@ -40,13 +45,38 @@ def broken_links() -> list[str]:
     return broken
 
 
+BENCH_STEP = re.compile(
+    r"python\s+benchmarks/(\w+)\.py\s+--json\s+(BENCH_\w+\.json)"
+)
+
+
+def undocumented_benchmarks() -> list[str]:
+    """CI-produced BENCH_*.json records that EXPERIMENTS.md never mentions."""
+    ci = ROOT / ".github" / "workflows" / "ci.yml"
+    exp = ROOT / "EXPERIMENTS.md"
+    if not ci.exists() or not exp.exists():
+        return []
+    text = exp.read_text()
+    missing = []
+    for script, record in BENCH_STEP.findall(ci.read_text()):
+        if record not in text:
+            missing.append(f"{record} (benchmarks/{script}.py)")
+        elif f"{script}.py" not in text:
+            missing.append(f"benchmarks/{script}.py (produces {record})")
+    return missing
+
+
 def main() -> int:
     bad = broken_links()
     for b in bad:
         print(f"BROKEN LINK  {b}")
+    undoc = undocumented_benchmarks()
+    for u in undoc:
+        print(f"UNDOCUMENTED BENCH RECORD  {u} — add it to EXPERIMENTS.md")
     files = len(doc_files())
-    if bad:
-        print(f"{len(bad)} broken link(s) across {files} file(s)")
+    if bad or undoc:
+        print(f"{len(bad)} broken link(s), {len(undoc)} undocumented "
+              f"benchmark record(s) across {files} file(s)")
         return 1
     print(f"docs lint OK ({files} files)")
     return 0
