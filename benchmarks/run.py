@@ -27,6 +27,7 @@ JSON_PRODUCERS = {
     "BENCH_codecs.json": ("codecs", "codecs"),
     "BENCH_eval.json": ("eval_throughput", "eval_throughput"),
     "BENCH_scale.json": ("scale_entities", "scale_entities"),
+    "BENCH_churn.json": ("churn", "churn"),
 }
 
 
@@ -80,7 +81,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: kernels,engine,cycle,sstep,codecs,eval,"
                          "scale,table1,table2,table3,table4,table5,table6,"
-                         "fig2,sweep,q8,roofline")
+                         "fig2,sweep,churn,q8,roofline")
     ap.add_argument("--aggregate", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="don't run suites; merge the BENCH_*.json records "
@@ -155,6 +156,7 @@ def main() -> None:
         ("table6", "table6_batch_size"),
         ("fig2", "fig2_sync_ablation"),
         ("sweep", "sweep_sparsity"),
+        ("churn", "churn"),
         ("q8", "feds_q8"),
     ]
     for key, mod_name in suites:

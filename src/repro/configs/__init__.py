@@ -3,6 +3,13 @@
 Each module defines ``CONFIG`` (the exact assigned dimensions, source cited)
 and ``smoke()`` (a reduced same-family variant: <=2 layers, d_model <= 512,
 <= 4 experts) used by the CPU smoke tests.
+
+Liveness audit (2026-08): none of these modules are seed-era dead weight —
+every arch in ``_ARCHS`` is exercised by tier-1 tests
+(tests/test_stack_structure.py, tests/test_models_zoo.py via
+``get_smoke_config``) and by ``repro.launch.dryrun --all`` /
+``repro.launch.serve``, which iterate ``list_archs()``.  Removing one
+breaks those suites; adding one here is all it takes to cover a new arch.
 """
 from __future__ import annotations
 

@@ -156,16 +156,36 @@ def batched_sparse_round(
     axis_name: Optional[str],
     res: Optional[jnp.ndarray] = None,  # (C_local, Ns_max, D) EF residuals
     entity_axis: Optional[str] = None,
+    faults=None,  # Optional[repro.core.faults.RoundFaults] of (C_local,) masks
+    straggler: Optional[jnp.ndarray] = None,  # (C_local,) f32 straggler set
+    queue=None,  # (q_idx, q_val, q_msk) straggler in-flight message buffers
 ):
     """One sparse FedS round over padded batched client state.
 
     Returns ``(emb', hist', down_count)``, plus ``res'`` when ``res`` is
-    given.  With an error-feedback codec (``codec.has_residual``) the
-    residual of each *uploaded* row — what the codec's lossy round-trip
-    dropped — is banked in ``res`` and re-injected into that row's wire
-    value the next time it is selected; rows not uploaded this round keep
-    their banked residual untouched.  Non-residual codecs pass ``res``
-    through unchanged.
+    given, plus the advanced ``queue`` when ``queue`` is given.  With an
+    error-feedback codec (``codec.has_residual``) the residual of each
+    *uploaded* row — what the codec's lossy round-trip dropped — is banked
+    in ``res`` and re-injected into that row's wire value the next time it
+    is selected; rows not uploaded this round keep their banked residual
+    untouched.  Non-residual codecs pass ``res`` through unchanged.
+
+    With ``faults`` (:class:`repro.core.faults.RoundFaults`), participation
+    gates what is *computed* (history/residual refresh, download selection),
+    ``part * up_ok`` gates what is *delivered* into the Eq. 3 aggregate, and
+    ``part * dn_ok`` gates whether the Eq. 4 apply lands.  A dropped upload
+    still refreshed the sender's history and residual bank — the client
+    cannot know the message was lost.  ``faults=None`` compiles exactly the
+    fault-free program.
+
+    With ``queue`` (plus the static ``straggler`` indicator), clients in the
+    straggler set contribute the message at the HEAD of their fixed-depth
+    queue to this round's aggregate — the upload they computed ``lag``
+    sparse rounds ago — while this round's freshly-computed (and
+    delivery-masked) message is pushed at the tail.  Non-straggler pushes
+    are masked to zero, so their queues stay empty.  Eq. 3's
+    own-contribution subtraction and priority discount are built from the
+    *contributed* message, history/residual refresh from the *fresh* one.
 
     With ``entity_axis`` the ``(..., D)`` row buffers (``emb``, ``hist``,
     ``res``) are this shard's ``(C, Ns_pad / n_shards, D)`` blocks of a
@@ -184,6 +204,8 @@ def batched_sparse_round(
             "pass the (C, Ns_max, D) res buffer (CycleEngine/SuperstepEngine "
             "thread it through FederationState)"
         )
+    if queue is not None and straggler is None:
+        raise ValueError("straggler indicator required with a message queue")
     ea = entity_axis
     cl, ns_blk, d = emb.shape  # ns_blk == full Ns_max when unsharded
     gid_blk = eshard.local_block(gid, ea, ns_blk)
@@ -201,20 +223,25 @@ def batched_sparse_round(
     up_mask = (slot < k[:, None]) & jnp.take_along_axis(valid, up_idx, axis=1)
     up_maskf = up_mask.astype(emb.dtype)
 
-    # (cl, ns_blk) 0/1 — which of my local rows went upstream this round
+    # (cl, ns_blk) 0/1 — which of my local rows went upstream this round;
+    # under faults only participating clients compute an upload at all
+    sent_maskf = up_maskf if faults is None else up_maskf * faults.part[:, None]
     uploaded = eshard.scatter_add_vec(
-        jnp.zeros((cl, ns_blk), emb.dtype), up_idx, up_maskf, ea
+        jnp.zeros((cl, ns_blk), emb.dtype), up_idx, sent_maskf, ea
     )
     new_hist = jnp.where(uploaded[:, :, None] > 0, emb, hist)
 
     vals = eshard.dist_take_rows(emb, up_idx, ea)  # (cl, k_max, d)
     if codec.has_residual:
         # error feedback: re-inject the banked residual before encoding, bank
-        # the fresh encode error after.  Only uploaded rows participate.
+        # the fresh encode error after.  Only rows a participating client
+        # actually encoded refresh the bank — a dropped-in-flight upload
+        # still banked its error (the sender cannot know), an absent client
+        # banked nothing.
         res_sel = eshard.dist_take_rows(res, up_idx, ea)
         corrected = vals + res_sel * up_maskf[:, :, None]
         vals = codec.roundtrip(corrected.reshape(-1, d)).reshape(cl, k_max, d)
-        err_rows = (corrected - vals) * up_maskf[:, :, None]
+        err_rows = (corrected - vals) * sent_maskf[:, :, None]
         err_full = eshard.scatter_add_rows(
             jnp.zeros((cl, ns_blk, d), emb.dtype), up_idx, err_rows, ea
         )
@@ -222,33 +249,79 @@ def batched_sparse_round(
     else:
         vals = codec.roundtrip(vals.reshape(-1, d)).reshape(cl, k_max, d)
         new_res = res
-    # this client's wire-coded uploads scattered back to row positions, for
-    # the Eq. 3 own-contribution subtraction below
+
+    # the message CONTRIBUTED to this round's Eq. 3 aggregate: normally the
+    # fresh wire-coded upload (delivery-masked under faults); stragglers
+    # contribute the head of their in-flight queue — the message they sent
+    # ``lag`` sparse rounds ago — while the fresh message is pushed at the
+    # tail (masked to zero for non-stragglers, whose queues stay empty)
+    if faults is None:
+        msg_maskf = up_maskf
+    else:
+        msg_maskf = up_maskf * (faults.part * faults.up_ok)[:, None]
+    if queue is not None:
+        q_idx, q_val, q_msk = queue
+        stragb = straggler[:, None] > 0.5
+        contrib_idx = jnp.where(stragb, q_idx[:, 0], up_idx)
+        contrib_val = jnp.where(stragb[:, :, None], q_val[:, 0], vals)
+        contrib_msk = jnp.where(stragb, q_msk[:, 0], msg_maskf)
+        new_queue = (
+            jnp.concatenate([q_idx[:, 1:], up_idx[:, None]], axis=1),
+            jnp.concatenate([q_val[:, 1:], vals[:, None]], axis=1),
+            jnp.concatenate(
+                [q_msk[:, 1:], (msg_maskf * straggler[:, None])[:, None]],
+                axis=1,
+            ),
+        )
+    else:
+        contrib_idx, contrib_val, contrib_msk = up_idx, vals, msg_maskf
+        new_queue = None
+
+    # this client's wire-coded contribution scattered back to row positions,
+    # for the Eq. 3 own-contribution subtraction below
     own_wire = eshard.scatter_add_rows(
-        jnp.zeros((cl, ns_blk, d), emb.dtype), up_idx,
-        vals * up_maskf[:, :, None], ea,
+        jnp.zeros((cl, ns_blk, d), emb.dtype), contrib_idx,
+        contrib_val * contrib_msk[:, :, None], ea,
     )
+    if faults is None and queue is None:
+        uploaded_contrib = uploaded
+    else:
+        uploaded_contrib = eshard.scatter_add_vec(
+            jnp.zeros((cl, ns_blk), emb.dtype), contrib_idx, contrib_msk, ea
+        )
 
     # -- exchange: one all-gather of fixed-size buffers (no-op on host)
-    up_gid = jnp.where(up_mask, jnp.take_along_axis(gid, up_idx, axis=1), num_global)
+    if faults is None and queue is None:
+        up_gid = jnp.where(
+            up_mask, jnp.take_along_axis(gid, up_idx, axis=1), num_global
+        )
+    else:
+        up_gid = jnp.where(
+            contrib_msk > 0,
+            jnp.take_along_axis(gid, contrib_idx, axis=1), num_global,
+        )
+    ex_vals, ex_msk = contrib_val, contrib_msk
     if axis_name is not None:
         up_gid = jax.lax.all_gather(up_gid, axis_name).reshape(-1, k_max)
-        vals = jax.lax.all_gather(vals, axis_name).reshape(-1, k_max, d)
-        up_maskf = jax.lax.all_gather(up_maskf, axis_name).reshape(-1, k_max)
+        ex_vals = jax.lax.all_gather(ex_vals, axis_name).reshape(-1, k_max, d)
+        ex_msk = jax.lax.all_gather(ex_msk, axis_name).reshape(-1, k_max)
 
     # -- Eq. 3 over the global entity space (+1 padding segment); under
     # entity sharding this runs redundantly per shard on replicated inputs,
-    # preserving the unsharded f32 summation order bit for bit
+    # preserving the unsharded f32 summation order bit for bit.  The
+    # existence weights are already existence x participation: absent or
+    # undelivered messages arrive with mask 0, so a zero-participant round
+    # produces an all-zero aggregate and priority — a no-op, not a NaN.
     agg, cnt = segment_aggregate(
         up_gid.reshape(-1),
-        (vals * up_maskf[:, :, None]).reshape(-1, d),
-        up_maskf.reshape(-1),
+        (ex_vals * ex_msk[:, :, None]).reshape(-1, d),
+        ex_msk.reshape(-1),
         num_global + 1,
     )
 
     # -- personalized views: subtract the own wire-coded contribution
     agg_rows = agg[gid_blk] - own_wire
-    pri_rows = (cnt[gid_blk] - uploaded) * validf
+    pri_rows = (cnt[gid_blk] - uploaded_contrib) * validf
     # downstream leg crosses the wire too
     agg_rows = codec.roundtrip(agg_rows.reshape(-1, d)).reshape(cl, ns_blk, d)
 
@@ -258,10 +331,17 @@ def batched_sparse_round(
     dn_mask = (slot < k[:, None]) & (
         eshard.dist_take_vec(pri_rows, dn_idx, ea) > 0
     )
+    if faults is not None:
+        # the server only selects (and bills) rows for participating clients
+        dn_mask = dn_mask & (faults.part[:, None] > 0.5)
     sign = eshard.scatter_add_vec(
         jnp.zeros((cl, ns_blk), jnp.int8), dn_idx, dn_mask.astype(jnp.int8), ea
     )
     down_count = dn_mask.sum(axis=1).astype(jnp.int32)
+    if faults is not None:
+        # a lost download never lands; the bytes were still sent (and the
+        # down_count above — which drives the ledger — already charged them)
+        sign = sign * (faults.dn_ok[:, None] > 0.5).astype(jnp.int8)
 
     # -- Eq. 4 masked row update, fused over the flattened client axis
     new_emb = kernel_ops.sparse_apply(
@@ -270,9 +350,12 @@ def batched_sparse_round(
         pri_rows.reshape(-1),
         sign.reshape(-1),
     ).reshape(cl, ns_blk, d).astype(emb.dtype)
-    if res is None:
-        return new_emb, new_hist, down_count
-    return new_emb, new_hist, down_count, new_res
+    out = (new_emb, new_hist, down_count)
+    if res is not None:
+        out = out + (new_res,)
+    if queue is not None:
+        out = out + (new_queue,)
+    return out
 
 
 def batched_sync_round(
@@ -283,12 +366,23 @@ def batched_sync_round(
     num_global: int,
     axis_name: Optional[str],
     entity_axis: Optional[str] = None,
+    faults=None,  # Optional[repro.core.faults.RoundFaults] of (C_local,) masks
 ):
     """Intermittent synchronization (§III-E): FedE mean over owning clients.
 
     Returns (synchronized rows, refreshed history).  History is the PRE-sync
     rows — the protocol refreshes it with what was uploaded, matching
     :func:`repro.core.protocol.full_upload`.
+
+    With ``faults``, the mean runs over delivered uploads only
+    (``part * up_ok`` existence weights) and lands only on clients that
+    participate and receive (``part * dn_ok``) — the recovery point for
+    clients that missed the span.  Entities whose every owner is absent this
+    round keep their rows: the ``cnt > 0`` guard below masks them out of the
+    mean instead of writing the clamped-denominator zero row (the latent
+    zero-participant divide-by-zero edge in the Eq. 3 weight normalization;
+    unreachable without faults since every valid row contributes itself,
+    so the guard changes nothing in fault-free programs).
 
     With ``entity_axis``, ``emb`` is this shard's slot block; the blocks are
     all-gathered once and the Eq. 3-style segment mean computed redundantly
@@ -300,6 +394,8 @@ def batched_sync_round(
     emb_full = eshard.all_blocks(emb, entity_axis)
     cl, ns, d = emb_full.shape
     validf = valid.astype(emb.dtype)
+    if faults is not None:
+        validf = validf * (faults.part * faults.up_ok)[:, None]
     ids = jnp.where(valid, gid, num_global).reshape(-1)
     total, cnt = segment_aggregate(
         ids, (emb_full * validf[:, :, None]).reshape(-1, d), validf.reshape(-1),
@@ -309,7 +405,10 @@ def batched_sync_round(
         total = jax.lax.psum(total, axis_name)
         cnt = jax.lax.psum(cnt, axis_name)
     mean = total / jnp.maximum(cnt, 1.0)[:, None]
-    new_emb = jnp.where(valid[:, :, None], mean[gid], emb_full)
+    live = valid & (cnt[gid] > 0)
+    if faults is not None:
+        live = live & ((faults.part * faults.dn_ok)[:, None] > 0.5)
+    new_emb = jnp.where(live[:, :, None], mean[gid], emb_full)
     if entity_axis is None:
         return new_emb, emb
     return eshard.local_block(new_emb, entity_axis, blk), emb
@@ -364,9 +463,26 @@ class RoundEngine:
         sync_core = functools.partial(
             batched_sync_round, num_global=self.num_global, axis_name=axis,
         )
+        def sparse_faulted(emb, hist, gid, valid, k, jitter, part, up_ok, dn_ok):
+            from repro.core.faults import RoundFaults
+
+            return sparse_core(
+                emb, hist, gid, valid, k, jitter,
+                faults=RoundFaults(part, up_ok, dn_ok),
+            )
+
+        def sync_faulted(emb, gid, valid, part, up_ok, dn_ok):
+            from repro.core.faults import RoundFaults
+
+            return sync_core(
+                emb, gid, valid, faults=RoundFaults(part, up_ok, dn_ok)
+            )
+
         if mesh is None:
             self._sparse = jax.jit(sparse_core)
             self._sync = jax.jit(sync_core)
+            self._sparse_faulted = jax.jit(sparse_faulted)
+            self._sync_faulted = jax.jit(sync_faulted)
         else:
             p = jax.sharding.PartitionSpec(axis_name)
             self._sparse = jax.jit(shard_map(
@@ -375,6 +491,14 @@ class RoundEngine:
             ))
             self._sync = jax.jit(shard_map(
                 sync_core, mesh=mesh, in_specs=(p, p, p), out_specs=(p, p),
+            ))
+            self._sparse_faulted = jax.jit(shard_map(
+                sparse_faulted, mesh=mesh,
+                in_specs=(p,) * 9, out_specs=(p, p, p),
+            ))
+            self._sync_faulted = jax.jit(shard_map(
+                sync_faulted, mesh=mesh,
+                in_specs=(p,) * 6, out_specs=(p, p),
             ))
 
     # ------------------------------------------------------- host transfers
@@ -402,15 +526,40 @@ class RoundEngine:
         emb: jnp.ndarray,  # (C, Ns_max, D)
         hist: jnp.ndarray,  # (C, Ns_max, D)
         jitter: Optional[jnp.ndarray] = None,  # (C, Ns_max) in [0, 1)
+        faults=None,  # Optional[repro.core.faults.RoundFaults] of (C,) masks
     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """One sparse FedS round.  Returns (emb', hist', down_count (C,))."""
+        """One sparse FedS round.  Returns (emb', hist', down_count (C,)).
+
+        ``faults`` injects per-round participation / message-drop masks
+        (:mod:`repro.core.faults`).  RoundEngine is stateless per round, so
+        straggler queues (which need carried state) are the cycle engines'
+        job — exactly like EF residuals.
+        """
         if jitter is None:
             jitter = jnp.zeros((self.num_clients, self.ns_max), jnp.float32)
         # halve after the f32 cast: float64 values in [1-2^-25, 1) round to
         # exactly 1.0f, which would tie with the next priority level
         jitter = jnp.asarray(jitter, jnp.float32) * 0.5
-        return self._sparse(emb, hist, self._gid, self._valid, self._k, jitter)
+        if faults is None:
+            return self._sparse(
+                emb, hist, self._gid, self._valid, self._k, jitter
+            )
+        return self._sparse_faulted(
+            emb, hist, self._gid, self._valid, self._k, jitter,
+            jnp.asarray(faults.part, jnp.float32),
+            jnp.asarray(faults.up_ok, jnp.float32),
+            jnp.asarray(faults.dn_ok, jnp.float32),
+        )
 
-    def sync_round(self, emb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    def sync_round(
+        self, emb: jnp.ndarray, faults=None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """One full-synchronization round.  Returns (emb', hist')."""
-        return self._sync(emb, self._gid, self._valid)
+        if faults is None:
+            return self._sync(emb, self._gid, self._valid)
+        return self._sync_faulted(
+            emb, self._gid, self._valid,
+            jnp.asarray(faults.part, jnp.float32),
+            jnp.asarray(faults.up_ok, jnp.float32),
+            jnp.asarray(faults.dn_ok, jnp.float32),
+        )

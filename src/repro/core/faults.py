@@ -1,0 +1,257 @@
+"""Declarative, seeded fault injection for the federated engines.
+
+The paper (like FedR and PFedEG) simulates a perfectly reliable federation:
+every client participates in every round and every message arrives.  This
+module makes client unreliability a first-class *input* to the engines — a
+:class:`FaultSchedule` describes, declaratively:
+
+* **partial participation** — each client joins round ``t`` with Bernoulli
+  probability ``participation``;
+* **message drops** — an upload (resp. download) sent by a participating
+  client is lost in flight with probability ``drop_upload``
+  (``drop_download``);
+* **stragglers** — a static set of clients whose uploads always arrive
+  ``lag`` sparse rounds late (buffered on device, folded into Eq. 3 on
+  arrival).
+
+and :func:`draw_round_faults` turns it into the per-round ``(C,)`` masks the
+round functions consume.  The draw is a *pure function of the absolute round
+index*: ``fold_in(PRNGKey(seed), t)`` keyed per leg — so the host ledger
+replay, the numpy reference oracle, and the device programs (where ``t`` is
+a traced scan carry) all see bit-identical masks without any cross-path
+state.  ``threefry`` is deterministic across host/device, which is what
+keeps ``reference == batched == fused == superstep`` an equivalence
+contract *under any schedule*.
+
+Mask semantics (shared by every engine path):
+
+* ``part[c]``       — client ``c`` participates: it trains' upload is
+  *computed* (history / EF residuals refresh, upload bytes are logged) and
+  it is served a download (download bytes are logged).
+* ``part * up_ok``  — the upload is *delivered*: it enters the Eq. 3
+  aggregate.  A dropped upload still refreshed the sender's history and
+  residual bank (the client cannot know the message was lost), which
+  realistically poisons error feedback.
+* ``part * dn_ok``  — the download is *received*: Eq. 4 applies.  The
+  server still selected and sent the rows (bytes are logged on ``part``).
+
+Eq. 3's existence weights become ``existence x participation``; a round in
+which nobody participates degrades to a no-op with a ledger entry — the
+zero-contributor guard in :func:`repro.core.engine.batched_sync_round`
+keeps all-absent entity rows out of the mean instead of dividing by the
+clamped zero count.
+
+The *trivial* schedule (all-present, no drops, no stragglers) is detected
+statically: engines given a trivial schedule compile exactly the pre-fault
+programs, so the all-present case is bitwise identical to an unfaulted run
+by construction.  ``force=True`` is a testing hook that keeps the fault
+machinery in the compiled program even when the schedule is trivial (all
+drawn masks are then deterministically all-ones — ``bernoulli(key, 1.0)``
+is always True), which is how the chaos property harness asserts that the
+mask plumbing itself is bitwise neutral.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RoundFaults(NamedTuple):
+    """Per-round ``(C,)`` float32 0/1 masks, one draw per leg."""
+
+    part: jnp.ndarray  # 1.0 -> client participates this round
+    up_ok: jnp.ndarray  # 1.0 -> its upload survives the wire
+    dn_ok: jnp.ndarray  # 1.0 -> its download survives the wire
+
+
+class FaultArrays(NamedTuple):
+    """Device-resident fault state; every leaf leads with the client axis.
+
+    Carried inside :class:`repro.core.state.StateArrays` so it rides the
+    same scan/donation/checkpoint plumbing as the model state.  The
+    straggler queue holds in-flight upload messages (selected slot indices,
+    wire-coded values, delivery masks) for ``lag`` sparse rounds; it is
+    zero-width (``L = 0``) when the schedule has no stragglers, so
+    straggler-free runs pay no carry traffic for it.
+    """
+
+    age: jnp.ndarray  # (C,) int32 rounds since the client last participated
+    q_idx: jnp.ndarray  # (C, L, k_max) int32 selected slot indices
+    q_val: jnp.ndarray  # (C, L, k_max, D) f32 wire-coded upload values
+    q_msk: jnp.ndarray  # (C, L, k_max) f32 delivery mask (0 = empty/lost)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """Declarative, seeded description of federation unreliability."""
+
+    participation: float = 1.0  # per-round Bernoulli keep probability
+    drop_upload: float = 0.0  # P(lose an upload in flight)
+    drop_download: float = 0.0  # P(lose a download in flight)
+    stragglers: Tuple[int, ...] = ()  # client ids with delayed uploads
+    lag: int = 0  # sparse rounds a straggler upload is delayed by
+    seed: int = 0  # fault PRNG seed (independent of the training key)
+    force: bool = False  # keep fault machinery compiled in even if trivial
+
+    def __post_init__(self):
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}"
+            )
+        for name in ("drop_upload", "drop_download"):
+            v = getattr(self, name)
+            if not (0.0 <= v < 1.0):
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+        ids = tuple(int(c) for c in self.stragglers)
+        if len(set(ids)) != len(ids) or any(c < 0 for c in ids):
+            raise ValueError(f"stragglers must be unique non-negative ids, got {ids}")
+        object.__setattr__(self, "stragglers", tuple(sorted(ids)))
+        if self.stragglers and self.lag < 1:
+            raise ValueError("stragglers given but lag < 1")
+        if not self.stragglers and self.lag:
+            raise ValueError("lag given without stragglers")
+
+    @property
+    def trivial(self) -> bool:
+        """True when the schedule cannot change any trajectory (and is not
+        forced): engines then compile the exact pre-fault programs."""
+        return (
+            not self.force
+            and self.participation >= 1.0
+            and self.drop_upload == 0.0
+            and self.drop_download == 0.0
+            and not self.stragglers
+        )
+
+    @property
+    def has_stragglers(self) -> bool:
+        return bool(self.stragglers)
+
+    def validate_clients(self, num_clients: int) -> None:
+        bad = [c for c in self.stragglers if c >= num_clients]
+        if bad:
+            raise ValueError(
+                f"straggler ids {bad} out of range for {num_clients} clients"
+            )
+
+    def straggler_mask(self, num_clients: int) -> np.ndarray:
+        """(C,) float32 1.0 indicator of the static straggler set."""
+        m = np.zeros((num_clients,), np.float32)
+        if self.stragglers:
+            m[np.asarray(self.stragglers, np.int64)] = 1.0
+        return m
+
+
+_SPEC_KEYS = ("p", "drop_up", "drop_down", "stragglers", "lag", "seed", "force")
+_SPEC_GRAMMAR = (
+    "fault spec grammar: comma-separated key=value pairs over "
+    f"{_SPEC_KEYS}, e.g. 'p=0.5,drop_up=0.1,stragglers=0:2,lag=2,seed=7' "
+    "(straggler ids are colon-separated)"
+)
+
+
+def parse_fault_spec(spec: str) -> FaultSchedule:
+    """Parse the ``--faults`` spec string into a :class:`FaultSchedule`.
+
+    An empty string means "no faults" and returns the trivial schedule.
+    """
+    spec = (spec or "").strip()
+    kw: dict = {}
+    seen: set = set()
+    if spec:
+        for item in spec.split(","):
+            if "=" not in item:
+                raise ValueError(f"bad fault spec item {item!r}; {_SPEC_GRAMMAR}")
+            key, val = (s.strip() for s in item.split("=", 1))
+            if key not in _SPEC_KEYS:
+                raise ValueError(f"unknown fault spec key {key!r}; {_SPEC_GRAMMAR}")
+            if key in seen:
+                raise ValueError(f"duplicate fault spec key {key!r}")
+            seen.add(key)
+            try:
+                if key == "p":
+                    kw["participation"] = float(val)
+                elif key in ("drop_up", "drop_down"):
+                    kw["drop_upload" if key == "drop_up" else "drop_download"] = (
+                        float(val)
+                    )
+                elif key == "stragglers":
+                    kw["stragglers"] = tuple(
+                        int(c) for c in val.split(":") if c != ""
+                    )
+                elif key in ("lag", "seed"):
+                    kw[key] = int(val)
+                else:  # force
+                    kw["force"] = bool(int(val))
+            except ValueError as e:
+                if "fault spec" in str(e):
+                    raise
+                raise ValueError(
+                    f"bad value {val!r} for fault spec key {key!r}; "
+                    f"{_SPEC_GRAMMAR}"
+                ) from None
+    return FaultSchedule(**kw)
+
+
+def draw_round_faults(
+    sched: FaultSchedule, t, num_clients: int
+) -> RoundFaults:
+    """The per-round masks, as a pure function of the absolute round index.
+
+    jit-safe: ``t`` may be a traced int32 (inside the superstep scan) or a
+    concrete python int (host ledger replay, the reference oracle) — the
+    threefry draw is bit-identical either way, which is what lets every
+    engine path agree on the schedule without shared state.
+    """
+    base = jax.random.fold_in(jax.random.PRNGKey(sched.seed), t)
+
+    def leg(i: int, p_keep: float) -> jnp.ndarray:
+        # bernoulli(key, 1.0) is deterministically all-True (uniform < 1.0),
+        # so force-trivial schedules draw all-ones through the same machinery
+        return jax.random.bernoulli(
+            jax.random.fold_in(base, i), p_keep, (num_clients,)
+        ).astype(jnp.float32)
+
+    return RoundFaults(
+        part=leg(0, sched.participation),
+        up_ok=leg(1, 1.0 - sched.drop_upload),
+        dn_ok=leg(2, 1.0 - sched.drop_download),
+    )
+
+
+def host_round_faults(
+    sched: FaultSchedule, t: int, num_clients: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host twin of :func:`draw_round_faults`: ``(part, up_ok, dn_ok)`` as
+    numpy bool arrays, bit-identical to the device draw at round ``t``."""
+    rf = draw_round_faults(sched, int(t), num_clients)
+    return (
+        np.asarray(rf.part) > 0.5,
+        np.asarray(rf.up_ok) > 0.5,
+        np.asarray(rf.dn_ok) > 0.5,
+    )
+
+
+def init_fault_arrays(
+    sched: "FaultSchedule | None",
+    num_clients: int,
+    k_max: int,
+    dim: int,
+) -> FaultArrays:
+    """Fresh device fault state: zero ages, an empty straggler queue.
+
+    The queue depth is ``lag`` when the (active) schedule has stragglers and
+    0 otherwise — a zero-width placeholder exactly like the EF residual
+    bank, so fault-free runs carry no dead weight through the scans.
+    """
+    depth = sched.lag if (sched is not None and sched.has_stragglers) else 0
+    return FaultArrays(
+        age=jnp.zeros((num_clients,), jnp.int32),
+        q_idx=jnp.zeros((num_clients, depth, k_max), jnp.int32),
+        q_val=jnp.zeros((num_clients, depth, k_max, dim), jnp.float32),
+        q_msk=jnp.zeros((num_clients, depth, k_max), jnp.float32),
+    )

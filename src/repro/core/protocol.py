@@ -181,7 +181,21 @@ def apply_full_download(
     entity_table: jnp.ndarray,
     view: ClientCommView,
     global_mean: np.ndarray,  # (E, D) FedE-aggregated global table
+    count: np.ndarray | None = None,  # (E,) contributor counts
 ) -> jnp.ndarray:
-    """FedE / sync-round download: replace shared rows with the global mean."""
+    """FedE / sync-round download: replace shared rows with the global mean.
+
+    With ``count`` (the :func:`repro.core.aggregate.fede_aggregate` second
+    return), rows whose entity received zero contributions this round keep
+    their local values instead of taking the clamped-denominator zero row —
+    the reference twin of the zero-participant guard in
+    :func:`repro.core.engine.batched_sync_round`.  Without faults every
+    shared entity has at least its own upload, so omitting ``count``
+    (the historical call shape) is equivalent.
+    """
     rows = jnp.asarray(global_mean[view.shared_global], dtype=entity_table.dtype)
-    return entity_table.at[jnp.asarray(view.shared_local)].set(rows)
+    loc = jnp.asarray(view.shared_local)
+    if count is not None:
+        keep = jnp.asarray(count[view.shared_global] > 0)
+        rows = jnp.where(keep[:, None], rows, entity_table[loc])
+    return entity_table.at[loc].set(rows)

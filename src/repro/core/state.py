@@ -58,6 +58,13 @@ from repro.core.engine import (
     shard_map,
 )
 from repro.core.evaluation import EvalBank
+from repro.core.faults import (
+    FaultArrays,
+    FaultSchedule,
+    RoundFaults,
+    draw_round_faults,
+    init_fault_arrays,
+)
 from repro.core.sync import compress_schedule
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_score_fn, loss_from_scores, per_sample_losses
@@ -78,6 +85,11 @@ class StateArrays(NamedTuple):
     #                   cleared by sync rounds; (C, 0, D) empty placeholder
     #                   when the codec carries no residual, so non-EF runs
     #                   pay no scan-carry traffic for it
+    faults: FaultArrays  # per-client staleness counters + the straggler
+    #                      in-flight message queue (repro.core.faults);
+    #                      zero-width queue when the schedule has no
+    #                      stragglers, passed through untouched when the
+    #                      engine has no active fault schedule at all
 
 
 class CycleConsts(NamedTuple):
@@ -97,6 +109,7 @@ class CycleConsts(NamedTuple):
     gid: jnp.ndarray  # (C, Ns_max) global entity ids (num_global padded)
     valid: jnp.ndarray  # (C, Ns_max) shared-slot validity
     k: jnp.ndarray  # (C,) per-client upstream/downstream K
+    straggler: jnp.ndarray  # (C,) f32 static straggler-set indicator
 
 
 @dataclasses.dataclass
@@ -129,10 +142,18 @@ class CycleEngine:
         mesh=None,
         axis_name: str = "clients",
         entity_axis: Optional[str] = None,
+        faults: Optional[FaultSchedule] = None,
     ):
         self.views = list(views)
         self.num_global = int(num_global_entities)
         self.num_clients = len(clients)
+        # a trivial schedule compiles EXACTLY the fault-free programs — the
+        # all-present case is bitwise pre-fault by construction, not by test
+        self._sched = (
+            faults if (faults is not None and not faults.trivial) else None
+        )
+        if self._sched is not None:
+            self._sched.validate_clients(self.num_clients)
         if self.num_clients != len(self.views):
             raise ValueError("one comm view per client required")
         c0 = clients[0]
@@ -227,6 +248,11 @@ class CycleEngine:
             gid=jnp.asarray(gid),
             valid=jnp.asarray(valid),
             k=jnp.asarray(self.k_per_client),
+            straggler=jnp.asarray(
+                self._sched.straggler_mask(self.num_clients)
+                if self._sched is not None
+                else np.zeros((self.num_clients,), np.float32)
+            ),
         )
 
         self._axis = axis_name if mesh is not None else None
@@ -253,6 +279,47 @@ class CycleEngine:
         fused_sparse = functools.partial(fused, do_sync=False)
         fused_sync = functools.partial(fused, do_sync=True)
 
+        # fault-schedule variants: same cores, plus the absolute round index
+        # t as a (traced) program input — the per-round masks are drawn
+        # INSIDE the program as a pure function of t (repro.core.faults), so
+        # host replay / the reference oracle / the scanned superstep all see
+        # bit-identical schedules.  The full (C,) draw is replicated across
+        # shards; consts.cids slices each shard's clients.
+        sched = self._sched
+
+        def round_faults_of(consts, t):
+            rf = draw_round_faults(sched, t, self.num_clients)
+            return RoundFaults(
+                part=rf.part[consts.cids],
+                up_ok=rf.up_ok[consts.cids],
+                dn_ok=rf.dn_ok[consts.cids],
+            )
+
+        self._round_faults = round_faults_of if sched is not None else None
+
+        def comm_sparse_f(arrays, jitter, consts, t):
+            return comm_core(
+                arrays, jitter, consts, do_sync=False,
+                rf=round_faults_of(consts, t),
+            )
+
+        def comm_sync_f(arrays, consts, t):
+            return comm_core(
+                arrays, None, consts, do_sync=True,
+                rf=round_faults_of(consts, t),
+            )
+
+        def fused_f(arrays, kb, kj, consts, t, do_sync):
+            arrays, jitter, loss = train_core(arrays, kb, kj, consts)
+            arrays, down = comm_core(
+                arrays, jitter, consts, do_sync=do_sync,
+                rf=round_faults_of(consts, t),
+            )
+            return arrays, down, loss
+
+        fused_sparse_f = functools.partial(fused_f, do_sync=False)
+        fused_sync_f = functools.partial(fused_f, do_sync=True)
+
         if mesh is None:
             # State flows linearly cycle-to-cycle, so the big resident
             # buffers (entity tables, Adam moments, history) are donated —
@@ -262,6 +329,11 @@ class CycleEngine:
             self._comm_sync = jax.jit(comm_sync, donate_argnums=(0,))
             self._fused_sparse = jax.jit(fused_sparse, donate_argnums=(0,))
             self._fused_sync = jax.jit(fused_sync, donate_argnums=(0,))
+            if sched is not None:
+                self._comm_sparse_f = jax.jit(comm_sparse_f, donate_argnums=(0,))
+                self._comm_sync_f = jax.jit(comm_sync_f, donate_argnums=(0,))
+                self._fused_sparse_f = jax.jit(fused_sparse_f, donate_argnums=(0,))
+                self._fused_sync_f = jax.jit(fused_sync_f, donate_argnums=(0,))
         else:
             n_c = int(dict(mesh.shape)[axis_name])
             if self.num_clients % n_c != 0:
@@ -289,6 +361,23 @@ class CycleEngine:
                 fused_sync, mesh=mesh, in_specs=(pa, r, r, p),
                 out_specs=(pa, p, p),
             ), donate_argnums=(0,))
+            if sched is not None:
+                self._comm_sparse_f = jax.jit(shard_map(
+                    comm_sparse_f, mesh=mesh, in_specs=(pa, p, p, r),
+                    out_specs=(pa, p),
+                ), donate_argnums=(0,))
+                self._comm_sync_f = jax.jit(shard_map(
+                    comm_sync_f, mesh=mesh, in_specs=(pa, p, r),
+                    out_specs=(pa, p),
+                ), donate_argnums=(0,))
+                self._fused_sparse_f = jax.jit(shard_map(
+                    fused_sparse_f, mesh=mesh, in_specs=(pa, r, r, p, r),
+                    out_specs=(pa, p, p),
+                ), donate_argnums=(0,))
+                self._fused_sync_f = jax.jit(shard_map(
+                    fused_sync_f, mesh=mesh, in_specs=(pa, r, r, p, r),
+                    out_specs=(pa, p, p),
+                ), donate_argnums=(0,))
 
     def _arrays_spec(self):
         """PartitionSpec pytree for :class:`StateArrays` under the mesh.
@@ -308,6 +397,9 @@ class CycleEngine:
             opt=AdamState(step=p, mu=dict(ent_like), nu=dict(ent_like)),
             hist=pe,
             res=pe,
+            # fault state is small and per-client (queue values are gathered
+            # full rows, already entity-replicated) — client-only sharding
+            faults=FaultArrays(age=p, q_idx=p, q_val=p, q_msk=p),
         )
 
     def _bank_spec(self):
@@ -536,7 +628,11 @@ class CycleEngine:
             )(consts.cids)
             if ns_pad > ns_max:
                 jitter = jnp.pad(jitter, ((0, 0), (0, ns_pad - ns_max)))
-            return StateArrays(params, opt, arrays.hist, arrays.res), jitter, loss
+            return (
+                StateArrays(params, opt, arrays.hist, arrays.res, arrays.faults),
+                jitter,
+                loss,
+            )
 
         return train_core
 
@@ -544,8 +640,10 @@ class CycleEngine:
         k_max, num_global = self.k_max, self.num_global
         codec, axis = self.codec, self._axis
         eaxis, ns_blk = self._eaxis, self.ns_pad // self.n_eshards
+        has_stragglers = self._sched is not None and self._sched.has_stragglers
 
-        def comm_core(arrays, jitter, consts, do_sync):
+        def comm_core(arrays, jitter, consts, do_sync, rf=None):
+            fa = arrays.faults
             ent = arrays.params["entity"]
             # device-side gather of shared rows; padding slots zeroed exactly
             # like RoundEngine.gather so the round functions see identical
@@ -557,30 +655,73 @@ class CycleEngine:
             emb = jnp.where(consts.valid[:, :, None], emb, 0.0)
             emb = eshard.local_block(emb, eaxis, ns_blk)
             if do_sync:
-                rows, hist = batched_sync_round(
+                rows, pre = batched_sync_round(
                     emb, consts.gid, consts.valid,
                     num_global=num_global, axis_name=axis, entity_axis=eaxis,
+                    faults=rf,
                 )
                 down = jnp.zeros((rows.shape[0],), jnp.int32)
-                # the full exchange transmits exact values: nothing was
-                # dropped, and stale residuals would re-inject pre-sync error
-                # into freshly-repaired rows — so the residual bank clears
-                res = (
-                    jnp.zeros_like(arrays.res)
-                    if codec.has_residual else arrays.res
-                )
+                if rf is None:
+                    hist = pre
+                    # the full exchange transmits exact values: nothing was
+                    # dropped, and stale residuals would re-inject pre-sync
+                    # error into freshly-repaired rows — the bank clears
+                    res = (
+                        jnp.zeros_like(arrays.res)
+                        if codec.has_residual else arrays.res
+                    )
+                else:
+                    # only participating clients uploaded: their history
+                    # refreshes to the pre-sync rows and their residual
+                    # banks clear; absent clients keep both and recover at
+                    # the next sync they attend.  The full exchange also
+                    # obsoletes a present straggler's in-flight sparse
+                    # messages — its queue entries are masked out.
+                    sent = rf.part[:, None, None] > 0.5
+                    hist = jnp.where(sent, pre, arrays.hist)
+                    res = (
+                        jnp.where(sent, 0.0, arrays.res)
+                        if codec.has_residual else arrays.res
+                    )
+                    partb = rf.part > 0.5
+                    fa = fa._replace(
+                        age=jnp.where(partb, 0, fa.age + 1),
+                        q_msk=jnp.where(partb[:, None, None], 0.0, fa.q_msk),
+                    )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)
                 j = jnp.asarray(jitter, jnp.float32) * 0.5
-                rows, hist, down, res = batched_sparse_round(
-                    emb, arrays.hist, consts.gid, consts.valid, consts.k, j,
-                    k_max=k_max, num_global=num_global, codec=codec,
-                    axis_name=axis, res=arrays.res, entity_axis=eaxis,
-                )
+                if rf is None:
+                    rows, hist, down, res = batched_sparse_round(
+                        emb, arrays.hist, consts.gid, consts.valid, consts.k,
+                        j, k_max=k_max, num_global=num_global, codec=codec,
+                        axis_name=axis, res=arrays.res, entity_axis=eaxis,
+                    )
+                else:
+                    q = (
+                        (fa.q_idx, fa.q_val, fa.q_msk)
+                        if has_stragglers else None
+                    )
+                    out = batched_sparse_round(
+                        emb, arrays.hist, consts.gid, consts.valid, consts.k,
+                        j, k_max=k_max, num_global=num_global, codec=codec,
+                        axis_name=axis, res=arrays.res, entity_axis=eaxis,
+                        faults=rf,
+                        straggler=consts.straggler if has_stragglers else None,
+                        queue=q,
+                    )
+                    rows, hist, down, res = out[:4]
+                    partb = rf.part > 0.5
+                    fa = fa._replace(age=jnp.where(partb, 0, fa.age + 1))
+                    if q is not None:
+                        nq = out[4]
+                        fa = fa._replace(
+                            q_idx=nq[0], q_val=nq[1], q_msk=nq[2]
+                        )
             rows_full = eshard.all_blocks(rows, eaxis)
             ent = eshard.scatter_rows(ent, consts.scatter_idx, rows_full, eaxis)
             params = dict(arrays.params, entity=ent)
-            return StateArrays(params, arrays.opt, hist, res), down
+            return StateArrays(params, arrays.opt, hist, res, fa), down
 
         return comm_core
 
@@ -631,6 +772,9 @@ class CycleEngine:
                 (c_n, self.ns_pad if self.codec.has_residual else 0, d),
                 jnp.float32,
             ),
+            # staleness counters + straggler queue; zero-width queue (and a
+            # pure pass-through in the programs) without an active schedule
+            faults=init_fault_arrays(self._sched, c_n, self.k_max, d),
         )
         return FederationState(arrays=arrays, key=jax.random.PRNGKey(seed))
 
@@ -671,24 +815,51 @@ class CycleEngine:
         arrays, jitter, loss = self._train(state.arrays, kb, kj, self.consts)
         return FederationState(arrays, key), jitter, loss
 
-    def comm_round(self, state: FederationState, jitter, sync: bool):
-        """One communication round on resident state.  Returns (state', down)."""
-        if sync:
+    def _require_t(self, t):
+        if t is None:
+            raise ValueError(
+                "this engine has an active FaultSchedule; communication "
+                "rounds need the absolute round index t to draw the masks"
+            )
+        return jnp.int32(t)
+
+    def comm_round(self, state: FederationState, jitter, sync: bool, t=None):
+        """One communication round on resident state.  Returns (state', down).
+
+        With an active fault schedule, ``t`` (the absolute round index) is
+        required — the round's participation/drop masks are drawn from it
+        inside the program.
+        """
+        if self._sched is not None:
+            tt = self._require_t(t)
+            if sync:
+                arrays, down = self._comm_sync_f(state.arrays, self.consts, tt)
+            else:
+                arrays, down = self._comm_sparse_f(
+                    state.arrays, jitter, self.consts, tt
+                )
+        elif sync:
             arrays, down = self._comm_sync(state.arrays, self.consts)
         else:
             arrays, down = self._comm_sparse(state.arrays, jitter, self.consts)
         return FederationState(arrays, state.key), down
 
-    def fused_cycle(self, state: FederationState, sync: bool):
+    def fused_cycle(self, state: FederationState, sync: bool, t=None):
         """One fused train+communicate cycle as a single compiled program.
 
         Returns ``(state', down_count (C,) device array, loss (C,))`` — the
         down counts stay on device so the caller can defer ledger accounting
-        to eval boundaries.
+        to eval boundaries.  ``t`` as in :meth:`comm_round`.
         """
         key, kb, kj = self._advance(state.key)
-        fn = self._fused_sync if sync else self._fused_sparse
-        arrays, down, loss = fn(state.arrays, kb, kj, self.consts)
+        if self._sched is not None:
+            fn = self._fused_sync_f if sync else self._fused_sparse_f
+            arrays, down, loss = fn(
+                state.arrays, kb, kj, self.consts, self._require_t(t)
+            )
+        else:
+            fn = self._fused_sync if sync else self._fused_sparse
+            arrays, down, loss = fn(state.arrays, kb, kj, self.consts)
         return FederationState(arrays, key), down, loss
 
 
@@ -740,28 +911,56 @@ class SuperstepEngine(CycleEngine):
         """
         train_core = self._train_core_fn
         comm_core = self._comm_core_fn
+        sched = self._sched
+        round_faults_of = self._round_faults
         has_eval = any(kind == "eval" for kind, _ in plan)
         if has_eval and eval_core is None:
             raise ValueError("plan contains eval segments but no eval_core")
 
-        def prog(arrays, key, consts, *eval_args):
+        def prog(arrays, key, consts, *extra):
+            # with an active fault schedule the program takes the span's
+            # absolute starting round t0 right after consts and carries the
+            # round index through the scan — every round (including "none"
+            # rounds, which consume a round index but draw no masks)
+            # advances it, eval segments do not
+            if sched is not None:
+                t0, eval_args = extra[0], extra[1:]
+            else:
+                t0, eval_args = None, extra
+
             def seg_step(kind):
                 def step(carry, _):
-                    arrays, key = carry
+                    if sched is not None:
+                        arrays, key, t = carry
+                    else:
+                        arrays, key = carry
                     # identical key schedule to CycleEngine._advance
                     key, kb, kj = jax.random.split(key, 3)
                     arrays, jitter, loss = train_core(arrays, kb, kj, consts)
+                    rf = (
+                        round_faults_of(consts, t)
+                        if sched is not None and kind != "none" else None
+                    )
                     if kind == "sync":
-                        arrays, down = comm_core(arrays, jitter, consts, do_sync=True)
+                        arrays, down = comm_core(
+                            arrays, jitter, consts, do_sync=True, rf=rf
+                        )
                     elif kind == "sparse":
-                        arrays, down = comm_core(arrays, jitter, consts, do_sync=False)
+                        arrays, down = comm_core(
+                            arrays, jitter, consts, do_sync=False, rf=rf
+                        )
                     else:  # "none": local training only
                         down = (loss * 0).astype(jnp.int32)
+                    if sched is not None:
+                        return (arrays, key, t + 1), (down, loss)
                     return (arrays, key), (down, loss)
 
                 return step
 
             downs, losses, blocks = [], [], []
+            carry = (
+                (arrays, key, t0) if sched is not None else (arrays, key)
+            )
             for kind, n in plan:
                 if kind == "prefetch":
                     # host-store staging marker (repro.core.store): a pure
@@ -772,7 +971,7 @@ class SuperstepEngine(CycleEngine):
                     # in-program evaluation on the state as of this point —
                     # no state/key mutation, only the (C, 5) metric block
                     blocks.extend(
-                        eval_core(arrays.params, eval_args[0])
+                        eval_core(carry[0].params, eval_args[0])
                         for _ in range(n)
                     )
                     continue
@@ -780,8 +979,8 @@ class SuperstepEngine(CycleEngine):
                 # inserts around the big resident buffers (~3% per-round at
                 # FB15k scale); capped so pathological eval spans don't
                 # explode compile time
-                (arrays, key), (d, l) = jax.lax.scan(
-                    seg_step(kind), (arrays, key), None, length=n,
+                carry, (d, l) = jax.lax.scan(
+                    seg_step(kind), carry, None, length=n,
                     unroll=min(n, 8),
                 )
                 if kind == "sparse":
@@ -789,7 +988,7 @@ class SuperstepEngine(CycleEngine):
                     # host never dispatches per-round slice ops
                     downs.extend(d[i] for i in range(n))
                 losses.append(l)
-            out = (arrays, key, tuple(downs), tuple(losses))
+            out = (carry[0], carry[1], tuple(downs), tuple(losses))
             return out + (tuple(blocks),) if has_eval else out
 
         n_sparse = sum(n for kind, n in plan if kind == "sparse")
@@ -804,7 +1003,8 @@ class SuperstepEngine(CycleEngine):
             jax.sharding.PartitionSpec(None, self._axis)
             for kind, _ in plan if kind not in ("eval", "prefetch")
         )
-        in_specs = (pa, r, p) + ((self._bank_spec(),) if has_eval else ())
+        in_specs = (pa, r, p) + ((r,) if sched is not None else ())
+        in_specs = in_specs + ((self._bank_spec(),) if has_eval else ())
         out_specs = (pa, r, (p,) * n_sparse, seg)
         if has_eval:
             out_specs = out_specs + ((p,) * n_eval,)
@@ -816,7 +1016,7 @@ class SuperstepEngine(CycleEngine):
         )
 
     # -------------------------------------------------------------- driving
-    def superstep(self, state: FederationState, kinds: Sequence[str]):
+    def superstep(self, state: FederationState, kinds: Sequence[str], t0=None):
         """Run ``len(kinds)`` rounds as one compiled program.
 
         ``kinds`` is the per-round ISM schedule for the span (each entry one
@@ -838,7 +1038,10 @@ class SuperstepEngine(CycleEngine):
         fn = self._superstep_cache.get(plan)
         if fn is None:
             fn = self._superstep_cache[plan] = self._compile_superstep(plan)
-        arrays, key, downs, losses = fn(state.arrays, state.key, self.consts)
+        args = (state.arrays, state.key, self.consts)
+        if self._sched is not None:
+            args = args + (self._require_t(t0),)
+        arrays, key, downs, losses = fn(*args)
         return FederationState(arrays, key), self._align(kinds, downs), losses
 
     def superstep_with_eval(
@@ -847,6 +1050,7 @@ class SuperstepEngine(CycleEngine):
         kinds: Sequence[str],
         evaluator,  # repro.core.evaluation.BatchedEvaluator
         split: str = "valid",
+        t0=None,
     ):
         """Run ``len(kinds)`` rounds PLUS the boundary evaluation as one
         compiled program.
@@ -869,8 +1073,11 @@ class SuperstepEngine(CycleEngine):
             fn = self._superstep_cache[cache_key] = self._compile_superstep(
                 plan, eval_core=evaluator.eval_core
             )
+        args = (state.arrays, state.key, self.consts)
+        if self._sched is not None:
+            args = args + (self._require_t(t0),)
         arrays, key, downs, losses, blocks = fn(
-            state.arrays, state.key, self.consts, evaluator.banks[split]
+            *args, evaluator.banks[split]
         )
         return (
             FederationState(arrays, key),

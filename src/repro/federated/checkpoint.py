@@ -1,0 +1,186 @@
+"""Host-loop durability: checkpoint / restore of the full federation state.
+
+The device engines keep *everything* that determines the trajectory inside
+:class:`repro.core.state.FederationState` (padded entity/relation tables,
+Adam state, upload history, EF residuals, fault arrays incl. the straggler
+queue, and the jitter PRNG key) plus a small set of host-side loop
+variables (the communication ledger, the eval history, the best-snapshot
+bookkeeping, the next round index).  A checkpoint is therefore one ``.npz``
+with every :class:`StateArrays` leaf, the key, and a JSON header — enough
+to resume and reproduce the uninterrupted run *bitwise* (the fault masks
+are pure functions of the absolute round index, so they need no state at
+all; see :mod:`repro.core.faults`).
+
+Format (single ``np.savez`` archive):
+
+* ``__meta__``     — JSON: format version, config fingerprint, loop
+  bookkeeping (``next_round``, ``eval_history``, best round/mrr/hits,
+  ``declines``, ``prev_mrr``), ledger scalars, and whether a best snapshot
+  is stored.
+* ``state_<i>``    — the ``i``-th leaf of ``jax.tree_util`` -flattened
+  :class:`StateArrays` (a fixed traversal order for a fixed config).
+* ``key``          — the jitter PRNG key.
+* ``ledger_history`` — the per-round cumulative parameter counts.
+* ``best_<name>``  — the best-snapshot params dict, when one exists.
+
+Writes are atomic (tmp file + ``os.replace``), so a kill mid-write leaves
+the previous checkpoint intact — the crash-recovery contract the CI
+kill-and-resume job exercises.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FORMAT_VERSION = 1
+
+# config fields that shape the state pytree or drive the trajectory; a
+# checkpoint only resumes under a config that agrees on all of them.
+# ``rounds`` is deliberately NOT fingerprinted: the trajectory up to the
+# checkpointed round is independent of the horizon, so a resume may extend
+# (or re-truncate) a run — which is also how the kill-and-resume test
+# simulates a crash without actually killing the process.
+_FINGERPRINT_FIELDS = (
+    "method", "protocol", "dim", "local_epochs", "batch_size",
+    "num_negatives", "lr", "adversarial_temperature", "gamma", "sparsity_p",
+    "codec", "engine", "sync_interval", "eval_every", "patience",
+    "max_eval_triples", "seed", "faults",
+)
+
+
+def config_fingerprint(cfg) -> dict:
+    return {f: getattr(cfg, f) for f in _FINGERPRINT_FIELDS}
+
+
+def save_checkpoint(
+    path: str,
+    state,  # repro.core.state.FederationState
+    ledger,  # repro.federated.comm.CommLedger
+    *,
+    cfg,
+    next_round: int,
+    eval_history: list,
+    best: dict,
+    declines: int,
+    prev_mrr: float,
+) -> None:
+    """Atomically write the full resume image to ``path``."""
+    leaves = jax.tree_util.tree_leaves(state.arrays)
+    payload = {f"state_{i}": np.asarray(v) for i, v in enumerate(leaves)}
+    payload["key"] = np.asarray(state.key)
+    payload["ledger_history"] = np.asarray(
+        ledger.history, np.float64
+    ).reshape(-1, 2)  # (round, cum_params) pairs
+    snap = best.get("snap")
+    if snap is not None:
+        for name, v in snap.items():
+            payload[f"best_{name}"] = np.asarray(v)
+    meta = {
+        "format_version": FORMAT_VERSION,
+        "fingerprint": config_fingerprint(cfg),
+        "num_state_leaves": len(leaves),
+        "next_round": int(next_round),
+        "eval_history": [
+            [int(r), float(m), float(h)] for r, m, h in eval_history
+        ],
+        "best": {
+            "mrr": float(best["mrr"]),
+            "round": int(best["round"]),
+            "hits": float(best["hits"]),
+            "has_snap": snap is not None,
+            "snap_keys": sorted(snap) if snap is not None else [],
+        },
+        "declines": int(declines),
+        "prev_mrr": float(prev_mrr),
+        "ledger": {
+            "params_transmitted": float(ledger.params_transmitted),
+            "bytes_int8_signs": float(ledger.bytes_int8_signs),
+            "rounds": int(ledger.rounds),
+        },
+    }
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8
+    )
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, state, ledger, *, cfg):
+    """Restore a checkpoint written by :func:`save_checkpoint`.
+
+    ``state`` is a *freshly initialized* FederationState for the same
+    config — it supplies the pytree structure (and the leaf shapes/dtypes
+    the stored leaves are validated against).  ``ledger`` is mutated in
+    place.  Returns ``(state, loop)`` where ``loop`` is a dict of the host
+    bookkeeping: ``next_round``, ``eval_history``, ``best``, ``declines``,
+    ``prev_mrr``.
+    """
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode("utf-8"))
+        if meta["format_version"] != FORMAT_VERSION:
+            raise ValueError(
+                f"checkpoint {path!r} has format version "
+                f"{meta['format_version']}, expected {FORMAT_VERSION}"
+            )
+        fp, want = meta["fingerprint"], config_fingerprint(cfg)
+        diff = {k for k in want if fp.get(k) != want[k]}
+        if diff:
+            raise ValueError(
+                f"checkpoint {path!r} was written under a different config; "
+                f"mismatched fields: {sorted(diff)} "
+                f"(stored {({k: fp.get(k) for k in sorted(diff)})!r})"
+            )
+        leaves, treedef = jax.tree_util.tree_flatten(state.arrays)
+        if meta["num_state_leaves"] != len(leaves):
+            raise ValueError(
+                f"checkpoint {path!r} stores {meta['num_state_leaves']} state "
+                f"leaves, this config builds {len(leaves)}"
+            )
+        new_leaves = []
+        for i, ref in enumerate(leaves):
+            v = z[f"state_{i}"]
+            if v.shape != ref.shape or v.dtype != ref.dtype:
+                raise ValueError(
+                    f"checkpoint {path!r} state leaf {i} is "
+                    f"{v.shape}/{v.dtype}, expected {ref.shape}/{ref.dtype}"
+                )
+            new_leaves.append(jnp.asarray(v))
+        arrays = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        key = jnp.asarray(z["key"])
+        bm = meta["best"]
+        snap = (
+            {k: jnp.asarray(z[f"best_{k}"]) for k in bm["snap_keys"]}
+            if bm["has_snap"] else None
+        )
+        ledger.params_transmitted = meta["ledger"]["params_transmitted"]
+        ledger.bytes_int8_signs = meta["ledger"]["bytes_int8_signs"]
+        ledger.rounds = meta["ledger"]["rounds"]
+        ledger.history = [
+            (int(r), float(p)) for r, p in z["ledger_history"]
+        ]
+    state = type(state)(arrays=arrays, key=key)
+    loop = {
+        "next_round": meta["next_round"],
+        "eval_history": [tuple(e) for e in meta["eval_history"]],
+        "best": {
+            "mrr": bm["mrr"], "round": bm["round"], "hits": bm["hits"],
+            "snap": snap,
+        },
+        "declines": meta["declines"],
+        "prev_mrr": meta["prev_mrr"],
+    }
+    return state, loop

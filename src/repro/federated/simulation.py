@@ -56,14 +56,17 @@ device path is property-tested exactly equal to.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregate import fede_aggregate, personalized_aggregate
+from repro.core.aggregate import Upload, fede_aggregate, personalized_aggregate
 from repro.core.codecs import parse_codec_spec
 from repro.core.evaluation import BatchedEvaluator
+from repro.core.faults import host_round_faults, parse_fault_spec
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
@@ -76,6 +79,7 @@ from repro.core.state import CycleEngine, FederationState, SuperstepEngine
 from repro.core.store import TieredCycleEngine
 from repro.core.sync import round_kind
 from repro.data.partition import ClientData
+from repro.federated import checkpoint as fed_checkpoint
 from repro.federated.client import KGEClient
 from repro.federated.comm import CommLedger
 from repro.federated.metrics import aggregate_eval_block, weighted_average
@@ -129,6 +133,17 @@ class FederatedConfig:
     patience: int = 3
     max_eval_triples: int = 500
     seed: int = 0
+    # fault-injection spec (repro.core.faults grammar), e.g.
+    # "p=0.5,drop_up=0.1,stragglers=0:2,lag=2,seed=7"; "" -> fully reliable
+    # federation (trivial schedules compile the exact pre-fault programs)
+    faults: str = ""
+    # host-loop durability: write a full resume image (state + ledger + eval
+    # bookkeeping, repro.federated.checkpoint) at the first eval boundary at
+    # least checkpoint_every rounds after the last write; resume=True
+    # restores it and continues the interrupted run bitwise
+    checkpoint_path: str = ""
+    checkpoint_every: int = 0
+    resume: bool = False
 
 
 @dataclasses.dataclass
@@ -146,6 +161,15 @@ class FederatedResult:
         return self.ledger.params_at_round(round_idx)
 
 
+def _empty_upload(client_id: int, dim: int) -> Upload:
+    """A zero-entity message: a queue vacancy / an undelivered upload."""
+    return Upload(
+        client_id=client_id,
+        entity_ids=np.zeros(0, dtype=np.int64),
+        values=np.zeros((0, dim), dtype=np.float32),
+    )
+
+
 def _snapshot(clients: list[KGEClient]):
     return [
         {k: np.asarray(v) for k, v in c.params.items()} for c in clients
@@ -157,24 +181,43 @@ def _restore(clients: list[KGEClient], snap) -> None:
         c.params = {k: jnp.asarray(v) for k, v in s.items()}
 
 
-def _flush_ledger(ledger, pending, views, codec, dim, k_per_client) -> None:
+def _flush_ledger(
+    ledger, pending, views, codec, dim, k_per_client, sched=None
+) -> None:
     """Replay deferred rounds into the ledger.
 
-    ``pending`` holds ``(kind, down_count)`` per round in order; sparse-round
-    download counts are device arrays, pulled to host in ONE transfer here.
-    The replay performs the exact same accounting-call sequence a per-round
-    flush would, so ledger totals/history are bitwise identical.
+    ``pending`` holds ``(kind, down_count, round_idx)`` per round in order;
+    sparse-round download counts are device arrays, pulled to host in ONE
+    transfer here.  The replay performs the exact same accounting-call
+    sequence a per-round flush would, so ledger totals/history are bitwise
+    identical.
+
+    With an active fault schedule ``sched``, the per-round participation
+    masks are re-drawn on host from the absolute round index (bit-identical
+    to the in-program draws, :func:`repro.core.faults.host_round_faults`)
+    and absent clients are *skipped entirely* — a non-participating client
+    exchanges no bytes, not zero-entity messages (whose sign bitmaps would
+    still bill ``Ns`` bytes).  Delivery drops do NOT reduce billing: a
+    dropped message was still transmitted.
     """
-    sparse_counts = [d for kind, d in pending if kind == "sparse"]
+    sparse_counts = [d for kind, d, _ in pending if kind == "sparse"]
     dc_all = np.asarray(jnp.stack(sparse_counts)) if sparse_counts else None
     i = 0
-    for kind, _ in pending:
+    for kind, _, t in pending:
+        part = (
+            host_round_faults(sched, t, len(views))[0]
+            if sched is not None else None
+        )
         if kind == "sync":
             for v in views:  # upload leg + download leg
+                if part is not None and not part[v.client_id]:
+                    continue
                 ledger.log_full_exchange(v.num_shared, dim)
                 ledger.log_full_exchange(v.num_shared, dim)
         elif kind == "sparse":
             for v, k_c, dc in zip(views, k_per_client, dc_all[i]):
+                if part is not None and not part[v.client_id]:
+                    continue
                 codec.log_upload(ledger, int(k_c), dim, v.num_shared)
                 codec.log_download(ledger, int(dc), dim, v.num_shared)
             i += 1
@@ -192,7 +235,25 @@ def run_federated(
         raise ValueError(
             f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
         )
+    sched = parse_fault_spec(cfg.faults)
+    faulted = not sched.trivial
+    checkpointing = bool(cfg.checkpoint_path)
+    if cfg.checkpoint_every and not checkpointing:
+        raise ValueError("checkpoint_every set without checkpoint_path")
+    if cfg.resume and not checkpointing:
+        raise ValueError("resume=True needs checkpoint_path")
     if cfg.host_store or cfg.engine == "tiered":
+        if faulted:
+            raise ValueError(
+                "the host-tiered engine does not support fault schedules; "
+                "use a dense device engine (fused/batched/superstep) or "
+                "engine='reference'"
+            )
+        if checkpointing:
+            raise ValueError(
+                "checkpointing is implemented for the dense device engines "
+                "only, not the host-tiered engine"
+            )
         if cfg.mesh_devices > 1 or cfg.mesh_entities > 1:
             raise ValueError(
                 "the host-tiered engine is a host-loop path; it composes "
@@ -235,6 +296,12 @@ def run_federated(
     ledger = CommLedger()
 
     use_device = cfg.engine != "reference"
+    if checkpointing and not use_device:
+        raise ValueError(
+            "checkpointing needs a device engine (the reference path keeps "
+            "ragged host state with no stable serialization)"
+        )
+    sched.validate_clients(len(clients))
     mesh = None
     entity_axis = None
     if cfg.mesh_devices > 1 or cfg.mesh_entities > 1:
@@ -255,9 +322,10 @@ def run_federated(
             clients, views, num_global_entities,
             sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
             codec=codec, mesh=mesh, entity_axis=entity_axis,
+            faults=sched,
         )
         state = cycle.init_state(clients, seed=cfg.seed + 777)
-        pending: list = []  # (kind, device down_count | None) per round
+        pending: list = []  # (kind, device down_count | None, round) triples
         # device-resident batched eval: banks built ONCE, eval boundaries
         # read back only a (C, EVAL_BLOCK_COLS) scalar block (no
         # sync_clients round-trip)
@@ -278,14 +346,44 @@ def run_federated(
         residuals = [
             np.zeros((v.num_shared, cfg.dim), np.float32) for v in views
         ] if codec.has_residual else None
+        # straggler in-flight queues (host twin of FaultArrays.q_*): one
+        # FIFO of lag messages per straggler, initialized empty — the first
+        # lag contributions of a straggler are nothing at all
+        straggler_q = {
+            c: collections.deque(
+                _empty_upload(c, cfg.dim) for _ in range(sched.lag)
+            )
+            for c in sched.stragglers
+        } if (faulted and sched.has_stragglers) else None
 
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
     declines = 0
     prev_mrr = -1.0
     rounds_run = 0
+    start_round = 0
+    last_ckpt = 0
     # the "single" baseline evaluates on a slower cadence (no comm cost to track)
     ee = max(cfg.eval_every, 10) if cfg.protocol == "single" else cfg.eval_every
+
+    if cfg.resume and os.path.exists(cfg.checkpoint_path):
+        # bitwise continuation: everything trajectory-determining lives in
+        # the restored FederationState (tables, Adam, hist, EF residuals,
+        # fault arrays, PRNG key) + these host loop variables; fault masks
+        # are drawn from the absolute round index, so nothing else is needed
+        state, loop = fed_checkpoint.load_checkpoint(
+            cfg.checkpoint_path, state, ledger, cfg=cfg
+        )
+        start_round = last_ckpt = loop["next_round"]
+        eval_history = loop["eval_history"]
+        best = loop["best"]
+        declines = loop["declines"]
+        prev_mrr = loop["prev_mrr"]
+        rounds_run = start_round
+        if verbose:
+            print(
+                f"resumed from {cfg.checkpoint_path} at round {start_round}"
+            )
 
     def eval_boundary(round_no: int, block=None) -> bool:
         """Flush+evaluate at ``round_no``; True => early-stop.
@@ -296,10 +394,11 @@ def run_federated(
         either way no entity table crosses the host, and the best-model
         snapshot is a cheap on-device copy taken only when MRR improves.
         """
-        nonlocal best, declines, prev_mrr
+        nonlocal best, declines, prev_mrr, last_ckpt
         if use_device:
             _flush_ledger(
-                ledger, pending, views, codec, cfg.dim, cycle.k_per_client
+                ledger, pending, views, codec, cfg.dim, cycle.k_per_client,
+                sched=sched if faulted else None,
             )
             if block is None:
                 block = evaluator.evaluate(state.arrays.params, "valid")
@@ -327,6 +426,20 @@ def run_federated(
             }
         declines = declines + 1 if val["mrr"] < prev_mrr else 0
         prev_mrr = val["mrr"]
+        if (
+            checkpointing
+            and cfg.checkpoint_every > 0
+            and round_no - last_ckpt >= cfg.checkpoint_every
+        ):
+            # eval boundaries are the device engines' only host touch-points,
+            # so they are the checkpoint cadence too; the ledger was just
+            # flushed, so pending is empty and the image is self-contained
+            fed_checkpoint.save_checkpoint(
+                cfg.checkpoint_path, state, ledger, cfg=cfg,
+                next_round=round_no, eval_history=eval_history, best=best,
+                declines=declines, prev_mrr=prev_mrr,
+            )
+            last_ckpt = round_no
         return declines >= cfg.patience
 
     if cfg.engine == "superstep":
@@ -336,7 +449,7 @@ def run_federated(
         # the same rounds as the per-round engines.  Chunks end either at an
         # eval boundary or at the final round (terminal eval guarantee), so
         # every chunk carries an eval segment.
-        t = 0
+        t = start_round
         while t < cfg.rounds:
             chunk = min(((t // ee) + 1) * ee, cfg.rounds) - t
             kinds = tuple(
@@ -344,9 +457,11 @@ def run_federated(
                 for u in range(t, t + chunk)
             )
             state, per_round, _losses, block = cycle.superstep_with_eval(
-                state, kinds, evaluator, "valid"
+                state, kinds, evaluator, "valid", t0=t
             )
-            pending.extend(per_round)
+            pending.extend(
+                (k, d, t + i) for i, (k, d) in enumerate(per_round)
+            )
             t += chunk
             rounds_run = t
             if eval_boundary(t, block=block):
@@ -355,9 +470,10 @@ def run_federated(
         return _finish(
             cfg, clients, use_device, cycle, state, pending,
             views, codec, ledger, eval_history, best, rounds_run, evaluator,
+            sched=sched if faulted else None,
         )
 
-    for t in range(cfg.rounds):
+    for t in range(start_round, cfg.rounds):
         rounds_run = t + 1
         kind = round_kind(t, cfg.protocol, cfg.sync_interval)
         comm = kind != "none"
@@ -367,7 +483,9 @@ def run_federated(
             # ------------------------- device-resident train+communicate
             if cfg.engine == "fused":
                 if comm:
-                    state, down, _loss = cycle.fused_cycle(state, sync=sync)
+                    state, down, _loss = cycle.fused_cycle(
+                        state, sync=sync, t=t
+                    )
                 else:
                     state, _jitter, _loss = cycle.train_cycle(state)
                     down = None
@@ -375,48 +493,105 @@ def run_federated(
                 state, jitter, _loss = cycle.train_cycle(state)
                 down = None
                 if comm:
-                    state, down = cycle.comm_round(state, jitter, sync=sync)
-            pending.append((kind, down if kind == "sparse" else None))
+                    state, down = cycle.comm_round(
+                        state, jitter, sync=sync, t=t
+                    )
+            pending.append((kind, down if kind == "sparse" else None, t))
         else:
             # ----------------------------------- numpy reference protocol
+            # fault semantics (repro.core.faults): part -> the client
+            # computes its upload (history / EF refresh) and exchanges bytes;
+            # part & up_ok -> the message reaches the server (enters Eq. 3);
+            # part & dn_ok -> the download lands (Eq. 4 applies).  Local
+            # training is never gated — an absent client trains on, it just
+            # doesn't communicate (matching the device engines' ungated
+            # train scan).
             for c in clients:
                 c.train_local(cfg.local_epochs)
+            if faulted and comm:
+                fpart, fup, fdn = host_round_faults(sched, t, len(clients))
+            else:
+                fpart = fup = fdn = np.ones(len(clients), dtype=bool)
             if comm and sync:
-                if residuals is not None:
-                    # the full exchange transmits exact values: stale banked
-                    # error would re-inject pre-sync loss (same contract as
-                    # the device engines' residual clear)
-                    for res in residuals:
-                        res[:] = 0.0
                 uploads = []
                 for c, v in zip(clients, views):
+                    if not fpart[v.client_id]:
+                        continue
+                    if residuals is not None:
+                        # the full exchange transmits exact values: stale
+                        # banked error would re-inject pre-sync loss (same
+                        # contract as the device engines' residual clear)
+                        residuals[v.client_id][:] = 0.0
                     up, hist = full_upload(c.params["entity"], v)
                     histories[v.client_id] = hist
-                    uploads.append(up)
+                    if straggler_q is not None and v.client_id in straggler_q:
+                        # the full exchange obsoletes in-flight sparse
+                        # messages — a present straggler's queue empties
+                        # (the ISM sync round doubles as a recovery point)
+                        straggler_q[v.client_id] = collections.deque(
+                            _empty_upload(v.client_id, cfg.dim)
+                            for _ in range(sched.lag)
+                        )
+                    if fup[v.client_id]:
+                        uploads.append(up)
                     ledger.log_full_exchange(v.num_shared, cfg.dim)
-                global_mean, _count = fede_aggregate(uploads, num_global_entities)
-                for c, v in zip(clients, views):
-                    c.params["entity"] = apply_full_download(
-                        c.params["entity"], v, global_mean
+                if uploads:
+                    global_mean, count = fede_aggregate(
+                        uploads, num_global_entities
                     )
+                for c, v in zip(clients, views):
+                    if not fpart[v.client_id]:
+                        continue
+                    if uploads and fdn[v.client_id]:
+                        # count-guarded: entities nobody uploaded this round
+                        # keep their local rows (zero-participant guard)
+                        c.params["entity"] = apply_full_download(
+                            c.params["entity"], v, global_mean, count=count
+                        )
                     ledger.log_full_exchange(v.num_shared, cfg.dim)
             elif comm:  # sparse FedS round, ragged numpy reference path
                 uploads = []
                 for c, v in zip(clients, views):
-                    # wire codec (and its host-side error-feedback bank,
-                    # when ef=1) applied inside the coded upload
-                    up, hist, res = sparse_upload_coded(
-                        c.params["entity"], histories[v.client_id], v,
-                        cfg.sparsity_p, codec,
-                        residuals[v.client_id] if residuals is not None
-                        else None,
-                    )
-                    histories[v.client_id] = hist
-                    if residuals is not None:
-                        residuals[v.client_id] = res
-                    k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
-                    codec.log_upload(ledger, k_round, cfg.dim, v.num_shared)
-                    uploads.append(up)
+                    cid = v.client_id
+                    fresh = None
+                    if fpart[cid]:
+                        # wire codec (and its host-side error-feedback bank,
+                        # when ef=1) applied inside the coded upload; a
+                        # dropped message still refreshed history and
+                        # residuals — the sender cannot know it was lost
+                        up, hist, res = sparse_upload_coded(
+                            c.params["entity"], histories[cid], v,
+                            cfg.sparsity_p, codec,
+                            residuals[cid] if residuals is not None
+                            else None,
+                        )
+                        histories[cid] = hist
+                        if residuals is not None:
+                            residuals[cid] = res
+                        k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
+                        codec.log_upload(
+                            ledger, k_round, cfg.dim, v.num_shared
+                        )
+                        if fup[cid]:
+                            fresh = up
+                    if straggler_q is not None and cid in straggler_q:
+                        # delayed delivery: this round the server sees the
+                        # message sent ``lag`` sparse rounds ago; the fresh
+                        # (delivery-masked) message joins the queue tail
+                        delivered = straggler_q[cid].popleft()
+                        straggler_q[cid].append(
+                            fresh if fresh is not None
+                            else _empty_upload(cid, cfg.dim)
+                        )
+                    else:
+                        delivered = (
+                            fresh if fresh is not None
+                            else _empty_upload(cid, cfg.dim)
+                        )
+                    # dense list: personalized_aggregate indexes uploads by
+                    # client id; an undelivered message is a zero-entity
+                    # Upload, which contributes to no aggregate
+                    uploads.append(delivered)
                 downloads = personalized_aggregate(
                     uploads,
                     [v.shared_global for v in views],
@@ -424,6 +599,8 @@ def run_federated(
                     rng,
                 )
                 for c, v, d in zip(clients, views, downloads):
+                    if not fpart[v.client_id]:
+                        continue  # server neither selects nor bills
                     if codec.transforms_values and len(d.entity_ids):
                         d = dataclasses.replace(
                             d,
@@ -435,10 +612,11 @@ def run_federated(
                     codec.log_download(
                         ledger, len(d.entity_ids), cfg.dim, v.num_shared
                     )
-                    c.params["entity"] = apply_sparse_download(
-                        c.params["entity"], v, d.entity_ids, d.agg_values,
-                        d.priority,
-                    )
+                    if fdn[v.client_id]:
+                        c.params["entity"] = apply_sparse_download(
+                            c.params["entity"], v, d.entity_ids,
+                            d.agg_values, d.priority,
+                        )
             ledger.end_round()
 
         # ------------------------------------------------------- evaluation
@@ -454,13 +632,14 @@ def run_federated(
         cfg, clients, use_device, cycle if use_device else None,
         state if use_device else None, pending if use_device else None,
         views, codec, ledger, eval_history, best, rounds_run,
-        evaluator,
+        evaluator, sched=sched if faulted else None,
     )
 
 
 def _finish(
     cfg, clients, use_device, cycle, state, pending,
     views, codec, ledger, eval_history, best, rounds_run, evaluator=None,
+    sched=None,
 ) -> FederatedResult:
     """Final flush + best-snapshot restore + test evaluation.
 
@@ -469,7 +648,10 @@ def _finish(
     tables into the per-client params (the single terminal host transfer).
     """
     if use_device:
-        _flush_ledger(ledger, pending, views, codec, cfg.dim, cycle.k_per_client)
+        _flush_ledger(
+            ledger, pending, views, codec, cfg.dim, cycle.k_per_client,
+            sched=sched,
+        )
         if best["snap"] is not None:
             state = FederationState(
                 state.arrays._replace(params=best["snap"]), state.key
@@ -565,7 +747,7 @@ def _run_federated_tiered(
         rounds_run = t + 1
         kind = round_kind(t, cfg.protocol, cfg.sync_interval)
         ts, down, _loss = eng.run_cycle(store, ts, kind)
-        pending.append((kind, down if kind == "sparse" else None))
+        pending.append((kind, down if kind == "sparse" else None, t))
         if (t + 1) % ee == 0 or (t + 1) == cfg.rounds:
             _flush_ledger(
                 ledger, pending, views, codec, cfg.dim, eng.k_per_client

@@ -1,10 +1,11 @@
 """Federated KGE training driver (the paper's end-to-end workload).
 
 Runs FedS / FedEP / FedEPL / Single on the synthetic FB15k-237-R{N} stand-in
-with checkpointing and a final report.
+with fault injection, checkpoint/resume durability, and a final report.
 
   PYTHONPATH=src python -m repro.launch.train --protocol feds --clients 3 \
-      --method transe --rounds 40 --ckpt out/feds.msgpack
+      --method transe --rounds 40 --faults p=0.8,drop_up=0.1,seed=7 \
+      --checkpoint out/feds.npz --checkpoint-every 10 --resume
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ import argparse
 import json
 
 from repro.core.codecs import codec_usage, parse_codec_spec
+from repro.core.faults import parse_fault_spec
 from repro.core.sync import comm_ratio_worst_case
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.simulation import FederatedConfig, run_federated
@@ -30,6 +32,15 @@ def _codec_spec(spec: str) -> str:
     time, carrying the registry's own name/kwargs listing."""
     try:
         parse_codec_spec(spec)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return spec
+
+
+def _fault_spec(spec: str) -> str:
+    """Validate a --faults spec eagerly, carrying the grammar message."""
+    try:
+        parse_fault_spec(spec)
     except ValueError as e:
         raise argparse.ArgumentTypeError(str(e)) from None
     return spec
@@ -98,6 +109,28 @@ def main() -> None:
     ap.add_argument("--entities", type=int, default=400)
     ap.add_argument("--triples", type=int, default=5000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", type=_fault_spec, default="",
+                    metavar="KEY=VAL[,...]",
+                    help="seeded fault schedule, e.g. "
+                         "'p=0.8,drop_up=0.1,stragglers=0:2,lag=2,seed=7' — "
+                         "per-round Bernoulli participation, message drops "
+                         "on either leg, lagged stragglers (empty = "
+                         "reliable federation, bitwise identical to no "
+                         "--faults at all)")
+    ap.add_argument("--checkpoint", default="",
+                    metavar="PATH.npz",
+                    help="checkpoint file for durable resume (atomic "
+                         "writes; holds the full FederationState + ledger "
+                         "+ loop bookkeeping)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    metavar="N",
+                    help="write --checkpoint at eval boundaries at least N "
+                         "rounds apart (0 = never write; a --resume run "
+                         "can still read an existing checkpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint when it exists; the "
+                         "resumed trajectory is bitwise identical to an "
+                         "uninterrupted run")
     ap.add_argument("--out", default=None, help="write JSON result here")
     args = ap.parse_args()
 
@@ -120,7 +153,9 @@ def main() -> None:
         host_store=args.host_store or args.engine == "tiered",
         cache_slots=args.cache_slots, stage_steps=args.stage_steps,
         codec=args.codec, quantize_upload=args.quantize_upload,
-        seed=args.seed,
+        seed=args.seed, faults=args.faults,
+        checkpoint_path=args.checkpoint,
+        checkpoint_every=args.checkpoint_every, resume=args.resume,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)
 

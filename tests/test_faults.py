@@ -1,0 +1,488 @@
+"""Fault-injected federation (repro.core.faults): spec parsing, seeded mask
+determinism, faulted round semantics vs a numpy oracle, the zero-participant
+aggregation guard, staleness counters, cross-engine equivalence under chaos
+schedules, and checkpoint/kill/resume durability.
+
+Two structural guarantees anchor everything:
+
+* a *trivial* schedule makes the engines compile the exact pre-fault
+  programs, so the all-present case is bitwise identical to an unfaulted
+  run by construction;
+* masks are pure functions of the absolute round index (threefry fold-in),
+  so the host ledger replay, the numpy reference oracle, and the scanned
+  superstep all agree on any schedule with no shared state.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregate import Upload, personalized_aggregate
+from repro.core.codec import IdentityCodec, Int8RowCodec
+from repro.core.engine import RoundEngine
+from repro.core.faults import (
+    FaultSchedule,
+    RoundFaults,
+    draw_round_faults,
+    host_round_faults,
+    parse_fault_spec,
+)
+from repro.core.protocol import (
+    apply_full_download,
+    apply_sparse_download,
+    build_comm_views,
+    sparse_upload,
+)
+from repro.core.state import CycleEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.simulation import FederatedConfig, run_federated
+
+NUM_GLOBAL, DIM = 40, 8
+
+
+def _random_instance(rng, num_clients, num_global=NUM_GLOBAL, dim=DIM):
+    """Random heterogeneous federation (tests/test_engine.py twin)."""
+    while True:
+        l2g = [
+            np.sort(
+                rng.choice(num_global, size=int(rng.integers(10, 28)),
+                           replace=False)
+            ).astype(np.int64)
+            for _ in range(num_clients)
+        ]
+        views = build_comm_views(l2g, num_global)
+        if all(v.num_shared >= 4 for v in views):
+            break
+    tables = [
+        jnp.asarray(rng.normal(size=(len(l), dim)), jnp.float32) for l in l2g
+    ]
+    hist_tables = [
+        t + jnp.asarray(rng.normal(size=t.shape) * 0.5, jnp.float32)
+        for t in tables
+    ]
+    return views, tables, hist_tables
+
+
+# ------------------------------------------------------------- spec parsing
+def test_parse_fault_spec_roundtrip():
+    s = parse_fault_spec("p=0.5,drop_up=0.1,drop_down=0.2,stragglers=2:0,lag=3,seed=7")
+    assert s == FaultSchedule(
+        participation=0.5, drop_upload=0.1, drop_download=0.2,
+        stragglers=(0, 2), lag=3, seed=7,
+    )
+    assert not s.trivial and s.has_stragglers
+    assert parse_fault_spec("").trivial
+    assert parse_fault_spec("p=1.0,seed=99").trivial  # seed alone changes nothing
+    assert not parse_fault_spec("force=1").trivial  # testing hook
+
+
+@pytest.mark.parametrize("spec,msg", [
+    ("p=0.5,p=0.6", "duplicate"),
+    ("p=0", "participation"),
+    ("drop_up=1.0", "drop_upload"),
+    ("frequency=2", "unknown fault spec key"),
+    ("p0.5", "bad fault spec item"),
+    ("lag=abc", "bad value"),
+    ("stragglers=0:0,lag=1", "unique"),
+    ("stragglers=1", "lag"),
+    ("lag=2", "lag given without stragglers"),
+])
+def test_parse_fault_spec_rejects(spec, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_fault_spec(spec)
+
+
+def test_straggler_ids_validated_against_client_count():
+    s = parse_fault_spec("stragglers=5,lag=1")
+    with pytest.raises(ValueError, match="out of range"):
+        s.validate_clients(3)
+    s.validate_clients(6)
+
+
+# ----------------------------------------------------------- mask determinism
+def test_draw_round_faults_host_equals_traced():
+    """The same (seed, t) must draw bit-identical masks whether t is a
+    concrete int (host replay) or a traced scan carry (device program)."""
+    s = parse_fault_spec("p=0.4,drop_up=0.3,drop_down=0.2,seed=11")
+    for t in (0, 1, 17):
+        eager = draw_round_faults(s, t, 6)
+        traced = jax.jit(lambda tt: draw_round_faults(s, tt, 6))(jnp.int32(t))
+        for a, b in zip(eager, traced):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        part, up, dn = host_round_faults(s, t, 6)
+        np.testing.assert_array_equal(part, np.asarray(eager.part) > 0.5)
+        np.testing.assert_array_equal(up, np.asarray(eager.up_ok) > 0.5)
+        np.testing.assert_array_equal(dn, np.asarray(eager.dn_ok) > 0.5)
+
+
+def test_forced_trivial_draws_all_ones():
+    rf = draw_round_faults(parse_fault_spec("force=1"), 5, 7)
+    for leg in rf:
+        np.testing.assert_array_equal(np.asarray(leg), 1.0)
+
+
+# ------------------------------------ round-level: all-ones masks are neutral
+@pytest.mark.parametrize("codec_cls", [IdentityCodec, Int8RowCodec])
+def test_all_ones_masks_bitwise_neutral(codec_cls):
+    """Feeding explicit all-ones masks through the faulted round functions
+    must be bitwise identical to the maskless rounds — the mask plumbing
+    (x1.0 multiplies on 0/1 floats, &True on bools) never perturbs values."""
+    rng = np.random.default_rng(5)
+    views, tables, hist_tables = _random_instance(rng, 3, NUM_GLOBAL, DIM)
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, 0.5, codec=codec_cls())
+    emb, hist = engine.gather(tables), engine.gather(hist_tables)
+    jitter = jnp.asarray(rng.random((3, engine.ns_max)), jnp.float32)
+    ones = RoundFaults(*(jnp.ones((3,), jnp.float32),) * 3)
+
+    plain = engine.sparse_round(emb, hist, jitter)
+    masked = engine.sparse_round(emb, hist, jitter, faults=ones)
+    for name, a, b in zip(("emb", "hist", "down"), plain, masked):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+    plain = engine.sync_round(emb)
+    masked = engine.sync_round(emb, faults=ones)
+    for name, a, b in zip(("emb", "hist"), plain, masked):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+# ------------------------------------- faulted sparse round vs numpy oracle
+def _empty(cid):
+    return Upload(client_id=cid, entity_ids=np.zeros(0, np.int64),
+                  values=np.zeros((0, DIM), np.float32))
+
+
+def _faulted_reference_round(tables, hists, views, codec, part, up_ok, dn_ok):
+    """Numpy twin of one faulted sparse round at p=1.0 (tie-break-free).
+
+    part -> upload computed (history refreshes); part & up_ok -> delivered
+    (enters Eq. 3); part & dn_ok -> download applied; down counts reflect
+    part only (the server selected and sent — delivery loss is the
+    receiver's problem, not the biller's).
+    """
+    uploads, new_hists = [], []
+    for t, h, v in zip(tables, hists, views):
+        if part[v.client_id]:
+            up, hh = sparse_upload(t, h, v, 1.0)
+            up = dataclasses.replace(
+                up,
+                values=np.asarray(codec.roundtrip(jnp.asarray(up.values)), np.float32),
+            )
+            new_hists.append(hh)
+            uploads.append(up if up_ok[v.client_id] else _empty(v.client_id))
+        else:
+            new_hists.append(h)
+            uploads.append(_empty(v.client_id))
+    downs = personalized_aggregate(
+        uploads, [v.shared_global for v in views], 1.0, np.random.default_rng(0)
+    )
+    out, counts = [], []
+    for t, v, d in zip(tables, views, downs):
+        counts.append(len(d.entity_ids) if part[v.client_id] else 0)
+        if part[v.client_id] and dn_ok[v.client_id]:
+            vals = d.agg_values
+            if len(d.entity_ids):
+                vals = np.asarray(codec.roundtrip(jnp.asarray(vals)), np.float32)
+            out.append(apply_sparse_download(t, v, d.entity_ids, vals, d.priority))
+        else:
+            out.append(t)
+    return out, new_hists, counts
+
+
+@pytest.mark.parametrize("codec_cls", [IdentityCodec, Int8RowCodec])
+def test_faulted_sparse_round_matches_oracle(codec_cls):
+    """~50% participation + drops on both legs, against the host oracle."""
+    rng = np.random.default_rng(23)
+    views, tables, hist_tables = _random_instance(rng, 5, NUM_GLOBAL, DIM)
+    codec = codec_cls()
+    part = np.array([1, 0, 1, 1, 0], bool)
+    up_ok = np.array([1, 1, 0, 1, 1], bool)
+    dn_ok = np.array([1, 1, 1, 0, 1], bool)
+    hists = [
+        jnp.asarray(np.asarray(h)[v.shared_local])
+        for h, v in zip(hist_tables, views)
+    ]
+    ref_tables, ref_hists, ref_counts = _faulted_reference_round(
+        tables, hists, views, codec, part, up_ok, dn_ok
+    )
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, 1.0, codec=codec)
+    new_emb, new_hist, down = engine.sparse_round(
+        engine.gather(tables), engine.gather(hist_tables),
+        faults=RoundFaults(
+            jnp.asarray(part, jnp.float32),
+            jnp.asarray(up_ok, jnp.float32),
+            jnp.asarray(dn_ok, jnp.float32),
+        ),
+    )
+    for c, v in enumerate(views):
+        ns = v.num_shared
+        np.testing.assert_allclose(
+            np.asarray(new_emb[c, :ns]),
+            np.asarray(ref_tables[c])[v.shared_local],
+            atol=5e-4, err_msg=f"client {c} emb",
+        )
+        np.testing.assert_allclose(
+            np.asarray(new_hist[c, :ns]), np.asarray(ref_hists[c]),
+            atol=1e-6, err_msg=f"client {c} hist",
+        )
+        assert int(down[c]) == ref_counts[c], f"client {c} down count"
+
+
+# --------------------------------------------- zero-participant round guards
+def test_zero_participation_rounds_are_noops():
+    """Nobody present: both round kinds must leave the tables untouched and
+    finite — in particular the sync round's Eq. 3 mean over an all-absent
+    entity row must not emit the clamped-denominator zero row."""
+    rng = np.random.default_rng(3)
+    views, tables, hist_tables = _random_instance(rng, 3, NUM_GLOBAL, DIM)
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, 1.0)
+    emb, hist = engine.gather(tables), engine.gather(hist_tables)
+    nobody = RoundFaults(*(jnp.zeros((3,), jnp.float32),) * 3)
+
+    new_emb, new_hist, down = engine.sparse_round(emb, hist, faults=nobody)
+    np.testing.assert_array_equal(np.asarray(new_emb), np.asarray(emb))
+    np.testing.assert_array_equal(np.asarray(new_hist), np.asarray(hist))
+    np.testing.assert_array_equal(np.asarray(down), 0)
+
+    new_emb, _ = engine.sync_round(emb, faults=nobody)
+    np.testing.assert_array_equal(np.asarray(new_emb), np.asarray(emb))
+
+
+def test_sync_round_zero_contributor_rows_keep_local_values():
+    """Client 1 participates but its upload is lost while client 2 is absent
+    — so only client 0's upload reaches Eq. 3.  Client 1 still receives the
+    download: rows shared with client 0 take client 0's values (count 1);
+    rows NOBODY uploaded have zero contributors and must keep client 1's
+    local values instead of the clamped-denominator zero mean."""
+    rng = np.random.default_rng(8)
+    views, tables, hist_tables = _random_instance(rng, 3, NUM_GLOBAL, DIM)
+    engine = RoundEngine(views, NUM_GLOBAL, DIM, 1.0)
+    emb = engine.gather(tables)
+    faults = RoundFaults(
+        jnp.asarray([1.0, 1.0, 0.0]),  # part
+        jnp.asarray([1.0, 0.0, 1.0]),  # up_ok: client 1's upload is lost
+        jnp.asarray([1.0, 1.0, 1.0]),  # dn_ok
+    )
+    new_emb, _ = engine.sync_round(emb, faults=faults)
+    g2r0 = views[0].global_to_row
+    guarded = 0
+    for r, g in enumerate(views[1].shared_global.tolist()):
+        got = np.asarray(new_emb[1, r])
+        if g in g2r0:  # one contributor (client 0): mean == its row
+            want = np.asarray(emb[0, g2r0[g]])
+        else:  # zero contributors: the guard keeps the local row
+            want = np.asarray(emb[1, r])
+            guarded += 1
+        np.testing.assert_allclose(got, want, atol=1e-6, err_msg=f"g={g}")
+    # client 0's own upload always reaches it back unchanged; absent client
+    # 2 keeps everything
+    ns0, ns2 = views[0].num_shared, views[2].num_shared
+    np.testing.assert_allclose(
+        np.asarray(new_emb[0, :ns0]), np.asarray(emb[0, :ns0]), atol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(new_emb[2, :ns2]), np.asarray(emb[2, :ns2])
+    )
+    assert np.isfinite(np.asarray(new_emb)).all()
+
+
+def test_apply_full_download_count_guard():
+    """Host twin of the sync guard: zero-count entities keep local rows."""
+    l2g = [np.array([0, 1, 2], np.int64), np.array([1, 2, 3], np.int64)]
+    views = build_comm_views(l2g, 4)
+    table = jnp.asarray(np.arange(3 * DIM, dtype=np.float32).reshape(3, DIM))
+    mean = np.full((4, DIM), 7.0, np.float32)
+    count = np.array([0, 1, 0, 0], np.int64)
+    out = np.asarray(apply_full_download(table, views[0], mean, count=count))
+    np.testing.assert_array_equal(out[views[0].shared_local[0]], 7.0)  # g=1
+    np.testing.assert_array_equal(  # g=2: count 0 -> keep local
+        out[views[0].shared_local[1]],
+        np.asarray(table)[views[0].shared_local[1]],
+    )
+    # historical call shape (no count) still overwrites unconditionally
+    out = np.asarray(apply_full_download(table, views[0], mean))
+    np.testing.assert_array_equal(out[np.asarray(views[0].shared_local)], 7.0)
+
+
+# ----------------------------------------------- cycle-level fault state
+def _mini_federation(num_clients=2, seed=1):
+    kg = generate_kg(num_entities=120, num_relations=4 * num_clients,
+                     num_triples=800, seed=seed)
+    cd = partition_by_relation(kg, num_clients, seed=0)
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=0)
+            for d in cd
+        ]
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    return kg, cd, views, mk
+
+
+def test_staleness_age_counters_follow_schedule():
+    """FederationState.faults.age must count rounds since each client last
+    participated, resetting on participation — exactly the host-replayed
+    mask sequence."""
+    kg, cd, views, mk = _mini_federation(num_clients=2)
+    sched = parse_fault_spec("p=0.5,seed=9")
+    engine = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                         local_epochs=1, faults=sched)
+    state = engine.init_state(mk(), seed=4)
+    age = np.zeros(2, np.int32)
+    for t in range(6):
+        state, _down, _loss = engine.fused_cycle(state, sync=t % 3 == 2, t=t)
+        part, _, _ = host_round_faults(sched, t, 2)
+        age = np.where(part, 0, age + 1).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(state.arrays.faults.age), age, err_msg=f"round {t}"
+        )
+
+
+def test_engine_requires_round_index_when_faulted():
+    kg, cd, views, mk = _mini_federation(num_clients=2)
+    engine = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                         local_epochs=1, faults=parse_fault_spec("p=0.5"))
+    state = engine.init_state(mk(), seed=0)
+    with pytest.raises(ValueError, match="round index"):
+        engine.fused_cycle(state, sync=False)
+
+
+def test_trivial_schedule_compiles_pre_fault_programs():
+    kg, cd, views, mk = _mini_federation(num_clients=2)
+    engine = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                         local_epochs=1, faults=parse_fault_spec("p=1.0,seed=5"))
+    assert engine._sched is None  # structurally the unfaulted engine
+    assert engine.init_state(mk()).arrays.faults.q_val.shape[1] == 0
+
+
+# ------------------------------------------- simulation-level equivalences
+_CHAOS = "p=0.6,drop_up=0.2,drop_down=0.2,stragglers=0,lag=2,seed=3"
+
+
+@pytest.fixture(scope="module")
+def sim_env():
+    kg = generate_kg(num_entities=120, num_relations=8, num_triples=900, seed=1)
+    clients = partition_by_relation(kg, 2, seed=0)
+    base = dict(method="transe", protocol="feds", dim=8, rounds=5,
+                local_epochs=1, batch_size=32, num_negatives=4, lr=5e-3,
+                sparsity_p=1.0, sync_interval=2, eval_every=2, patience=99,
+                max_eval_triples=30, seed=0)
+    plain = run_federated(clients, kg.num_entities,
+                          FederatedConfig(engine="fused", **base))
+    return kg, clients, base, plain
+
+
+def _same_run(a, b):
+    return (
+        a.eval_history == b.eval_history
+        and a.ledger.history == b.ledger.history
+        and a.ledger.params_transmitted == b.ledger.params_transmitted
+        and a.ledger.bytes_int8_signs == b.ledger.bytes_int8_signs
+        and a.test_mrr_cg == b.test_mrr_cg
+    )
+
+
+def test_trivial_and_forced_schedules_match_unfaulted(sim_env):
+    """All-present is bitwise identical to the pre-fault engines, both via
+    the structural path (trivial spec -> pre-fault programs) and via the
+    forced path (machinery compiled in, masks drawn all-ones)."""
+    kg, clients, base, plain = sim_env
+    for spec in ("", "p=1.0,seed=42", "force=1"):
+        run = run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(engine="fused", faults=spec, **base),
+        )
+        assert _same_run(plain, run), spec
+
+
+def test_chaos_schedule_engines_agree(sim_env):
+    """Under a schedule with partial participation, drops on both legs, and
+    a lagged straggler: fused == superstep (trajectory + ledger), the run
+    differs from the unfaulted one, metrics stay finite, and the reference
+    oracle's ledger matches the device replay byte-for-byte (sparsity 1.0
+    makes down selection deterministic, so billing is schedule-exact)."""
+    kg, clients, base, plain = sim_env
+    runs = {
+        eng: run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(engine=eng, faults=_CHAOS, **base),
+        )
+        for eng in ("fused", "superstep", "reference")
+    }
+    assert _same_run(runs["fused"], runs["superstep"])
+    assert runs["fused"].eval_history != plain.eval_history
+    assert all(np.isfinite(m) for _, m, _ in runs["fused"].eval_history)
+    ref = runs["reference"]
+    assert ref.ledger.history == runs["superstep"].ledger.history
+    assert ref.ledger.bytes_int8_signs == runs["superstep"].ledger.bytes_int8_signs
+    assert all(np.isfinite(m) for _, m, _ in ref.eval_history)
+
+
+def test_faults_rejected_on_tiered_engine(sim_env):
+    kg, clients, base, _ = sim_env
+    with pytest.raises(ValueError, match="tiered"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(engine="tiered", faults=_CHAOS, **base),
+        )
+
+
+# ----------------------------------------------------- checkpoint / resume
+def test_checkpoint_kill_resume_bitwise(sim_env, tmp_path):
+    """A run killed after its round-4 checkpoint and resumed in a fresh
+    engine must finish with the uninterrupted run's trajectory, ledger, and
+    terminal metrics — bitwise."""
+    kg, clients, base, _ = sim_env
+    base = dict(base, rounds=8, faults=_CHAOS, engine="superstep")
+    full = run_federated(clients, kg.num_entities, FederatedConfig(**base))
+    p = str(tmp_path / "ckpt.npz")
+    run_federated(  # the "killed" run: stops at round 4, checkpoint written
+        clients, kg.num_entities,
+        FederatedConfig(**dict(base, rounds=4, checkpoint_path=p,
+                               checkpoint_every=4)),
+    )
+    assert os.path.exists(p)
+    resumed = run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(**dict(base, checkpoint_path=p, checkpoint_every=4,
+                               resume=True)),
+    )
+    assert _same_run(full, resumed)
+    assert full.best_round == resumed.best_round
+    assert resumed.rounds_run == 8
+
+
+def test_checkpoint_fingerprint_mismatch_rejected(sim_env, tmp_path):
+    kg, clients, base, _ = sim_env
+    p = str(tmp_path / "ckpt.npz")
+    run_federated(
+        clients, kg.num_entities,
+        FederatedConfig(engine="fused", checkpoint_path=p, checkpoint_every=2,
+                        **base),
+    )
+    with pytest.raises(ValueError, match="different config"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(engine="fused", checkpoint_path=p,
+                            checkpoint_every=2, resume=True,
+                            **dict(base, lr=1e-3)),
+        )
+
+
+def test_checkpoint_config_validation(sim_env):
+    kg, clients, base, _ = sim_env
+    with pytest.raises(ValueError, match="checkpoint_path"):
+        run_federated(clients, kg.num_entities,
+                      FederatedConfig(engine="fused", checkpoint_every=2, **base))
+    with pytest.raises(ValueError, match="checkpoint_path"):
+        run_federated(clients, kg.num_entities,
+                      FederatedConfig(engine="fused", resume=True, **base))
+    with pytest.raises(ValueError, match="device engine"):
+        run_federated(
+            clients, kg.num_entities,
+            FederatedConfig(engine="reference", checkpoint_path="/tmp/x.npz",
+                            checkpoint_every=2, **base),
+        )

@@ -1,0 +1,132 @@
+"""Hypothesis chaos harness for the fault-injection subsystem.
+
+Two properties anchor the robustness story:
+
+* **all-ones neutrality** — a forced-trivial schedule keeps the fault
+  machinery compiled into the programs but draws all-ones masks
+  (``bernoulli(key, 1.0)`` is deterministically True); the resulting
+  trajectory must be *bitwise* identical to the unfaulted engines for every
+  registered wire codec, including error-feedback variants.  This pins down
+  that the mask plumbing itself (×1.0 multiplies, &True gates, queue
+  pass-throughs) never perturbs a value.
+* **ledger exactness under chaos** — for arbitrary drawn schedules
+  (participation, drops on both legs, lagged stragglers) the numpy
+  reference oracle and the scanned superstep engine must bill byte-for-byte
+  identical ledgers.  Sparsity is pinned at 1.0, which makes the downstream
+  selection tie-break-free, so billing is a pure function of the schedule —
+  any divergence is a fault-semantics bug, not a tie-break artifact.
+
+Seeded deterministic twins live in tests/test_faults.py (this container has
+no hypothesis wheel; CI installs requirements-dev.txt and runs these).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codecs import parse_codec_spec
+from repro.core.faults import FaultSchedule, parse_fault_spec
+from repro.core.protocol import build_comm_views
+from repro.core.state import CycleEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.simulation import FederatedConfig, run_federated
+
+CODEC_SPECS = ("identity", "int8", "int8:ef=1", "lowrank", "lowrank:ef=1",
+               "topk-dims")
+
+
+def _mini(seed, num_clients=2):
+    kg = generate_kg(num_entities=110, num_relations=4 * num_clients,
+                     num_triples=700, seed=seed)
+    cd = partition_by_relation(kg, num_clients, seed=0)
+
+    def mk():
+        return [
+            KGEClient(d, method="transe", dim=8, batch_size=32,
+                      num_negatives=4, lr=5e-3, seed=0)
+            for d in cd
+        ]
+
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    return kg, cd, views, mk
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.sampled_from(CODEC_SPECS),
+    st.integers(0, 50),  # instance seed
+    st.integers(0, 2**31 - 1),  # fault seed (must not matter at all-ones)
+)
+def test_forced_all_ones_schedule_is_bitwise_neutral(spec, seed, fault_seed):
+    kg, cd, views, mk = _mini(seed % 5)
+    codec = parse_codec_spec(spec)
+    plain = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                        local_epochs=1, codec=codec)
+    forced = CycleEngine(
+        mk(), views, kg.num_entities, sparsity_p=0.5, local_epochs=1,
+        codec=codec,
+        faults=FaultSchedule(seed=fault_seed, force=True),
+    )
+    assert forced._sched is not None  # machinery really compiled in
+    sa = plain.init_state(mk(), seed=seed)
+    sb = forced.init_state(mk(), seed=seed)
+    for t, sync in enumerate((False, False, True, False)):
+        sa, da, la = plain.fused_cycle(sa, sync=sync)
+        sb, db, lb = forced.fused_cycle(sb, sync=sync, t=t)
+        np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(sa.key), np.asarray(sb.key))
+    for name, a, b in (
+        ("entity", sa.arrays.params["entity"], sb.arrays.params["entity"]),
+        ("relation", sa.arrays.params["relation"], sb.arrays.params["relation"]),
+        ("hist", sa.arrays.hist, sb.arrays.hist),
+        ("res", sa.arrays.res, sb.arrays.res),
+        ("mu_e", sa.arrays.opt.mu["entity"], sb.arrays.opt.mu["entity"]),
+        ("nu_e", sa.arrays.opt.nu["entity"], sb.arrays.opt.nu["entity"]),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"{spec}:{name}"
+        )
+
+
+schedule_st = st.builds(
+    lambda p, du, dd, strag, lag, seed: (
+        f"p={p},drop_up={du},drop_down={dd},seed={seed}"
+        + (f",stragglers=0,lag={lag}" if strag else "")
+    ),
+    st.sampled_from([0.3, 0.5, 0.8, 1.0]),
+    st.sampled_from([0.0, 0.25]),
+    st.sampled_from([0.0, 0.25]),
+    st.booleans(),
+    st.integers(1, 2),
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=4, deadline=None)
+@given(schedule_st)
+def test_ledger_accounting_exact_reference_vs_superstep(spec):
+    """Byte-exact billing under arbitrary seeded schedules.  A trivial draw
+    (p=1.0, no drops, no stragglers) degenerates to the existing unfaulted
+    equivalence, which is exactly the intended boundary behavior."""
+    sched = parse_fault_spec(spec)
+    if sched.trivial:
+        spec = spec + ",force=1"  # keep the faulted code path under test
+    kg, cd, _views, _mk = _mini(3)
+    base = dict(method="transe", protocol="feds", dim=8, rounds=6,
+                local_epochs=1, batch_size=32, num_negatives=4, lr=5e-3,
+                sparsity_p=1.0, sync_interval=3, eval_every=3, patience=99,
+                max_eval_triples=30, seed=0, faults=spec)
+    ref = run_federated(cd, kg.num_entities,
+                        FederatedConfig(engine="reference", **base))
+    sstep = run_federated(cd, kg.num_entities,
+                          FederatedConfig(engine="superstep", **base))
+    assert ref.ledger.history == sstep.ledger.history, spec
+    assert ref.ledger.params_transmitted == sstep.ledger.params_transmitted
+    assert ref.ledger.bytes_int8_signs == sstep.ledger.bytes_int8_signs
+    assert all(np.isfinite(m) for _, m, _ in ref.eval_history)
+    assert all(np.isfinite(m) for _, m, _ in sstep.eval_history)
