@@ -51,12 +51,13 @@ BATCH = 128 if FAST else 512
 NEGATIVES = 8
 
 
-def _make_clients(rng):
+def _make_clients(rng, method="transe"):
     """FB15k-scale stand-in: random entity subsets + random local triples.
 
     The benchmark measures latency, not learning, so triples are uniform
     random over each client's local id space (relations global, as in
-    ``partition_by_relation`` output)."""
+    ``partition_by_relation`` output).  ``method`` parameterizes the scoring
+    method so the registry sweep in benchmarks/scoring.py can reuse this."""
     num_rel = 12
     datas = []
     for c in range(NUM_CLIENTS):
@@ -87,7 +88,7 @@ def _make_clients(rng):
         )
     clients = [
         KGEClient(
-            d, method="transe", dim=DIM, batch_size=BATCH,
+            d, method=method, dim=DIM, batch_size=BATCH,
             num_negatives=NEGATIVES, lr=1e-4, seed=0,
         )
         for d in datas

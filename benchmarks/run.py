@@ -25,6 +25,7 @@ JSON_PRODUCERS = {
     "BENCH_cycle.json": ("fused_cycle", "fused_cycle"),
     "BENCH_superstep.json": ("superstep", "superstep"),
     "BENCH_codecs.json": ("codecs", "codecs"),
+    "BENCH_scoring.json": ("scoring", "scoring"),
     "BENCH_eval.json": ("eval_throughput", "eval_throughput"),
     "BENCH_scale.json": ("scale_entities", "scale_entities"),
     "BENCH_churn.json": ("churn", "churn"),
@@ -79,9 +80,9 @@ def aggregate(bench_dir: str) -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,engine,cycle,sstep,codecs,eval,"
-                         "scale,table1,table2,table3,table4,table5,table6,"
-                         "fig2,sweep,churn,q8,roofline")
+                    help="comma list: kernels,engine,cycle,sstep,codecs,"
+                         "scoring,eval,scale,table1,table2,table3,table4,"
+                         "table5,table6,fig2,sweep,churn,q8,roofline")
     ap.add_argument("--aggregate", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="don't run suites; merge the BENCH_*.json records "
@@ -131,6 +132,13 @@ def main() -> None:
         rows, records = codecs.run()
         csv_rows += [tuple(r) for r in rows]
         claims += codecs.check_claims(records)
+
+    if want("scoring"):
+        from benchmarks import scoring
+
+        rows, records = scoring.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += scoring.check_claims(records)
 
     if want("eval"):
         from benchmarks import eval_throughput

@@ -36,11 +36,15 @@ functions on the same rows, the gold candidate is excluded explicitly (so
 a last-ulp difference in the separately computed gold score can never flip
 its own comparison), and padding candidates/rows are masked.
 ``tests/test_evaluation.py`` property-tests rank equality over randomized
-heterogeneous federations.  On TPU/interpret, TransE/RotatE candidate
-scores route through the tiled ``dist_cand_score_pallas`` kernel, whose
-arithmetic is tolerance-tested (~1e-4) rather than bitwise against the
-scoring functions — a near-tie candidate within that tolerance of the
-gold score may shift its integer rank by one there.
+heterogeneous federations.  On TPU/interpret, candidate scores route
+through the family-tagged eval kernels
+(:attr:`repro.kge.scoring.ScoringSpec.family`): the distance family
+(TransE/RotatE/pRotatE) through the tiled ``dist_cand_score_pallas``
+VPU kernel and the bilinear family (ComplEx/DistMult) through the
+matmul-style ``bilinear_cand_score_pallas`` MXU kernel.  Both are
+tolerance-tested (~1e-4) rather than bitwise against the scoring
+functions — a near-tie candidate within that tolerance of the gold
+score may shift its integer rank by one there.
 
 The bit-packed filter builders (:func:`build_known_index`,
 :func:`pack_filter_rows`, :func:`unpack_filter_words`) are shared with the
@@ -63,6 +67,7 @@ import numpy as np
 from repro.core import eshard
 from repro.data.partition import ClientData
 from repro.kernels import ops as kernel_ops
+from repro.kge import scoring as kge_scoring
 
 #: Bits per packed filter word.
 WORD_BITS = 32
@@ -223,6 +228,9 @@ class BatchedEvaluator:
         axis_name: str = "clients",
         entity_axis: Optional[str] = None,
     ):
+        # fail fast with the registry's self-describing error rather than at
+        # first compiled eval dispatch
+        kge_scoring.get_scoring(method)
         self.method = method
         self.gamma = float(gamma)
         self.e_max = int(e_max)

@@ -67,7 +67,7 @@ from repro.core.faults import (
 )
 from repro.core.sync import compress_schedule
 from repro.data.loader import stack_padded_triples
-from repro.kge.scoring import get_score_fn, loss_from_scores, per_sample_losses
+from repro.kge.scoring import get_scoring, loss_from_scores, per_sample_losses
 from repro.train.optimizer import AdamState, adam_update, masked_adam_update
 
 if TYPE_CHECKING:  # core never imports federated at runtime (layering)
@@ -436,7 +436,9 @@ class CycleEngine:
             )
             return pos, neg_t, neg_h
 
-        score = get_score_fn(self.method)
+        # registry-routed scoring: the spec's jit-safe score piece plus the
+        # family-tagged loss weighting inside per_sample_losses below
+        score = get_scoring(self.method).score
 
         def scores_of(rows, rel, cb):
             """Scores from ONE gathered row block ``[h; t; neg_t; neg_h]``."""

@@ -73,7 +73,7 @@ from repro.core.engine import (
 )
 from repro.core.sparsify import change_scores
 from repro.data.loader import stack_padded_triples
-from repro.kge.scoring import get_score_fn, per_sample_losses
+from repro.kge.scoring import get_scoring, per_sample_losses
 from repro.train.optimizer import AdamState, adam_update
 
 
@@ -463,7 +463,7 @@ class TieredCycleEngine:
         r_n, r_d = self.num_relations, self.rel_dim
         b_max, n_neg = self.b_max, self.num_negatives
         method, gamma, lr, temp = self.method, self.gamma, self.lr, self.temp
-        score = get_score_fn(method)
+        score = get_scoring(method).score
         cb = c_n * b_max
 
         def scores_of(rows, rel):

@@ -22,7 +22,7 @@ from repro.data.loader import TripleLoader
 from repro.data.partition import ClientData
 from repro.kge.scoring import (
     KGEModel,
-    get_score_fn,
+    get_scoring,
     init_kge_params,
     loss_from_scores,
     score_triples,
@@ -48,7 +48,7 @@ def _train_epoch(
     # loss directly materializes a dense (E, D) cotangent per gather, which
     # at FB15k scale costs ~20x the batch math itself.  Same gradient as
     # kge_loss, summation order aside.
-    score = get_score_fn(method)
+    score = get_scoring(method).score
 
     def step(carry, batch):
         params, opt_state = carry

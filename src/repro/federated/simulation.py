@@ -90,7 +90,7 @@ ENGINES = ("fused", "batched", "reference", "superstep", "tiered")
 
 @dataclasses.dataclass
 class FederatedConfig:
-    method: str = "transe"  # transe | rotate | complex
+    method: str = "transe"  # any registered scoring method (kge.scoring)
     protocol: str = "feds"  # single | fedep | feds | feds_nosync
     dim: int = 256
     rounds: int = 200

@@ -1,0 +1,70 @@
+"""Bilinear-family candidate-scoring Pallas kernel (DistMult / ComplEx eval).
+
+DistMult and ComplEx score with a trilinear *contraction*, not a distance,
+so the distance eval kernel (:mod:`repro.kernels.kge_score`) cannot serve
+them — before this kernel existed they silently fell back to the broadcast
+ref path even on TPU.  Both filtered-ranking legs reduce to a matmul against
+the shared candidate block with a per-leg precomputed query row
+(:attr:`repro.kge.scoring.ScoringSpec.cand_queries`):
+
+* DistMult tail ``q = h * r``, head ``q = t * r``;
+* ComplEx folds the relation into the query's (re, im) halves so each leg is
+  again ``score(c) = q . c``.
+
+That is a plain ``(B, D) x (D, N)`` contraction, so unlike the distance
+kernel — whose VPU reduction materialises a per-tile ``(BB, BN, D)``
+difference — the MXU does the reduction here.  The grid tiles (query-block x
+candidate-block) with full-D blocks, accumulating in f32
+(``preferred_element_type``); D zero-padding is exact for a dot product
+(padded coordinates contribute 0), B/N padding is sliced off the output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bilinear_kernel(q_ref, c_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)  # (BB, D)
+    c = c_ref[...].astype(jnp.float32)  # (BN, D)
+    out_ref[...] = jax.lax.dot_general(
+        q, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def bilinear_cand_score_pallas(
+    q: jnp.ndarray,  # (B, D) per-query rows (leg-specific, see kernels.ops)
+    cand: jnp.ndarray,  # (N, D) candidate rows SHARED across the batch
+    block_b: int = 8,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Evaluation-shaped bilinear scoring: ``q @ cand^T`` -> (B, N)."""
+    b, d = q.shape
+    n = cand.shape[0]
+    d_pad = (-d) % 128
+    b_pad = (-b) % block_b
+    n_pad = (-n) % block_n
+    q = jnp.pad(q, ((0, b_pad), (0, d_pad)))
+    cand = jnp.pad(cand, ((0, n_pad), (0, d_pad)))
+    bf, df = q.shape
+    nf = cand.shape[0]
+
+    out = pl.pallas_call(
+        _bilinear_kernel,
+        grid=(bf // block_b, nf // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, df), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bf, nf), jnp.float32),
+        interpret=interpret,
+    )(q, cand)
+    return out[:b, :n]

@@ -81,26 +81,31 @@ def transe_neg_score_pallas(
     return out[:b, :n]
 
 
-def _dist_cand_kernel(gamma, mode, half, q_ref, c_ref, out_ref):
+def _dist_cand_kernel(gamma, mode, half, modulus, q_ref, c_ref, out_ref):
     q = q_ref[...].astype(jnp.float32)  # (BB, D)
     c = c_ref[...].astype(jnp.float32)  # (BN, D)
     d = q[:, None, :] - c[None, :, :]  # (BB, BN, D)
     if mode == "transe":
         dist = jnp.sqrt(jnp.maximum(jnp.sum(d * d, axis=-1), 1e-24))
-    else:  # rotate with the unit-modulus rotation folded into q
+    elif mode == "rotate":  # unit-modulus rotation folded into q
         d_re, d_im = d[:, :, :half], d[:, :, half : 2 * half]
         dist = jnp.sqrt(d_re * d_re + d_im * d_im + 1e-12).sum(axis=-1)
+    else:  # protate: q AND c in phase units, weighted |sin| distance
+        dist = jnp.abs(jnp.sin(d)).sum(axis=-1) * modulus
     out_ref[...] = gamma - dist
 
 
 @functools.partial(
-    jax.jit, static_argnames=("gamma", "method", "block_b", "block_n", "interpret")
+    jax.jit,
+    static_argnames=("gamma", "method", "modulus", "block_b", "block_n",
+                     "interpret"),
 )
 def dist_cand_score_pallas(
     q: jnp.ndarray,  # (B, D) per-query rows (leg-specific, see kernels.ops)
     cand: jnp.ndarray,  # (N, D) candidate rows SHARED across the batch
     gamma: float,
     method: str = "transe",
+    modulus: float = 1.0,
     block_b: int = 8,
     block_n: int = 128,
     interpret: bool = False,
@@ -111,11 +116,14 @@ def dist_cand_score_pallas(
     filtered-ranking eval scores every query against ONE shared candidate
     block, so the kernel tiles (query-block x candidate-block) and the
     ``(B, N, D)`` difference tensor never exists outside VMEM.  Both legs of
-    both distance models reduce to this form with a precomputed query row:
-    TransE tail ``q = h + r``, head ``q = t - r``; RotatE tail ``q = h∘r``,
-    head ``q = t∘conj(r)`` (unit-modulus rotations preserve the distance).
-    D is zero-padded to a lane multiple (exact: padded coordinates cancel in
-    ``q - cand``; RotatE slices its true halves before the modulus).
+    every distance-family model reduce to this form with a precomputed query
+    row (:attr:`repro.kge.scoring.ScoringSpec.cand_queries`): TransE tail
+    ``q = h + r``, head ``q = t - r``; RotatE tail ``q = h∘r``, head
+    ``q = t∘conj(r)`` (unit-modulus rotations preserve the distance);
+    pRotatE rescales both q and the candidate block to phase units and takes
+    the ``modulus``-weighted ``|sin|`` distance.  D is zero-padded to a lane
+    multiple (exact: padded coordinates cancel in ``q - cand`` and
+    ``sin(0) = 0``; RotatE slices its true halves before the modulus).
     """
     b, d = q.shape
     n = cand.shape[0]
@@ -129,7 +137,7 @@ def dist_cand_score_pallas(
     nf = cand.shape[0]
 
     out = pl.pallas_call(
-        functools.partial(_dist_cand_kernel, gamma, method, half),
+        functools.partial(_dist_cand_kernel, gamma, method, half, modulus),
         grid=(bf // block_b, nf // block_n),
         in_specs=[
             pl.BlockSpec((block_b, df), lambda i, j: (i, 0)),

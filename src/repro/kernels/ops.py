@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bilinear_score import bilinear_cand_score_pallas
 from repro.kernels.change_score import change_score_pallas
 from repro.kernels.kge_score import (
     dist_cand_score_pallas,
@@ -76,41 +77,40 @@ def kge_cand_scores(h, r, t, cand, method: str, gamma: float):
     (leading axes, e.g. the client axis, broadcast/vmap through).  Returns
     ``(tail_scores, head_scores)``, each ``(..., B, N)``.
 
-    Dispatch: TPU/interpret routes TransE/RotatE through the tiled
-    ``dist_cand_score_pallas`` eval kernel (per-leg query rows precomputed,
-    see its docstring for the algebra); the ref path — and ComplEx, whose
-    trilinear form is not a distance — broadcasts the exact
-    :mod:`repro.kge.scoring` functions, which is what the oracle-exactness
-    property tests pin.
+    Dispatch is by the registry's family tag
+    (:attr:`repro.kge.scoring.ScoringSpec.family`): on TPU/interpret the
+    distance family runs through the tiled ``dist_cand_score_pallas`` eval
+    kernel and the bilinear family (ComplEx/DistMult — contractions, not
+    distances) through the matmul-style ``bilinear_cand_score_pallas``,
+    both with per-leg query rows precomputed by ``spec.cand_queries`` (see
+    the kernel docstrings for the algebra).  The ref path broadcasts the
+    exact :mod:`repro.kge.scoring` functions, which is what the
+    oracle-exactness property tests pin.  Unknown methods raise the
+    registry's ValueError listing every registered name.
     """
+    spec = scoring.get_scoring(method)
     mode = _mode()
-    if mode == "ref" or method == "complex":
-        score = scoring.get_score_fn(method)
-        ts = score(
+    if mode == "ref":
+        ts = spec.score(
             h[..., :, None, :], r[..., :, None, :], cand[..., None, :, :], gamma
         )
-        hs = score(
+        hs = spec.score(
             cand[..., None, :, :], r[..., :, None, :], t[..., :, None, :], gamma
         )
         return ts, hs
-    if method == "transe":
-        q_t = h + r  # ||(h + r) - cand||
-        q_h = t - r  # ||cand + r - t|| == ||cand - (t - r)||
-    elif method == "rotate":
-        half = h.shape[-1] // 2
-        cos, sin = jnp.cos(r), jnp.sin(r)
-        h_re, h_im = h[..., :half], h[..., half:]
-        t_re, t_im = t[..., :half], t[..., half:]
-        # tail: |h∘r - cand|; head: |cand∘r - t| == |cand - t∘conj(r)|
-        q_t = jnp.concatenate([h_re * cos - h_im * sin,
-                               h_re * sin + h_im * cos], axis=-1)
-        q_h = jnp.concatenate([t_re * cos + t_im * sin,
-                               t_im * cos - t_re * sin], axis=-1)
-    else:
-        raise ValueError(f"no candidate-scoring kernel for method {method!r}")
-    fn = lambda q, c: dist_cand_score_pallas(  # noqa: E731
-        q, c, gamma, method=method, interpret=(mode == "interpret")
-    )
+    interpret = mode == "interpret"
+    q_t, q_h = spec.cand_queries(h, r, t, gamma)
+    cand = spec.cand_prep(cand, gamma)
+    if spec.family == "distance":
+        statics = spec.kernel_statics(gamma, h.shape[-1])
+        fn = lambda q, c: dist_cand_score_pallas(  # noqa: E731
+            q, c, gamma, method=spec.kernel_mode, interpret=interpret,
+            **statics
+        )
+    else:  # bilinear: both legs are q @ cand^T on the MXU
+        fn = lambda q, c: bilinear_cand_score_pallas(  # noqa: E731
+            q, c, interpret=interpret
+        )
     for _ in range(h.ndim - 2):  # leading client axes
         fn = jax.vmap(fn)
     return fn(q_t, cand), fn(q_h, cand)

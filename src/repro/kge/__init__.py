@@ -1,24 +1,43 @@
-"""Knowledge-graph-embedding substrate: scoring models + losses.
+"""Knowledge-graph-embedding substrate: scoring registry + losses.
 
-The three KGE methods the paper evaluates (TransE, RotatE, ComplEx), with the
-self-adversarial negative-sampling loss used by FedE/RotatE.
+The registered KGE methods (TransE, RotatE, pRotatE, DistMult, ComplEx) as
+:class:`repro.kge.scoring.ScoringSpec` entries — per-method score pieces,
+rel_dim/init rules, and the distance/bilinear family tag the eval kernels
+dispatch on — with the self-adversarial negative-sampling loss used by
+FedE/RotatE.
 """
 from repro.kge.scoring import (
     KGEModel,
+    ScoringSpec,
     complex_score,
+    distmult_score,
+    get_score_fn,
+    get_scoring,
     init_kge_params,
     kge_loss,
+    parse_method,
+    protate_score,
+    registered_methods,
     rotate_score,
     score_triples,
+    scoring_usage,
     transe_score,
 )
 
 __all__ = [
     "KGEModel",
+    "ScoringSpec",
     "init_kge_params",
     "transe_score",
     "rotate_score",
+    "protate_score",
+    "distmult_score",
     "complex_score",
     "score_triples",
     "kge_loss",
+    "get_score_fn",
+    "get_scoring",
+    "parse_method",
+    "registered_methods",
+    "scoring_usage",
 ]

@@ -17,6 +17,7 @@ from repro.core.faults import parse_fault_spec
 from repro.core.sync import comm_ratio_worst_case
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.simulation import FederatedConfig, run_federated
+from repro.kge.scoring import parse_method, scoring_usage
 
 
 def _positive_int(value: str) -> int:
@@ -37,6 +38,16 @@ def _codec_spec(spec: str) -> str:
     return spec
 
 
+def _method_name(name: str) -> str:
+    """Validate --method against the scoring registry eagerly, carrying the
+    registry's own listing of registered methods (unlike a frozen choices=
+    list, new registrations show up here automatically)."""
+    try:
+        return parse_method(name)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+
+
 def _fault_spec(spec: str) -> str:
     """Validate a --faults spec eagerly, carrying the grammar message."""
     try:
@@ -49,13 +60,15 @@ def _fault_spec(spec: str) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser(
         formatter_class=argparse.RawDescriptionHelpFormatter,
-        epilog="registered wire codecs (--codec name:key=val,...):\n"
+        epilog="registered scoring methods (--method name):\n"
+        + scoring_usage()
+        + "\n\nregistered wire codecs (--codec name:key=val,...):\n"
         + codec_usage(),
     )
     ap.add_argument("--protocol", default="feds",
                     choices=["feds", "feds_nosync", "fedep", "single"])
-    ap.add_argument("--method", default="transe",
-                    choices=["transe", "rotate", "complex"])
+    ap.add_argument("--method", default="transe", type=_method_name,
+                    help="scoring method from the registry (see epilog)")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--rounds", type=int, default=40)

@@ -197,6 +197,79 @@ print(json.dumps(out))
 """
 
 
+# ------------------------- 2-device entity-mesh eval exactness (bilinear)
+_EVAL_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys, json
+sys.path.insert(0, "src")
+import numpy as np
+from repro.core.evaluation import BatchedEvaluator
+from repro.core.protocol import build_comm_views
+from repro.core.state import CycleEngine
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.launch.mesh import make_federation_mesh
+
+mesh = make_federation_mesh(1, entity_devices=2)
+out = {}
+for i, method in enumerate(("complex", "distmult")):
+    seed = 200 + i
+    rng = np.random.default_rng(seed)
+    kg = generate_kg(num_entities=110, num_relations=6, num_triples=600,
+                     seed=seed)
+    cd = partition_by_relation(kg, 2, seed=seed)
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    def mk():
+        return [KGEClient(d, method=method, dim=8, batch_size=32,
+                          num_negatives=4, lr=5e-3, seed=seed) for d in cd]
+    clients = mk()
+    host = CycleEngine(clients, views, kg.num_entities, sparsity_p=0.5,
+                       local_epochs=1)
+    shrd = CycleEngine(mk(), views, kg.num_entities, sparsity_p=0.5,
+                       local_epochs=1, mesh=mesh, entity_axis="entities")
+    sh, sp = host.init_state(mk(), seed=9), shrd.init_state(mk(), seed=9)
+    for sync in (False, True):
+        sh, _, _ = host.fused_cycle(sh, sync=sync)
+        sp, _, _ = shrd.fused_cycle(sp, sync=sync)
+    host.sync_clients(sh, clients)  # numpy-oracle tables
+
+    cap = int(rng.integers(5, 50))
+    chunk = int(rng.choice([7, 64]))
+    ev = BatchedEvaluator(cd, method=method, gamma=clients[0].gamma,
+                          e_max=shrd.e_max, max_triples=cap, chunk=chunk,
+                          mesh=mesh, entity_axis="entities")
+    ok = True
+    for split in ("valid", "test"):
+        rt, rh = ev.ranks(sp.arrays.params, split)
+        for c, cl in enumerate(clients):
+            oracle = cl.ranks(split, cap)  # (n, 2) tail/head integer ranks
+            n = oracle.shape[0]
+            ok &= bool(np.array_equal(oracle[:, 0], np.asarray(rt)[c, :n]))
+            ok &= bool(np.array_equal(oracle[:, 1], np.asarray(rh)[c, :n]))
+    out[method] = ok
+print(json.dumps(out))
+"""
+
+
+def test_entity_sharded_eval_ranks_match_oracle_bilinear():
+    """Bilinear-family eval exactness on the (1, 2) entity mesh: integer
+    filtered ranks from the sharded BatchedEvaluator (each shard scans its
+    own candidate block, beat counts psum) EXACTLY equal the per-client
+    numpy-oracle ranks for complex and distmult, after real training."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_PALLAS_INTERPRET", None)  # exactness pins the ref dispatch
+    res = subprocess.run(
+        [sys.executable, "-c", _EVAL_WORKER], capture_output=True, text=True,
+        env=env, timeout=1800,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out == {"complex": True, "distmult": True}, out
+
+
 def test_entity_sharded_bitwise_two_devices():
     """(1, 2) entity mesh over 2 fake CPU devices: every registered codec
     (incl. ef) bitwise-equal to unsharded, and end-to-end trajectories with

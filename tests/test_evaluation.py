@@ -94,6 +94,7 @@ def test_bank_pads_empty_and_capped_splits():
 # ------------------------------------------------- exact oracle equivalence
 @pytest.mark.parametrize("seed,method", [
     (0, "transe"), (1, "rotate"), (2, "complex"), (3, "transe"), (4, "rotate"),
+    (5, "distmult"), (6, "protate"), (7, "complex"), (8, "distmult"),
 ])
 def test_batched_ranks_exactly_equal_oracle(seed, method):
     """Integer filtered ranks (both legs) from the device program == the

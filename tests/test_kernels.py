@@ -96,47 +96,93 @@ def test_dist_cand_score_kernel(b, n, d, method):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("b,n,d", [(4, 8, 32), (7, 150, 64), (16, 257, 100)])
+@pytest.mark.parametrize("method", ["distmult", "complex"])
+def test_bilinear_cand_score_kernel(b, n, d, method):
+    """The bilinear (MXU contraction) eval kernel vs the exact scoring-fn
+    broadcast, both legs, using the registry's own query-row folding."""
+    from repro.kernels.bilinear_score import bilinear_cand_score_pallas
+    from repro.kge.scoring import get_scoring
+
+    if method == "complex" and d % 2:
+        d += 1
+    spec = get_scoring(method)
+    ks = jax.random.split(jax.random.PRNGKey(b * n + d), 4)
+    h = jax.random.normal(ks[0], (b, d))
+    r = jax.random.normal(ks[1], (b, spec.rel_dim(d)))
+    t = jax.random.normal(ks[2], (b, d))
+    cand = jax.random.normal(ks[3], (n, d))
+    q_t, q_h = spec.cand_queries(h, r, t, 8.0)
+    for q, want in (
+        (q_t, spec.score(h[:, None, :], r[:, None, :], cand[None, :, :], 8.0)),
+        (q_h, spec.score(cand[None, :, :], r[:, None, :], t[:, None, :], 8.0)),
+    ):
+        got = bilinear_cand_score_pallas(q, cand, block_b=4, block_n=32,
+                                         interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_kge_cand_scores_head_leg_algebra():
     """ops.kge_cand_scores' head-leg query folding (t - r for TransE,
-    t∘conj(r) for RotatE) must agree with scoring the candidates as heads
-    directly."""
+    t∘conj(r) for RotatE, t∘r / the conjugated coefficients for the
+    bilinear family) must agree with scoring the candidates as heads
+    directly, for EVERY registered method."""
     from repro.kernels import ops
-    from repro.kge.scoring import get_score_fn
+    from repro.kge.scoring import registered_methods
 
     ks = jax.random.split(jax.random.PRNGKey(5), 4)
     b, n, d = 6, 40, 16
     cand = jax.random.normal(ks[3], (n, d))
-    for method, rd in (("transe", d), ("rotate", d // 2)):
+    for method, spec in registered_methods().items():
         h = jax.random.normal(ks[0], (b, d))
-        r = jax.random.normal(ks[1], (b, rd))
+        r = jax.random.normal(ks[1], (b, spec.rel_dim(d)))
         t = jax.random.normal(ks[2], (b, d))
         _, hs = ops.kge_cand_scores(h, r, t, cand, method, 8.0)
-        want = get_score_fn(method)(
-            cand[None, :, :], r[:, None, :], t[:, None, :], 8.0
-        )
+        want = spec.score(cand[None, :, :], r[:, None, :], t[:, None, :], 8.0)
         np.testing.assert_allclose(np.asarray(hs), np.asarray(want),
                                    rtol=1e-5, atol=1e-5, err_msg=method)
 
 
-def test_kge_cand_scores_interpret_close_to_ref(monkeypatch):
-    """Pallas dispatch (interpret) of both legs stays within fp tolerance of
-    the exact ref path."""
+@pytest.mark.parametrize(
+    "method", ["transe", "rotate", "protate", "distmult", "complex"]
+)
+def test_kge_cand_scores_interpret_close_to_ref(monkeypatch, method):
+    """Family-tagged Pallas dispatch (interpret) of both legs stays within
+    fp tolerance of the exact ref path for every registered method — the
+    regression pin for the old silent ComplEx ref fallback."""
     from repro.kernels import ops
+    from repro.kge.scoring import get_scoring
 
+    spec = get_scoring(method)
     ks = jax.random.split(jax.random.PRNGKey(11), 4)
     b, n, d = 5, 33, 32
     h = jax.random.normal(ks[0], (b, d))
-    r = jax.random.normal(ks[1], (b, d))
+    r = jax.random.normal(ks[1], (b, spec.rel_dim(d)))
     t = jax.random.normal(ks[2], (b, d))
     cand = jax.random.normal(ks[3], (n, d))
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
-    ts_a, hs_a = ops.kge_cand_scores(h, r, t, cand, "transe", 8.0)
+    ts_a, hs_a = ops.kge_cand_scores(h, r, t, cand, method, 8.0)
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
-    ts_b, hs_b = ops.kge_cand_scores(h, r, t, cand, "transe", 8.0)
+    ts_b, hs_b = ops.kge_cand_scores(h, r, t, cand, method, 8.0)
     np.testing.assert_allclose(np.asarray(ts_a), np.asarray(ts_b),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(hs_a), np.asarray(hs_b),
                                rtol=1e-4, atol=1e-4)
+
+
+def test_kge_cand_scores_unknown_method_lists_registry():
+    """Unknown methods must raise the registry's self-describing error, not
+    silently fall back to any kernel."""
+    from repro.kernels import ops
+    from repro.kge.scoring import registered_methods
+
+    x = jnp.zeros((2, 8))
+    cand = jnp.zeros((3, 8))
+    with pytest.raises(ValueError) as e:
+        ops.kge_cand_scores(x, x, x, cand, "no-such-method", 8.0)
+    for name in registered_methods():
+        assert name in str(e.value)
 
 
 @pytest.mark.parametrize("shape", [(16, 8), (100, 64), (257, 100)])

@@ -1,0 +1,356 @@
+"""Scoring-registry oracle tests: every registered method's score, gradient,
+and loss pinned to an independent float64 numpy oracle, plus the registry's
+error-message/alias/CLI contracts.
+
+Seeded deterministic twins run everywhere; the drawn-shape/value property
+tests are hypothesis-guarded like tests/test_codecs_property.py (this
+container has no hypothesis wheel; CI installs requirements-dev.txt).
+"""
+import argparse
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+from repro.kge.scoring import (
+    KGEModel,
+    get_scoring,
+    init_kge_params,
+    kge_loss,
+    loss_from_scores,
+    parse_method,
+    registered_methods,
+    scoring_usage,
+)
+from repro.launch.train import _method_name
+
+GAMMA = 8.0
+EPSILON = 2.0  # the paper's fixed epsilon, baked into pRotatE's scales
+
+
+# ------------------------------------------------------- float64 numpy oracles
+def _np_transe(h, r, t, gamma):
+    d = h + r - t
+    return gamma - np.sqrt((d * d).sum(-1))
+
+
+def _np_rotate(h, phase, t, gamma):
+    half = h.shape[-1] // 2
+    h_re, h_im = h[..., :half], h[..., half:]
+    t_re, t_im = t[..., :half], t[..., half:]
+    r_re, r_im = np.cos(phase), np.sin(phase)
+    d_re = h_re * r_re - h_im * r_im - t_re
+    d_im = h_re * r_im + h_im * r_re - t_im
+    return gamma - np.sqrt(d_re**2 + d_im**2 + 1e-12).sum(-1)
+
+
+def _np_protate(h, phase, t, gamma):
+    dim = h.shape[-1]
+    s = (gamma + EPSILON) / dim / np.pi
+    modulus = 0.5 * (gamma + EPSILON) / dim
+    return gamma - np.abs(np.sin(h / s + phase - t / s)).sum(-1) * modulus
+
+
+def _np_distmult(h, r, t, gamma):
+    del gamma
+    return (h * r * t).sum(-1)
+
+
+def _np_complex(h, r, t, gamma):
+    del gamma
+    half = h.shape[-1] // 2
+    h_re, h_im = h[..., :half], h[..., half:]
+    r_re, r_im = r[..., :half], r[..., half:]
+    t_re, t_im = t[..., :half], t[..., half:]
+    return (
+        h_re * r_re * t_re
+        + h_im * r_re * t_im
+        + h_re * r_im * t_im
+        - h_im * r_im * t_re
+    ).sum(-1)
+
+
+ORACLES = {
+    "transe": _np_transe,
+    "rotate": _np_rotate,
+    "protate": _np_protate,
+    "distmult": _np_distmult,
+    "complex": _np_complex,
+}
+
+
+def _np_log_sigmoid(x):
+    return -np.logaddexp(0.0, -x)
+
+
+def _np_loss(pos_s, neg_s, adversarial, temp):
+    """float64 oracle for loss_from_scores (RotatE Eq. 5 / uniform)."""
+    if adversarial and temp > 0:
+        z = neg_s * temp
+        w = np.exp(z - z.max(-1, keepdims=True))
+        w = w / w.sum(-1, keepdims=True)
+    else:
+        w = np.full_like(neg_s, 1.0 / neg_s.shape[-1])
+    per = -_np_log_sigmoid(pos_s) - (w * _np_log_sigmoid(-neg_s)).sum(-1)
+    return per.mean() / 2.0
+
+
+def _draw(seed, b, dim, method, n_extra=0):
+    """Seeded f64 rows: (h, r, t) with the method's rel_dim; optionally an
+    extra (n_extra, dim) candidate block."""
+    spec = get_scoring(method)
+    rng = np.random.default_rng(seed)
+    scale = np.pi if spec.rel_init == "phase" else 2.0
+    h = rng.normal(size=(b, dim))
+    r = rng.uniform(-scale, scale, size=(b, spec.rel_dim(dim)))
+    t = rng.normal(size=(b, dim))
+    if n_extra:
+        return h, r, t, rng.normal(size=(n_extra, dim))
+    return h, r, t
+
+
+# ----------------------------------------------------------- registry contract
+def test_every_registered_method_has_an_oracle():
+    """Keep-honest: registering a method without recording its closed-form
+    numpy oracle here must fail loudly."""
+    for name in registered_methods():
+        assert name in ORACLES, (
+            f"no numpy oracle recorded for scoring method {name!r} — add one"
+        )
+
+
+def test_unknown_method_error_lists_registered_names():
+    with pytest.raises(ValueError) as e:
+        get_scoring("no-such-method")
+    msg = str(e.value)
+    assert "no-such-method" in msg
+    for name in registered_methods():
+        assert name in msg
+
+
+def test_aliases_resolve_to_canonical_names():
+    assert parse_method("prot") == "protate"
+    for name in registered_methods():
+        assert parse_method(name) == name
+
+
+def test_kge_model_validates_method_eagerly():
+    with pytest.raises(ValueError, match="registered methods"):
+        KGEModel(method="bogus", num_entities=4, num_relations=2, dim=8)
+
+
+def test_cli_method_type_surfaces_registry_error():
+    """--method goes through _method_name: argparse.ArgumentTypeError that
+    carries the registry's own listing, and aliases canonicalise."""
+    with pytest.raises(argparse.ArgumentTypeError) as e:
+        _method_name("no-such-method")
+    for name in registered_methods():
+        assert name in str(e.value)
+    assert _method_name("prot") == "protate"
+
+
+def test_scoring_usage_mentions_every_method_and_family():
+    usage = scoring_usage()
+    for name, spec in registered_methods().items():
+        assert name in usage
+        assert spec.family in usage
+
+
+def test_rel_dim_and_init_rules():
+    dim = 16
+    assert get_scoring("rotate").rel_dim(dim) == dim // 2
+    for name in ("transe", "protate", "distmult", "complex"):
+        assert get_scoring(name).rel_dim(dim) == dim
+    for name, spec in registered_methods().items():
+        model = KGEModel(method=name, num_entities=6, num_relations=3, dim=dim)
+        params = init_kge_params(jax.random.PRNGKey(0), model)
+        assert params["relation"].shape == (3, spec.rel_dim(dim))
+        bound = np.pi if spec.rel_init == "phase" else model.embedding_range
+        assert np.abs(np.asarray(params["relation"])).max() <= bound
+
+
+# -------------------------------------------------- deterministic oracle twins
+@pytest.mark.parametrize("method", sorted(ORACLES))
+@pytest.mark.parametrize("seed,b,dim", [(0, 5, 8), (1, 1, 16), (2, 7, 32)])
+def test_score_matches_numpy_oracle(method, seed, b, dim):
+    h, r, t = _draw(seed, b, dim, method)
+    spec = get_scoring(method)
+    got = spec.score(
+        jnp.asarray(h, jnp.float32), jnp.asarray(r, jnp.float32),
+        jnp.asarray(t, jnp.float32), GAMMA,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), ORACLES[method](h, r, t, GAMMA), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("method", sorted(ORACLES))
+def test_score_broadcasts_over_eval_candidate_axis(method):
+    """The eval ref path scores (B,1,D) queries against a (N,D) candidate
+    block by broadcasting — pin both legs' (B, N) surfaces to the oracle."""
+    h, r, t, cand = _draw(3, 4, 16, method, n_extra=9)
+    spec = get_scoring(method)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    tail = spec.score(f32(h)[:, None, :], f32(r)[:, None, :], f32(cand), GAMMA)
+    head = spec.score(f32(cand), f32(r)[:, None, :], f32(t)[:, None, :], GAMMA)
+    np.testing.assert_allclose(
+        np.asarray(tail),
+        ORACLES[method](h[:, None, :], r[:, None, :], cand, GAMMA),
+        rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(head),
+        ORACLES[method](cand, r[:, None, :], t[:, None, :], GAMMA),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("method", sorted(ORACLES))
+def test_grad_matches_finite_differences_of_oracle(method):
+    """jax.grad of the summed score vs central finite differences of the
+    float64 oracle — an oracle the autodiff graph never saw."""
+    h, r, t = _draw(4, 3, 8, method)
+    spec = get_scoring(method)
+
+    def jax_sum(h_, r_, t_):
+        return spec.score(h_, r_, t_, GAMMA).sum()
+
+    grads = jax.grad(jax_sum, argnums=(0, 1, 2))(
+        jnp.asarray(h, jnp.float32), jnp.asarray(r, jnp.float32),
+        jnp.asarray(t, jnp.float32),
+    )
+
+    eps = 1e-5
+    for arg, arr in enumerate((h, r, t)):
+        fd = np.zeros_like(arr)
+        for idx in np.ndindex(arr.shape):
+            args_p = [h.copy(), r.copy(), t.copy()]
+            args_m = [h.copy(), r.copy(), t.copy()]
+            args_p[arg][idx] += eps
+            args_m[arg][idx] -= eps
+            fd[idx] = (
+                ORACLES[method](*args_p, GAMMA).sum()
+                - ORACLES[method](*args_m, GAMMA).sum()
+            ) / (2 * eps)
+        np.testing.assert_allclose(
+            np.asarray(grads[arg]), fd, rtol=2e-3, atol=2e-3,
+            err_msg=f"{method} grad wrt arg {arg}",
+        )
+
+
+@pytest.mark.parametrize("method", sorted(ORACLES))
+@pytest.mark.parametrize("temp", [0.0, 1.0])
+def test_loss_matches_numpy_oracle(method, temp):
+    """loss_from_scores == float64 oracle; the adversarial flag is the
+    family rule (distance -> Eq. 5 weighting, bilinear -> uniform)."""
+    rng = np.random.default_rng(5)
+    pos_s = rng.normal(size=(6,)) * 3.0
+    neg_s = rng.normal(size=(6, 10)) * 3.0
+    spec = get_scoring(method)
+    got = loss_from_scores(
+        jnp.asarray(pos_s, jnp.float32), jnp.asarray(neg_s, jnp.float32),
+        method, temp,
+    )
+    want = _np_loss(pos_s, neg_s, spec.adversarial, temp)
+    np.testing.assert_allclose(float(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", sorted(ORACLES))
+def test_kge_loss_matches_oracle_end_to_end(method):
+    """kge_loss from params+indices == oracle loss built from oracle scores
+    (gathers, negative-leg concat order, and averaging all pinned)."""
+    rng = np.random.default_rng(6)
+    ne, nr, dim, b, n = 12, 4, 16, 5, 7
+    spec = get_scoring(method)
+    ent = rng.normal(size=(ne, dim))
+    rel = rng.uniform(-np.pi, np.pi, size=(nr, spec.rel_dim(dim)))
+    params = {
+        "entity": jnp.asarray(ent, jnp.float32),
+        "relation": jnp.asarray(rel, jnp.float32),
+    }
+    pos = rng.integers(0, [ne, nr, ne], size=(b, 3))
+    neg_t = rng.integers(0, ne, size=(b, n))
+    neg_h = rng.integers(0, ne, size=(b, n))
+
+    got = kge_loss(
+        params, jnp.asarray(pos), jnp.asarray(neg_t), jnp.asarray(neg_h),
+        method, GAMMA, 1.0,
+    )
+    oracle = ORACLES[method]
+    h, r, t = ent[pos[:, 0]], rel[pos[:, 1]], ent[pos[:, 2]]
+    pos_s = oracle(h, r, t, GAMMA)
+    neg_s = np.concatenate(
+        [
+            oracle(h[:, None, :], r[:, None, :], ent[neg_t], GAMMA),
+            oracle(ent[neg_h], r[:, None, :], t[:, None, :], GAMMA),
+        ],
+        axis=-1,
+    )
+    want = _np_loss(pos_s, neg_s, spec.adversarial, 1.0)
+    np.testing.assert_allclose(float(got), want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- drawn-shape property form
+if _HAVE_HYPOTHESIS:
+    triple_st = st.tuples(
+        st.integers(0, 2**31 - 1),  # value seed
+        st.integers(1, 8),  # batch
+        st.sampled_from([8, 16, 32]),  # entity dim (even: complex halves)
+        st.floats(2.0, 12.0),  # gamma
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(triple_st, st.sampled_from(sorted(ORACLES)))
+    def test_score_matches_oracle_drawn(draw, method):
+        seed, b, dim, gamma = draw
+        h, r, t = _draw(seed, b, dim, method)
+        got = get_scoring(method).score(
+            jnp.asarray(h, jnp.float32), jnp.asarray(r, jnp.float32),
+            jnp.asarray(t, jnp.float32), gamma,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), ORACLES[method](h, r, t, gamma),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(triple_st, st.sampled_from(sorted(ORACLES)), st.integers(1, 12))
+    def test_broadcast_eval_shapes_match_oracle_drawn(draw, method, n):
+        seed, b, dim, gamma = draw
+        h, r, t, cand = _draw(seed, b, dim, method, n_extra=n)
+        spec = get_scoring(method)
+        f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+        tail = spec.score(
+            f32(h)[:, None, :], f32(r)[:, None, :], f32(cand), gamma
+        )
+        np.testing.assert_allclose(
+            np.asarray(tail),
+            ORACLES[method](h[:, None, :], r[:, None, :], cand, gamma),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.sampled_from(sorted(ORACLES)),
+        st.floats(0.0, 2.0),
+    )
+    def test_loss_matches_oracle_drawn(seed, method, temp):
+        rng = np.random.default_rng(seed)
+        pos_s = rng.normal(size=(4,)) * 4.0
+        neg_s = rng.normal(size=(4, 6)) * 4.0
+        got = loss_from_scores(
+            jnp.asarray(pos_s, jnp.float32), jnp.asarray(neg_s, jnp.float32),
+            method, temp,
+        )
+        want = _np_loss(pos_s, neg_s, get_scoring(method).adversarial, temp)
+        np.testing.assert_allclose(float(got), want, rtol=1e-5, atol=1e-5)

@@ -29,6 +29,7 @@ from repro.core.sync import compress_schedule
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.client import KGEClient
 from repro.federated.simulation import FederatedConfig, run_federated
+from repro.kge.scoring import registered_methods
 
 
 def _instance(seed):
@@ -81,6 +82,67 @@ def test_fused_matches_batched_trajectory_and_ledger(seed, protocol):
     assert fused.ledger.bytes_int8_signs == batched.ledger.bytes_int8_signs
     assert fused.test_mrr_cg == batched.test_mrr_cg
     assert np.isfinite(fused.test_mrr_cg)
+
+
+def _small_federation(seed=0):
+    kg = generate_kg(num_entities=80, num_relations=6, num_triples=400,
+                     seed=seed)
+    return kg, partition_by_relation(kg, 2, seed=seed)
+
+
+@pytest.mark.parametrize("method", sorted(registered_methods()))
+def test_all_engines_agree_for_every_registered_method(method):
+    """Engine-equivalence sweep over the WHOLE scoring registry: for every
+    registered method the three device engines (fused, batched, superstep)
+    are trajectory- and ledger-bitwise-identical, and the ragged numpy
+    reference protocol transmits the bitwise-same ledger (its training
+    arithmetic is an independent host oracle with a different summation
+    order, so trajectories agree only statistically — finiteness pinned).
+    Catches any engine still dispatching on a hardcoded method list instead
+    of the registry."""
+    kg, clients = _small_federation()
+    cfg = dict(method=method, dim=8, rounds=3, local_epochs=1, batch_size=32,
+               num_negatives=4, lr=5e-3, sync_interval=2, eval_every=2,
+               patience=99, max_eval_triples=20, seed=3)
+    runs = {
+        eng: run_federated(clients, kg.num_entities,
+                           FederatedConfig(engine=eng, **cfg))
+        for eng in ("fused", "batched", "superstep", "reference")
+    }
+    fused = runs["fused"]
+    assert np.isfinite(fused.test_mrr_cg)
+    for eng in ("batched", "superstep"):
+        assert fused.eval_history == runs[eng].eval_history, eng
+        assert fused.ledger.history == runs[eng].ledger.history, eng
+        assert fused.test_mrr_cg == runs[eng].test_mrr_cg, eng
+    for eng in ("batched", "superstep", "reference"):
+        assert fused.ledger.params_transmitted == \
+            runs[eng].ledger.params_transmitted, eng
+        assert fused.ledger.bytes_int8_signs == \
+            runs[eng].ledger.bytes_int8_signs, eng
+    assert np.isfinite(runs["reference"].test_mrr_cg)
+
+
+@pytest.mark.parametrize("method", ["protate", "distmult"])
+def test_engines_agree_through_ef_codec_sweep(method):
+    """Same device-engine parity through an error-feedback wire codec
+    (int8:ef=1) for one method of each family — EF residual banks ride the
+    engine state, so this catches any registry-routed method whose state
+    layout breaks the banked-residual threading."""
+    kg, clients = _small_federation(1)
+    cfg = dict(method=method, dim=8, rounds=4, local_epochs=1, batch_size=32,
+               num_negatives=4, lr=5e-3, sync_interval=2, eval_every=2,
+               patience=99, max_eval_triples=20, seed=5, codec="int8:ef=1")
+    runs = [
+        run_federated(clients, kg.num_entities,
+                      FederatedConfig(engine=eng, **cfg))
+        for eng in ("fused", "batched", "superstep")
+    ]
+    for other in runs[1:]:
+        assert runs[0].eval_history == other.eval_history
+        assert runs[0].ledger.history == other.ledger.history
+        assert runs[0].test_mrr_cg == other.test_mrr_cg
+    assert np.isfinite(runs[0].test_mrr_cg)
 
 
 def test_fused_matches_batched_quantized_fedep():
