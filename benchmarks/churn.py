@@ -120,6 +120,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "churn",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "dim": DIM, "rounds": ROUNDS, "sync_s": SYNC_S,

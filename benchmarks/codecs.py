@@ -122,6 +122,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "codecs",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,

@@ -172,6 +172,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "eval_throughput",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,

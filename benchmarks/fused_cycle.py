@@ -212,6 +212,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "fused_cycle",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,

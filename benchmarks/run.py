@@ -20,7 +20,9 @@ import time
 
 # Every benchmark that records a JSON trajectory in CI: artifact file ->
 # (producer module, required "bench" tag).  tools/docs_lint.py checks each
-# artifact is referenced in EXPERIMENTS.md; CI uploads them all.
+# artifact is referenced in EXPERIMENTS.md; CI uploads them all.  Producers
+# containing "/" are repo-relative script paths; bare names live under
+# benchmarks/.
 JSON_PRODUCERS = {
     "BENCH_cycle.json": ("fused_cycle", "fused_cycle"),
     "BENCH_superstep.json": ("superstep", "superstep"),
@@ -29,7 +31,15 @@ JSON_PRODUCERS = {
     "BENCH_eval.json": ("eval_throughput", "eval_throughput"),
     "BENCH_scale.json": ("scale_entities", "scale_entities"),
     "BENCH_churn.json": ("churn", "churn"),
+    "BENCH_telemetry.json": ("telemetry_overhead", "telemetry_overhead"),
+    "BENCH_trace.json": ("tools/trace_report", "trace_report"),
 }
+
+SCHEMA_VERSION = 1
+
+
+def _producer_script(module: str) -> str:
+    return f"{module}.py" if "/" in module else f"benchmarks/{module}.py"
 
 
 def aggregate(bench_dir: str) -> int:
@@ -39,7 +49,7 @@ def aggregate(bench_dir: str) -> int:
     for fname, (module, tag) in sorted(JSON_PRODUCERS.items()):
         path = os.path.join(bench_dir, fname)
         if not os.path.exists(path):
-            errors.append(f"{fname}: missing — benchmarks/{module}.py "
+            errors.append(f"{fname}: missing — {_producer_script(module)} "
                           f"produced no JSON record")
             continue
         try:
@@ -52,6 +62,14 @@ def aggregate(bench_dir: str) -> int:
             errors.append(f"{fname}: bad record — expected a dict with "
                           f'bench == "{tag}", got '
                           f"{rec.get('bench') if isinstance(rec, dict) else type(rec).__name__!r}")
+            continue
+        if rec.get("schema_version") != SCHEMA_VERSION:
+            errors.append(
+                f"{fname}: schema_version "
+                f"{rec.get('schema_version')!r} != {SCHEMA_VERSION} — "
+                f"{_producer_script(module)} emits a stale or missing "
+                f"version; bump the producer, not the checker"
+            )
             continue
         if not isinstance(rec.get("fast"), bool) or not rec.get("claims"):
             errors.append(f"{fname}: schema violation — every record needs "
@@ -81,8 +99,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: kernels,engine,cycle,sstep,codecs,"
-                         "scoring,eval,scale,table1,table2,table3,table4,"
-                         "table5,table6,fig2,sweep,churn,q8,roofline")
+                         "scoring,eval,scale,telemetry,table1,table2,table3,"
+                         "table4,table5,table6,fig2,sweep,churn,q8,roofline")
     ap.add_argument("--aggregate", nargs="?", const=".", default=None,
                     metavar="DIR",
                     help="don't run suites; merge the BENCH_*.json records "
@@ -154,6 +172,13 @@ def main() -> None:
         rows = scale_entities.run()
         csv_rows += [tuple(r) for r in rows]
         claims += scale_entities.check_claims(rows)
+
+    if want("telemetry"):
+        from benchmarks import telemetry_overhead
+
+        rows, record = telemetry_overhead.run()
+        csv_rows += [tuple(r) for r in rows]
+        claims += telemetry_overhead.check_claims(record)
 
     suites = [
         ("table1", "table1_compression"),

@@ -243,6 +243,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "scale_entities",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "clients": NUM_CLIENTS, "dim": DIM, "batch": BATCH,

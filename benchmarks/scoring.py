@@ -131,6 +131,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "scoring",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,

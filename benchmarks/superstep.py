@@ -129,6 +129,7 @@ def main() -> None:
     if args.json:
         rec = {
             "bench": "superstep",
+            "schema_version": 1,
             "fast": FAST,
             "config": {
                 "num_global": NUM_GLOBAL, "dim": DIM, "clients": NUM_CLIENTS,

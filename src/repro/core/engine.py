@@ -51,6 +51,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eshard
+from repro.core.telemetry import (
+    RoundTelemetry,
+    record_spec as telemetry_record_spec,
+    residual_mass,
+    score_histogram,
+    upload_overlap,
+)
 from repro.core.codecs import IdentityCodec, WireCodec
 from repro.core.sparsify import change_scores, sparsity_k, top_k_select
 from repro.kernels import ops as kernel_ops
@@ -159,11 +166,15 @@ def batched_sparse_round(
     faults=None,  # Optional[repro.core.faults.RoundFaults] of (C_local,) masks
     straggler: Optional[jnp.ndarray] = None,  # (C_local,) f32 straggler set
     queue=None,  # (q_idx, q_val, q_msk) straggler in-flight message buffers
+    prev=None,  # (prev_idx, prev_msk) telemetry carry (core/telemetry.py)
 ):
     """One sparse FedS round over padded batched client state.
 
     Returns ``(emb', hist', down_count)``, plus ``res'`` when ``res`` is
-    given, plus the advanced ``queue`` when ``queue`` is given.  With an
+    given, plus the advanced ``queue`` when ``queue`` is given, plus
+    ``(RoundTelemetry, (prev_idx', prev_msk'))`` appended last when ``prev``
+    is given (the flight-recorder record and the advanced overlap carry;
+    ``prev=None`` compiles exactly the untelemetered program).  With an
     error-feedback codec (``codec.has_residual``) the residual of each
     *uploaded* row — what the codec's lossy round-trip dropped — is banked
     in ``res`` and re-injected into that row's wire value the next time it
@@ -355,6 +366,39 @@ def batched_sparse_round(
         out = out + (new_res,)
     if queue is not None:
         out = out + (new_queue,)
+    if prev is not None:
+        prev_idx, prev_msk = prev
+        up_idx32 = up_idx.astype(jnp.int32)
+        if faults is None:
+            partf = up_okf = dn_okf = jnp.ones((cl,), emb.dtype)
+            new_prev = (up_idx32, up_maskf)
+        else:
+            partf, up_okf, dn_okf = faults.part, faults.up_ok, faults.dn_ok
+            # the carry tracks the last upload actually SENT: absent clients
+            # keep their previous selection
+            partb = partf[:, None] > 0.5
+            new_prev = (
+                jnp.where(partb, up_idx32, prev_idx),
+                jnp.where(partb, up_maskf, prev_msk),
+            )
+        if new_res is not None:
+            res_mass = residual_mass(new_res, entity_axis=ea)
+        else:
+            res_mass = jnp.zeros((cl,), emb.dtype)
+        rec = RoundTelemetry(
+            up_rows=sent_maskf.sum(axis=1).astype(jnp.int32),
+            dn_rows=down_count,
+            overlap=upload_overlap(up_idx, sent_maskf, prev_idx, prev_msk),
+            res_mass=res_mass,
+            part=partf,
+            up_ok=up_okf,
+            dn_ok=dn_okf,
+            # ages live in FaultArrays; the cycle engines overwrite this
+            # placeholder with the post-update counters
+            age=jnp.zeros((cl,), jnp.int32),
+            score_hist=score_histogram(scores, valid_blk, entity_axis=ea),
+        )
+        out = out + (rec, new_prev)
     return out
 
 
@@ -435,8 +479,10 @@ class RoundEngine:
         codec: Optional[WireCodec] = None,
         mesh=None,
         axis_name: str = "clients",
+        telemetry: bool = False,
     ):
         self.views = list(views)
+        self._tel = bool(telemetry)
         self.num_global = int(num_global_entities)
         self.dim = int(dim)
         self.codec = codec if codec is not None else IdentityCodec()
@@ -471,6 +517,23 @@ class RoundEngine:
                 faults=RoundFaults(part, up_ok, dn_ok),
             )
 
+        def sparse_tel(emb, hist, gid, valid, k, jitter, prev_idx, prev_msk):
+            return sparse_core(
+                emb, hist, gid, valid, k, jitter, prev=(prev_idx, prev_msk)
+            )
+
+        def sparse_faulted_tel(
+            emb, hist, gid, valid, k, jitter, part, up_ok, dn_ok,
+            prev_idx, prev_msk,
+        ):
+            from repro.core.faults import RoundFaults
+
+            return sparse_core(
+                emb, hist, gid, valid, k, jitter,
+                faults=RoundFaults(part, up_ok, dn_ok),
+                prev=(prev_idx, prev_msk),
+            )
+
         def sync_faulted(emb, gid, valid, part, up_ok, dn_ok):
             from repro.core.faults import RoundFaults
 
@@ -483,6 +546,9 @@ class RoundEngine:
             self._sync = jax.jit(sync_core)
             self._sparse_faulted = jax.jit(sparse_faulted)
             self._sync_faulted = jax.jit(sync_faulted)
+            if self._tel:
+                self._sparse_tel = jax.jit(sparse_tel)
+                self._sparse_faulted_tel = jax.jit(sparse_faulted_tel)
         else:
             p = jax.sharding.PartitionSpec(axis_name)
             self._sparse = jax.jit(shard_map(
@@ -500,6 +566,16 @@ class RoundEngine:
                 sync_faulted, mesh=mesh,
                 in_specs=(p,) * 6, out_specs=(p, p),
             ))
+            if self._tel:
+                ts = telemetry_record_spec(p)
+                self._sparse_tel = jax.jit(shard_map(
+                    sparse_tel, mesh=mesh,
+                    in_specs=(p,) * 8, out_specs=(p, p, p, ts, (p, p)),
+                ))
+                self._sparse_faulted_tel = jax.jit(shard_map(
+                    sparse_faulted_tel, mesh=mesh,
+                    in_specs=(p,) * 11, out_specs=(p, p, p, ts, (p, p)),
+                ))
 
     # ------------------------------------------------------- host transfers
     def gather(self, tables: Sequence) -> jnp.ndarray:
@@ -527,28 +603,45 @@ class RoundEngine:
         hist: jnp.ndarray,  # (C, Ns_max, D)
         jitter: Optional[jnp.ndarray] = None,  # (C, Ns_max) in [0, 1)
         faults=None,  # Optional[repro.core.faults.RoundFaults] of (C,) masks
+        prev=None,  # telemetry carry (requires telemetry=True at init)
     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """One sparse FedS round.  Returns (emb', hist', down_count (C,)).
+        """One sparse FedS round.  Returns (emb', hist', down_count (C,)),
+        plus ``(RoundTelemetry, prev')`` when a telemetry carry is passed.
 
         ``faults`` injects per-round participation / message-drop masks
         (:mod:`repro.core.faults`).  RoundEngine is stateless per round, so
         straggler queues (which need carried state) are the cycle engines'
-        job — exactly like EF residuals.
+        job — exactly like EF residuals; the telemetry overlap carry is
+        likewise the *caller's* state, threaded explicitly via ``prev``.
         """
+        if prev is not None and not self._tel:
+            raise ValueError("pass telemetry=True at construction to record")
         if jitter is None:
             jitter = jnp.zeros((self.num_clients, self.ns_max), jnp.float32)
         # halve after the f32 cast: float64 values in [1-2^-25, 1) round to
         # exactly 1.0f, which would tie with the next priority level
         jitter = jnp.asarray(jitter, jnp.float32) * 0.5
         if faults is None:
-            return self._sparse(
-                emb, hist, self._gid, self._valid, self._k, jitter
+            if prev is None:
+                return self._sparse(
+                    emb, hist, self._gid, self._valid, self._k, jitter
+                )
+            return self._sparse_tel(
+                emb, hist, self._gid, self._valid, self._k, jitter,
+                prev[0], prev[1],
             )
-        return self._sparse_faulted(
-            emb, hist, self._gid, self._valid, self._k, jitter,
+        masks = (
             jnp.asarray(faults.part, jnp.float32),
             jnp.asarray(faults.up_ok, jnp.float32),
             jnp.asarray(faults.dn_ok, jnp.float32),
+        )
+        if prev is None:
+            return self._sparse_faulted(
+                emb, hist, self._gid, self._valid, self._k, jitter, *masks
+            )
+        return self._sparse_faulted_tel(
+            emb, hist, self._gid, self._valid, self._k, jitter, *masks,
+            prev[0], prev[1],
         )
 
     def sync_round(

@@ -64,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eshard
+from repro.core import eshard, telemetry
 from repro.data.partition import ClientData
 from repro.kernels import ops as kernel_ops
 from repro.kge import scoring as kge_scoring
@@ -433,7 +433,8 @@ class BatchedEvaluator:
     def evaluate(self, params: dict, split: str) -> np.ndarray:
         """Run the compiled program; returns the (C, EVAL_BLOCK_COLS) block
         as numpy — the ONLY host transfer an eval boundary performs."""
-        return np.asarray(self._eval(params, self.banks[split]))
+        with telemetry.span("eval", split=split):
+            return np.asarray(self._eval(params, self.banks[split]))
 
     def ranks(self, params: dict, split: str) -> tuple[np.ndarray, np.ndarray]:
         """Integer filtered ranks (tail leg, head leg), each (C, B_max) —

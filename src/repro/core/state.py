@@ -66,6 +66,15 @@ from repro.core.faults import (
     init_fault_arrays,
 )
 from repro.core.sync import compress_schedule
+from repro.core.telemetry import (
+    NUM_SCORE_BUCKETS,
+    RoundTelemetry,
+    TelemetryArrays,
+    init_telemetry_arrays,
+    record_spec,
+    residual_mass,
+    telemetry_spec,
+)
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_scoring, loss_from_scores, per_sample_losses
 from repro.train.optimizer import AdamState, adam_update, masked_adam_update
@@ -90,6 +99,12 @@ class StateArrays(NamedTuple):
     #                      zero-width queue when the schedule has no
     #                      stragglers, passed through untouched when the
     #                      engine has no active fault schedule at all
+    tel: Optional[TelemetryArrays] = None  # flight-recorder overlap carry
+    #                      (repro.core.telemetry): the previous round's sent
+    #                      upload selection.  None — zero pytree leaves —
+    #                      with telemetry off, so untelemetered runs compile
+    #                      exactly the historical programs (the same static
+    #                      gating as trivial fault schedules)
 
 
 class CycleConsts(NamedTuple):
@@ -143,10 +158,14 @@ class CycleEngine:
         axis_name: str = "clients",
         entity_axis: Optional[str] = None,
         faults: Optional[FaultSchedule] = None,
+        telemetry: bool = False,
     ):
         self.views = list(views)
         self.num_global = int(num_global_entities)
         self.num_clients = len(clients)
+        # static, like the trivial-schedule gate: telemetry=False builds the
+        # exact historical programs (no record outputs, no overlap carry)
+        self._tel = bool(telemetry)
         # a trivial schedule compiles EXACTLY the fault-free programs — the
         # all-present case is bitwise pre-fault by construction, not by test
         self._sched = (
@@ -265,6 +284,8 @@ class CycleEngine:
         self._train_core_fn = train_core
         self._comm_core_fn = comm_core
 
+        tel = self._tel
+
         def comm_sparse(arrays, jitter, consts):
             return comm_core(arrays, jitter, consts, do_sync=False)
 
@@ -273,6 +294,11 @@ class CycleEngine:
 
         def fused(arrays, kb, kj, consts, do_sync):
             arrays, jitter, loss = train_core(arrays, kb, kj, consts)
+            if tel:
+                arrays, down, rec = comm_core(
+                    arrays, jitter, consts, do_sync=do_sync
+                )
+                return arrays, down, loss, rec
             arrays, down = comm_core(arrays, jitter, consts, do_sync=do_sync)
             return arrays, down, loss
 
@@ -311,10 +337,14 @@ class CycleEngine:
 
         def fused_f(arrays, kb, kj, consts, t, do_sync):
             arrays, jitter, loss = train_core(arrays, kb, kj, consts)
-            arrays, down = comm_core(
+            out = comm_core(
                 arrays, jitter, consts, do_sync=do_sync,
                 rf=round_faults_of(consts, t),
             )
+            if tel:
+                arrays, down, rec = out
+                return arrays, down, loss, rec
+            arrays, down = out
             return arrays, down, loss
 
         fused_sparse_f = functools.partial(fused_f, do_sync=False)
@@ -344,39 +374,43 @@ class CycleEngine:
             pa = self._arrays_spec()  # StateArrays-shaped (or plain prefix)
             p = jax.sharding.PartitionSpec(axis_name)
             r = jax.sharding.PartitionSpec()
+            # record leaves are all client-axis-leading and psum-replicated
+            # over any entity axis, so one client-only spec covers the pytree
+            comm_out = (pa, p, record_spec(p)) if tel else (pa, p)
+            fused_out = (pa, p, p, record_spec(p)) if tel else (pa, p, p)
             self._train = jax.jit(shard_map(
                 train_core, mesh=mesh, in_specs=(pa, r, r, p), out_specs=(pa, p, p),
             ), donate_argnums=(0,))
             self._comm_sparse = jax.jit(shard_map(
-                comm_sparse, mesh=mesh, in_specs=(pa, p, p), out_specs=(pa, p),
+                comm_sparse, mesh=mesh, in_specs=(pa, p, p), out_specs=comm_out,
             ), donate_argnums=(0,))
             self._comm_sync = jax.jit(shard_map(
-                comm_sync, mesh=mesh, in_specs=(pa, p), out_specs=(pa, p),
+                comm_sync, mesh=mesh, in_specs=(pa, p), out_specs=comm_out,
             ), donate_argnums=(0,))
             self._fused_sparse = jax.jit(shard_map(
                 fused_sparse, mesh=mesh, in_specs=(pa, r, r, p),
-                out_specs=(pa, p, p),
+                out_specs=fused_out,
             ), donate_argnums=(0,))
             self._fused_sync = jax.jit(shard_map(
                 fused_sync, mesh=mesh, in_specs=(pa, r, r, p),
-                out_specs=(pa, p, p),
+                out_specs=fused_out,
             ), donate_argnums=(0,))
             if sched is not None:
                 self._comm_sparse_f = jax.jit(shard_map(
                     comm_sparse_f, mesh=mesh, in_specs=(pa, p, p, r),
-                    out_specs=(pa, p),
+                    out_specs=comm_out,
                 ), donate_argnums=(0,))
                 self._comm_sync_f = jax.jit(shard_map(
                     comm_sync_f, mesh=mesh, in_specs=(pa, p, r),
-                    out_specs=(pa, p),
+                    out_specs=comm_out,
                 ), donate_argnums=(0,))
                 self._fused_sparse_f = jax.jit(shard_map(
                     fused_sparse_f, mesh=mesh, in_specs=(pa, r, r, p, r),
-                    out_specs=(pa, p, p),
+                    out_specs=fused_out,
                 ), donate_argnums=(0,))
                 self._fused_sync_f = jax.jit(shard_map(
                     fused_sync_f, mesh=mesh, in_specs=(pa, r, r, p, r),
-                    out_specs=(pa, p, p),
+                    out_specs=fused_out,
                 ), donate_argnums=(0,))
 
     def _arrays_spec(self):
@@ -400,6 +434,8 @@ class CycleEngine:
             # fault state is small and per-client (queue values are gathered
             # full rows, already entity-replicated) — client-only sharding
             faults=FaultArrays(age=p, q_idx=p, q_val=p, q_msk=p),
+            # overlap carry is (C, k_max) slot indices — client-only too
+            tel=telemetry_spec(p) if self._tel else None,
         )
 
     def _bank_spec(self):
@@ -631,7 +667,10 @@ class CycleEngine:
             if ns_pad > ns_max:
                 jitter = jnp.pad(jitter, ((0, 0), (0, ns_pad - ns_max)))
             return (
-                StateArrays(params, opt, arrays.hist, arrays.res, arrays.faults),
+                StateArrays(
+                    params, opt, arrays.hist, arrays.res, arrays.faults,
+                    arrays.tel,
+                ),
                 jitter,
                 loss,
             )
@@ -643,9 +682,12 @@ class CycleEngine:
         codec, axis = self.codec, self._axis
         eaxis, ns_blk = self._eaxis, self.ns_pad // self.n_eshards
         has_stragglers = self._sched is not None and self._sched.has_stragglers
+        tel = self._tel
 
         def comm_core(arrays, jitter, consts, do_sync, rf=None):
             fa = arrays.faults
+            new_tel = arrays.tel
+            rec = None
             ent = arrays.params["entity"]
             # device-side gather of shared rows; padding slots zeroed exactly
             # like RoundEngine.gather so the round functions see identical
@@ -690,15 +732,50 @@ class CycleEngine:
                         age=jnp.where(partb, 0, fa.age + 1),
                         q_msk=jnp.where(partb[:, None, None], 0.0, fa.q_msk),
                     )
+                if tel:
+                    cl = rows.shape[0]
+                    if rf is None:
+                        onesf = jnp.ones((cl,), jnp.float32)
+                        partf = up_okf = dn_okf = onesf
+                    else:
+                        partf, up_okf, dn_okf = rf.part, rf.up_ok, rf.dn_ok
+                    # the full exchange bills num_shared rows on each leg for
+                    # every participating client; overlap and change scores
+                    # are sparse-round signals and record as zeros (the
+                    # overlap carry passes through untouched — a dense
+                    # exchange is not a Top-K selection)
+                    billed = jnp.where(
+                        partf > 0.5,
+                        consts.valid.sum(axis=1).astype(jnp.int32),
+                        0,
+                    )
+                    rec = RoundTelemetry(
+                        up_rows=billed,
+                        dn_rows=billed,
+                        overlap=jnp.zeros((cl,), jnp.int32),
+                        res_mass=residual_mass(res, entity_axis=eaxis),
+                        part=partf,
+                        up_ok=up_okf,
+                        dn_ok=dn_okf,
+                        age=fa.age,
+                        score_hist=jnp.zeros(
+                            (cl, NUM_SCORE_BUCKETS), jnp.int32
+                        ),
+                    )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)
                 j = jnp.asarray(jitter, jnp.float32) * 0.5
+                prev = (
+                    (arrays.tel.prev_idx, arrays.tel.prev_msk) if tel else None
+                )
                 if rf is None:
-                    rows, hist, down, res = batched_sparse_round(
+                    out = batched_sparse_round(
                         emb, arrays.hist, consts.gid, consts.valid, consts.k,
                         j, k_max=k_max, num_global=num_global, codec=codec,
                         axis_name=axis, res=arrays.res, entity_axis=eaxis,
+                        prev=prev,
                     )
+                    rows, hist, down, res = out[:4]
                 else:
                     q = (
                         (fa.q_idx, fa.q_val, fa.q_msk)
@@ -711,6 +788,7 @@ class CycleEngine:
                         faults=rf,
                         straggler=consts.straggler if has_stragglers else None,
                         queue=q,
+                        prev=prev,
                     )
                     rows, hist, down, res = out[:4]
                     partb = rf.part > 0.5
@@ -720,10 +798,24 @@ class CycleEngine:
                         fa = fa._replace(
                             q_idx=nq[0], q_val=nq[1], q_msk=nq[2]
                         )
+                if tel:
+                    # (rec, prev') ride LAST on the round's output tuple;
+                    # the engine's age field is a placeholder — the
+                    # post-update staleness counters live here
+                    rec, new_prev = out[-2], out[-1]
+                    rec = rec._replace(age=fa.age)
+                    new_tel = TelemetryArrays(
+                        prev_idx=new_prev[0], prev_msk=new_prev[1]
+                    )
             rows_full = eshard.all_blocks(rows, eaxis)
             ent = eshard.scatter_rows(ent, consts.scatter_idx, rows_full, eaxis)
             params = dict(arrays.params, entity=ent)
-            return StateArrays(params, arrays.opt, hist, res, fa), down
+            new_arrays = StateArrays(
+                params, arrays.opt, hist, res, fa, new_tel
+            )
+            if tel:
+                return new_arrays, down, rec
+            return new_arrays, down
 
         return comm_core
 
@@ -777,6 +869,11 @@ class CycleEngine:
             # staleness counters + straggler queue; zero-width queue (and a
             # pure pass-through in the programs) without an active schedule
             faults=init_fault_arrays(self._sched, c_n, self.k_max, d),
+            # flight-recorder overlap carry: round 0 has no previous upload
+            tel=(
+                init_telemetry_arrays(c_n, self.k_max)
+                if self._tel else None
+            ),
         )
         return FederationState(arrays=arrays, key=jax.random.PRNGKey(seed))
 
@@ -826,7 +923,9 @@ class CycleEngine:
         return jnp.int32(t)
 
     def comm_round(self, state: FederationState, jitter, sync: bool, t=None):
-        """One communication round on resident state.  Returns (state', down).
+        """One communication round on resident state.  Returns (state', down),
+        plus the round's :class:`~repro.core.telemetry.RoundTelemetry` when
+        the engine was built with ``telemetry=True``.
 
         With an active fault schedule, ``t`` (the absolute round index) is
         required — the round's participation/drop masks are drawn from it
@@ -835,15 +934,19 @@ class CycleEngine:
         if self._sched is not None:
             tt = self._require_t(t)
             if sync:
-                arrays, down = self._comm_sync_f(state.arrays, self.consts, tt)
+                out = self._comm_sync_f(state.arrays, self.consts, tt)
             else:
-                arrays, down = self._comm_sparse_f(
+                out = self._comm_sparse_f(
                     state.arrays, jitter, self.consts, tt
                 )
         elif sync:
-            arrays, down = self._comm_sync(state.arrays, self.consts)
+            out = self._comm_sync(state.arrays, self.consts)
         else:
-            arrays, down = self._comm_sparse(state.arrays, jitter, self.consts)
+            out = self._comm_sparse(state.arrays, jitter, self.consts)
+        if self._tel:
+            arrays, down, rec = out
+            return FederationState(arrays, state.key), down, rec
+        arrays, down = out
         return FederationState(arrays, state.key), down
 
     def fused_cycle(self, state: FederationState, sync: bool, t=None):
@@ -851,17 +954,21 @@ class CycleEngine:
 
         Returns ``(state', down_count (C,) device array, loss (C,))`` — the
         down counts stay on device so the caller can defer ledger accounting
-        to eval boundaries.  ``t`` as in :meth:`comm_round`.
+        to eval boundaries — plus the round's device-resident
+        :class:`~repro.core.telemetry.RoundTelemetry` when the engine was
+        built with ``telemetry=True``.  ``t`` as in :meth:`comm_round`.
         """
         key, kb, kj = self._advance(state.key)
         if self._sched is not None:
             fn = self._fused_sync_f if sync else self._fused_sparse_f
-            arrays, down, loss = fn(
-                state.arrays, kb, kj, self.consts, self._require_t(t)
-            )
+            out = fn(state.arrays, kb, kj, self.consts, self._require_t(t))
         else:
             fn = self._fused_sync if sync else self._fused_sparse
-            arrays, down, loss = fn(state.arrays, kb, kj, self.consts)
+            out = fn(state.arrays, kb, kj, self.consts)
+        if self._tel:
+            arrays, down, loss, rec = out
+            return FederationState(arrays, key), down, loss, rec
+        arrays, down, loss = out
         return FederationState(arrays, key), down, loss
 
 
@@ -914,6 +1021,7 @@ class SuperstepEngine(CycleEngine):
         train_core = self._train_core_fn
         comm_core = self._comm_core_fn
         sched = self._sched
+        tel = self._tel
         round_faults_of = self._round_faults
         has_eval = any(kind == "eval" for kind, _ in plan)
         if has_eval and eval_core is None:
@@ -943,23 +1051,33 @@ class SuperstepEngine(CycleEngine):
                         round_faults_of(consts, t)
                         if sched is not None and kind != "none" else None
                     )
+                    rec = None
                     if kind == "sync":
-                        arrays, down = comm_core(
+                        out = comm_core(
                             arrays, jitter, consts, do_sync=True, rf=rf
                         )
+                        if tel:
+                            arrays, down, rec = out
+                        else:
+                            arrays, down = out
                     elif kind == "sparse":
-                        arrays, down = comm_core(
+                        out = comm_core(
                             arrays, jitter, consts, do_sync=False, rf=rf
                         )
+                        if tel:
+                            arrays, down, rec = out
+                        else:
+                            arrays, down = out
                     else:  # "none": local training only
                         down = (loss * 0).astype(jnp.int32)
+                    ys = (down, loss) if rec is None else (down, loss, rec)
                     if sched is not None:
-                        return (arrays, key, t + 1), (down, loss)
-                    return (arrays, key), (down, loss)
+                        return (arrays, key, t + 1), ys
+                    return (arrays, key), ys
 
                 return step
 
-            downs, losses, blocks = [], [], []
+            downs, losses, recs, blocks = [], [], [], []
             carry = (
                 (arrays, key, t0) if sched is not None else (arrays, key)
             )
@@ -981,16 +1099,28 @@ class SuperstepEngine(CycleEngine):
                 # inserts around the big resident buffers (~3% per-round at
                 # FB15k scale); capped so pathological eval spans don't
                 # explode compile time
-                carry, (d, l) = jax.lax.scan(
+                carry, ys = jax.lax.scan(
                     seg_step(kind), carry, None, length=n,
                     unroll=min(n, 8),
                 )
+                if tel and kind != "none":
+                    d, l, rc = ys
+                    # per-round record pytrees sliced INSIDE the program,
+                    # mirroring the download counts below
+                    recs.extend(
+                        jax.tree.map(lambda a, i=i: a[i], rc)
+                        for i in range(n)
+                    )
+                else:
+                    d, l = ys[0], ys[1]
                 if kind == "sparse":
                     # per-round (C,) rows sliced INSIDE the program, so the
                     # host never dispatches per-round slice ops
                     downs.extend(d[i] for i in range(n))
                 losses.append(l)
             out = (carry[0], carry[1], tuple(downs), tuple(losses))
+            if tel:
+                out = out + (tuple(recs),)
             return out + (tuple(blocks),) if has_eval else out
 
         n_sparse = sum(n for kind, n in plan if kind == "sparse")
@@ -1008,6 +1138,9 @@ class SuperstepEngine(CycleEngine):
         in_specs = (pa, r, p) + ((r,) if sched is not None else ())
         in_specs = in_specs + ((self._bank_spec(),) if has_eval else ())
         out_specs = (pa, r, (p,) * n_sparse, seg)
+        if tel:
+            n_rec = sum(n for kind, n in plan if kind in ("sparse", "sync"))
+            out_specs = out_specs + ((record_spec(p),) * n_rec,)
         if has_eval:
             out_specs = out_specs + ((p,) * n_eval,)
         return jax.jit(
@@ -1043,8 +1176,13 @@ class SuperstepEngine(CycleEngine):
         args = (state.arrays, state.key, self.consts)
         if self._sched is not None:
             args = args + (self._require_t(t0),)
-        arrays, key, downs, losses = fn(*args)
-        return FederationState(arrays, key), self._align(kinds, downs), losses
+        if self._tel:
+            arrays, key, downs, losses, recs = fn(*args)
+            per_round = self._align(kinds, downs, recs)
+        else:
+            arrays, key, downs, losses = fn(*args)
+            per_round = self._align(kinds, downs)
+        return FederationState(arrays, key), per_round, losses
 
     def superstep_with_eval(
         self,
@@ -1078,21 +1216,44 @@ class SuperstepEngine(CycleEngine):
         args = (state.arrays, state.key, self.consts)
         if self._sched is not None:
             args = args + (self._require_t(t0),)
-        arrays, key, downs, losses, blocks = fn(
-            *args, evaluator.banks[split]
-        )
+        if self._tel:
+            arrays, key, downs, losses, recs, blocks = fn(
+                *args, evaluator.banks[split]
+            )
+            per_round = self._align(kinds, downs, recs)
+        else:
+            arrays, key, downs, losses, blocks = fn(
+                *args, evaluator.banks[split]
+            )
+            per_round = self._align(kinds, downs)
         return (
             FederationState(arrays, key),
-            self._align(kinds, downs),
+            per_round,
             losses,
             blocks[0],
         )
 
     @staticmethod
-    def _align(kinds, downs):
-        """Zip per-round kinds with their device-resident download counts."""
+    def _align(kinds, downs, recs=None):
+        """Zip per-round kinds with their device-resident download counts.
+
+        Without telemetry: ``(kind, down | None)`` pairs, as always.  With
+        telemetry (``recs`` given): ``(kind, down | None, rec | None)``
+        triples — comm rounds carry their :class:`RoundTelemetry`, ``"none"``
+        rounds carry ``None``.
+        """
         down_iter = iter(downs)
+        if recs is None:
+            return [
+                (kind, next(down_iter) if kind == "sparse" else None)
+                for kind in kinds
+            ]
+        rec_iter = iter(recs)
         return [
-            (kind, next(down_iter) if kind == "sparse" else None)
+            (
+                kind,
+                next(down_iter) if kind == "sparse" else None,
+                next(rec_iter) if kind != "none" else None,
+            )
             for kind in kinds
         ]

@@ -72,6 +72,14 @@ from repro.core.engine import (
     build_padded_views,
 )
 from repro.core.sparsify import change_scores
+from repro.core.telemetry import (
+    NUM_SCORE_BUCKETS,
+    RoundTelemetry,
+    TelemetryArrays,
+    init_telemetry_arrays,
+    residual_mass,
+    span as telemetry_span,
+)
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_scoring, per_sample_losses
 from repro.train.optimizer import AdamState, adam_update
@@ -97,6 +105,8 @@ class TieredState(NamedTuple):
     hist: jnp.ndarray  # (C, Ns, D) upload history
     res: jnp.ndarray  # (C, Ns | 0, D) EF residual bank
     key: jnp.ndarray  # cycle PRNG key
+    tel: Optional[TelemetryArrays] = None  # flight-recorder overlap carry
+    #                   (repro.core.telemetry); None with telemetry off
 
 
 @jax.jit
@@ -349,10 +359,12 @@ class TieredCycleEngine:
         cache_slots: int = 0,
         stage_steps: int = 0,
         temp_beta: float = 0.9,
+        telemetry: bool = False,
     ):
         self.views = list(views)
         self.num_global = int(num_global_entities)
         self.num_clients = len(clients)
+        self._tel = bool(telemetry)
         c0 = clients[0]
         self.method = c0.method
         self.gamma = float(c0.gamma)
@@ -576,8 +588,11 @@ class TieredCycleEngine:
         never touches the host tier."""
         c_n, ns_pad, k_max = self.num_clients, self.ns_pad, self.k_max
         num_global, codec = self.num_global, self.codec
+        tel = self._tel
 
-        def comm(cache, hist, res, jitter, gid, valid, k, *, do_sync):
+        def comm(cache, hist, res, jitter, gid, valid, k, prev=None, *, do_sync):
+            rec = None
+            new_prev = prev
             emb = jnp.where(valid[:, :, None], cache.ent[:, :ns_pad], 0.0)
             if do_sync:
                 rows, hist = batched_sync_round(
@@ -587,18 +602,42 @@ class TieredCycleEngine:
                 # full exchange transmits exact values; stale residuals would
                 # re-inject pre-sync error (matches CycleEngine comm_core)
                 res = jnp.zeros_like(res) if codec.has_residual else res
+                if tel:
+                    # dense exchange: num_shared rows billed each leg, no
+                    # Top-K signals; the overlap carry passes through
+                    onesf = jnp.ones((c_n,), jnp.float32)
+                    billed = valid.sum(axis=1).astype(jnp.int32)
+                    rec = RoundTelemetry(
+                        up_rows=billed,
+                        dn_rows=billed,
+                        overlap=jnp.zeros((c_n,), jnp.int32),
+                        res_mass=residual_mass(res),
+                        part=onesf,
+                        up_ok=onesf,
+                        dn_ok=onesf,
+                        age=jnp.zeros((c_n,), jnp.int32),
+                        score_hist=jnp.zeros(
+                            (c_n, NUM_SCORE_BUCKETS), jnp.int32
+                        ),
+                    )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)
                 j = jnp.asarray(jitter, jnp.float32) * 0.5
-                rows, hist, down, res = batched_sparse_round(
+                out = batched_sparse_round(
                     emb, hist, gid, valid, k, j,
                     k_max=k_max, num_global=num_global, codec=codec,
-                    axis_name=None, res=res,
+                    axis_name=None, res=res, prev=prev,
                 )
+                rows, hist, down, res = out[:4]
+                if tel:
+                    rec, new_prev = out[-2], out[-1]
             ent = cache.ent.at[:, :ns_pad].set(
                 jnp.where(valid[:, :, None], rows, cache.ent[:, :ns_pad])
             )
-            return DeviceCache(ent, cache.mu, cache.nu), hist, res, down
+            new_cache = DeviceCache(ent, cache.mu, cache.nu)
+            if tel:
+                return new_cache, hist, res, down, rec, new_prev
+            return new_cache, hist, res, down
 
         return comm
 
@@ -649,6 +688,10 @@ class TieredCycleEngine:
                 jnp.float32,
             ),
             key=jax.random.PRNGKey(seed),
+            tel=(
+                init_telemetry_arrays(c_n, self.k_max)
+                if self._tel else None
+            ),
         )
         return store, state
 
@@ -660,8 +703,10 @@ class TieredCycleEngine:
         Training runs as ``ceil(scan_len / stage_steps)`` stage segments —
         host remap + cache staging, then the compiled segment program —
         followed by the communication round on the always-resident pinned
-        prefix.  Returns ``(state', down_counts (C,), loss (C,))``.  The
-        per-cycle key schedule matches
+        prefix.  Returns ``(state', down_counts (C,), loss (C,))``, plus the
+        round's :class:`~repro.core.telemetry.RoundTelemetry` (``None`` for
+        ``kind="none"``) when the engine was built with ``telemetry=True``.
+        The per-cycle key schedule matches
         :class:`repro.core.state.CycleEngine` (one 3-way split; ``kb``
         feeds the batch plan, ``kj`` the jitter).
         """
@@ -676,9 +721,10 @@ class TieredCycleEngine:
         losses = []
         for s0 in range(0, self.scan_len, self.stage_steps):
             sl = slice(s0, min(s0 + self.stage_steps, self.scan_len))
-            cache, view, pos_v, nt_v, nh_v = self._stage(
-                store, cache, pos_h[:, sl], nt_h[:, sl], nh_h[:, sl]
-            )
+            with telemetry_span("stage"):
+                cache, view, pos_v, nt_v, nh_v = self._stage(
+                    store, cache, pos_h[:, sl], nt_h[:, sl], nh_h[:, sl]
+                )
             cache, rel, rel_mu, rel_nu, step, seg_loss, temp_sig = (
                 self._train_seg(
                     cache, rel, rel_mu, rel_nu, step, jnp.asarray(view),
@@ -688,6 +734,8 @@ class TieredCycleEngine:
             store.after_segment(view, np.asarray(temp_sig))
             losses.append(np.asarray(seg_loss))
         hist, res = state.hist, state.res
+        new_tel = state.tel
+        rec = None
         if kind == "none":
             down = np.zeros((self.num_clients,), np.int32)
         else:
@@ -695,17 +743,27 @@ class TieredCycleEngine:
                 self._jitter_fn(kj) if kind == "sparse"
                 else jnp.zeros((self.num_clients, self.ns_pad), jnp.float32)
             )
-            cache, hist, res, down = self._comm[kind](
-                cache, hist, res, jitter, self._gid, self._valid, self._k
-            )
+            if self._tel:
+                cache, hist, res, down, rec, new_prev = self._comm[kind](
+                    cache, hist, res, jitter, self._gid, self._valid,
+                    self._k, (state.tel.prev_idx, state.tel.prev_msk),
+                )
+                new_tel = TelemetryArrays(
+                    prev_idx=new_prev[0], prev_msk=new_prev[1]
+                )
+            else:
+                cache, hist, res, down = self._comm[kind](
+                    cache, hist, res, jitter, self._gid, self._valid, self._k
+                )
             store.mark_pinned_dirty()
             down = np.asarray(down)
         store.stats["cycles"] += 1
         new_state = TieredState(
             cache=cache, rel=rel, rel_mu=rel_mu, rel_nu=rel_nu, step=step,
-            hist=hist, res=res, key=key,
+            hist=hist, res=res, key=key, tel=new_tel,
         )
-        return new_state, down, np.concatenate(losses, axis=0).mean(axis=0)
+        out = new_state, down, np.concatenate(losses, axis=0).mean(axis=0)
+        return out + (rec,) if self._tel else out
 
     def _stage(self, store, cache, pos_h, nt_h, nh_h):
         """Touched-row discovery + cache staging + view-space remap for one

@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
+
 FORMAT_VERSION = 1
 
 # config fields that shape the state pytree or drive the trajectory; a
@@ -70,6 +72,18 @@ def save_checkpoint(
     prev_mrr: float,
 ) -> None:
     """Atomically write the full resume image to ``path``."""
+    with telemetry.span("checkpoint"):
+        _save_checkpoint(
+            path, state, ledger, cfg=cfg, next_round=next_round,
+            eval_history=eval_history, best=best, declines=declines,
+            prev_mrr=prev_mrr,
+        )
+
+
+def _save_checkpoint(
+    path, state, ledger, *, cfg, next_round, eval_history, best,
+    declines, prev_mrr,
+) -> None:
     leaves = jax.tree_util.tree_leaves(state.arrays)
     payload = {f"state_{i}": np.asarray(v) for i, v in enumerate(leaves)}
     payload["key"] = np.asarray(state.key)

@@ -60,9 +60,11 @@ import collections
 import dataclasses
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.aggregate import Upload, fede_aggregate, personalized_aggregate
 from repro.core.codecs import parse_codec_spec
 from repro.core.evaluation import BatchedEvaluator
@@ -74,9 +76,16 @@ from repro.core.protocol import (
     full_upload,
     sparse_upload_coded,
 )
-from repro.core.sparsify import sparsity_k
+from repro.core.sparsify import change_scores, sparsity_k
 from repro.core.state import CycleEngine, FederationState, SuperstepEngine
 from repro.core.store import TieredCycleEngine
+from repro.core.telemetry import (
+    NUM_SCORE_BUCKETS,
+    RoundTelemetry,
+    TelemetrySink,
+    residual_mass,
+    score_histogram,
+)
 from repro.core.sync import round_kind
 from repro.data.partition import ClientData
 from repro.federated import checkpoint as fed_checkpoint
@@ -144,6 +153,12 @@ class FederatedConfig:
     checkpoint_path: str = ""
     checkpoint_every: int = 0
     resume: bool = False
+    # flight recorder: JSONL event path ("" -> off).  On: the engines carry
+    # per-round on-device records (repro.core.telemetry) drained at eval
+    # boundaries, host stages are timed as spans, and a shadow ledger replays
+    # the records to cross-check the real accounting (tools/trace_report.py).
+    # Off: zero-cost — the engines compile the exact pre-telemetry programs.
+    telemetry: str = ""
 
 
 @dataclasses.dataclass
@@ -182,15 +197,17 @@ def _restore(clients: list[KGEClient], snap) -> None:
 
 
 def _flush_ledger(
-    ledger, pending, views, codec, dim, k_per_client, sched=None
+    ledger, pending, views, codec, dim, k_per_client, sched=None,
+    sink=None, cache_stats=None,
 ) -> None:
     """Replay deferred rounds into the ledger.
 
-    ``pending`` holds ``(kind, down_count, round_idx)`` per round in order;
-    sparse-round download counts are device arrays, pulled to host in ONE
-    transfer here.  The replay performs the exact same accounting-call
-    sequence a per-round flush would, so ledger totals/history are bitwise
-    identical.
+    ``pending`` holds ``(kind, down_count, round_idx, record)`` per round in
+    order; sparse-round download counts (and, with telemetry on, the
+    :class:`~repro.core.telemetry.RoundTelemetry` records) are device
+    arrays, pulled to host in ONE transfer here.  The replay performs the
+    exact same accounting-call sequence a per-round flush would, so ledger
+    totals/history are bitwise identical.
 
     With an active fault schedule ``sched``, the per-round participation
     masks are re-drawn on host from the absolute round index (bit-identical
@@ -199,11 +216,23 @@ def _flush_ledger(
     exchanges no bytes, not zero-entity messages (whose sign bitmaps would
     still bill ``Ns`` bytes).  Delivery drops do NOT reduce billing: a
     dropped message was still transmitted.
+
+    With a ``sink``, each drained record is emitted as a ``round`` event and
+    replayed into the sink's *shadow* ledger using only device-recorded
+    quantities — the reconciliation cross-check trace_report verifies.
+    ``cache_stats`` (tiered engine) is a per-pending-round list of cache
+    hit/miss/eviction deltas folded into the events.
     """
-    sparse_counts = [d for kind, d, _ in pending if kind == "sparse"]
+    sparse_counts = [d for kind, d, _, _ in pending if kind == "sparse"]
     dc_all = np.asarray(jnp.stack(sparse_counts)) if sparse_counts else None
+    recs = [r for _, _, _, r in pending if r is not None]
+    stacked = (
+        jax.tree.map(lambda *xs: np.asarray(jnp.stack(xs)), *recs)
+        if recs else None
+    )
     i = 0
-    for kind, _, t in pending:
+    j = 0
+    for n, (kind, _, t, rec) in enumerate(pending):
         part = (
             host_round_faults(sched, t, len(views))[0]
             if sched is not None else None
@@ -222,7 +251,108 @@ def _flush_ledger(
                 codec.log_download(ledger, int(dc), dim, v.num_shared)
             i += 1
         ledger.end_round()
+        if sink is not None:
+            r = None
+            if rec is not None:
+                r = jax.tree.map(lambda a, j=j: a[j], stacked)
+                j += 1
+            _emit_round_event(
+                sink, codec, dim, views, kind, t, r,
+                cache=cache_stats[n] if cache_stats else None,
+            )
     pending.clear()
+    if cache_stats is not None:
+        cache_stats.clear()
+
+
+def _emit_round_event(sink, codec, dim, views, kind, t, rec, cache=None):
+    """Emit one ``{"ev": "round"}`` event and feed the shadow ledger.
+
+    The shadow replay makes the SAME accounting calls, in the same order,
+    as the real flush just did — but parameterized only by device-recorded
+    quantities (``rec.up_rows``/``dn_rows``/``part``), never by the host's
+    own bookkeeping.  If the records are faithful, shadow totals equal the
+    real ledger's bitwise (all per-call increments are integer-valued, so
+    float accumulation is exact); trace_report asserts exactly that.
+    Per-leg wire bytes are measured as shadow-ledger deltas around each
+    call.  ``rec=None`` (a no-comm round) still advances the shadow round
+    counter, mirroring ``ledger.end_round()``.
+    """
+    shadow = sink.shadow
+    c_n = len(views)
+    if rec is None:
+        shadow.end_round()
+        zi = [0] * c_n
+        sink.emit({
+            "ev": "round", "round": int(t), "kind": kind,
+            "up_rows": zi, "dn_rows": zi, "overlap": zi,
+            "res_mass": [0.0] * c_n, "part": zi, "up_ok": zi, "dn_ok": zi,
+            "age": zi,
+            "score_hist": [[0] * NUM_SCORE_BUCKETS for _ in range(c_n)],
+            "up_bytes": [0.0] * c_n, "dn_bytes": [0.0] * c_n,
+            "cache_hits": int(cache["hits"]) if cache else 0,
+            "cache_misses": int(cache["misses"]) if cache else 0,
+            "cache_evictions": int(cache["evictions"]) if cache else 0,
+            "cum_params": shadow.params_transmitted,
+            "cum_bytes": shadow.bytes_int8_signs,
+        })
+        return
+    up_bytes, dn_bytes = [], []
+    for v in views:
+        c = v.client_id
+        if rec.part[c] <= 0.5:
+            up_bytes.append(0.0)
+            dn_bytes.append(0.0)
+            continue
+        b0 = shadow.bytes_int8_signs
+        if kind == "sync":
+            shadow.log_full_exchange(int(rec.up_rows[c]), dim)
+            b1 = shadow.bytes_int8_signs
+            shadow.log_full_exchange(int(rec.dn_rows[c]), dim)
+        else:
+            codec.log_upload(shadow, int(rec.up_rows[c]), dim, v.num_shared)
+            b1 = shadow.bytes_int8_signs
+            codec.log_download(shadow, int(rec.dn_rows[c]), dim, v.num_shared)
+        up_bytes.append(b1 - b0)
+        dn_bytes.append(shadow.bytes_int8_signs - b1)
+    shadow.end_round()
+    sink.emit({
+        "ev": "round", "round": int(t), "kind": kind,
+        "up_rows": [int(x) for x in rec.up_rows],
+        "dn_rows": [int(x) for x in rec.dn_rows],
+        "overlap": [int(x) for x in rec.overlap],
+        "res_mass": [float(x) for x in rec.res_mass],
+        "part": [int(x > 0.5) for x in rec.part],
+        "up_ok": [int(x > 0.5) for x in rec.up_ok],
+        "dn_ok": [int(x > 0.5) for x in rec.dn_ok],
+        "age": [int(x) for x in rec.age],
+        "score_hist": [[int(x) for x in row] for row in rec.score_hist],
+        "up_bytes": up_bytes, "dn_bytes": dn_bytes,
+        "cache_hits": int(cache["hits"]) if cache else 0,
+        "cache_misses": int(cache["misses"]) if cache else 0,
+        "cache_evictions": int(cache["evictions"]) if cache else 0,
+        "cum_params": shadow.params_transmitted,
+        "cum_bytes": shadow.bytes_int8_signs,
+    })
+
+
+def _emit_ledger_event(sink, ledger) -> None:
+    """The terminal reconciliation event: real vs shadow ledger totals."""
+    sh = sink.shadow
+    sink.emit({
+        "ev": "ledger",
+        "params_transmitted": ledger.params_transmitted,
+        "bytes": ledger.bytes_int8_signs,
+        "rounds": ledger.rounds,
+        "shadow_params": sh.params_transmitted,
+        "shadow_bytes": sh.bytes_int8_signs,
+        "shadow_rounds": sh.rounds,
+        "reconciled": bool(
+            ledger.params_transmitted == sh.params_transmitted
+            and ledger.bytes_int8_signs == sh.bytes_int8_signs
+            and ledger.rounds == sh.rounds
+        ),
+    })
 
 
 def run_federated(
@@ -235,6 +365,44 @@ def run_federated(
         raise ValueError(
             f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
         )
+    if not cfg.telemetry:
+        return _run_federated_impl(
+            clients_data, num_global_entities, cfg, verbose, None
+        )
+    sink = TelemetrySink(cfg.telemetry)
+    # the shadow ledger: re-bills every round from device-recorded telemetry
+    # only; _finish's "ledger" event compares it to the real one bitwise
+    sink.shadow = CommLedger()
+    sink.emit({
+        "ev": "run",
+        "engine": (
+            "tiered" if (cfg.host_store or cfg.engine == "tiered")
+            else cfg.engine
+        ),
+        "codec": "int8" if cfg.quantize_upload else cfg.codec,
+        "method": cfg.method,
+        "protocol": cfg.protocol,
+        "clients": len(clients_data),
+        "dim": cfg.dim,
+        "rounds": cfg.rounds,
+        "telemetry_version": 1,
+    })
+    try:
+        with telemetry.session(sink):
+            return _run_federated_impl(
+                clients_data, num_global_entities, cfg, verbose, sink
+            )
+    finally:
+        sink.close()
+
+
+def _run_federated_impl(
+    clients_data: list[ClientData],
+    num_global_entities: int,
+    cfg: FederatedConfig,
+    verbose: bool,
+    sink,
+) -> FederatedResult:
     sched = parse_fault_spec(cfg.faults)
     faulted = not sched.trivial
     checkpointing = bool(cfg.checkpoint_path)
@@ -265,7 +433,7 @@ def run_federated(
                 f"with engine={cfg.engine!r}"
             )
         return _run_federated_tiered(
-            clients_data, num_global_entities, cfg, verbose
+            clients_data, num_global_entities, cfg, verbose, sink
         )
     clients = [
         KGEClient(
@@ -322,10 +490,11 @@ def run_federated(
             clients, views, num_global_entities,
             sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
             codec=codec, mesh=mesh, entity_axis=entity_axis,
-            faults=sched,
+            faults=sched, telemetry=sink is not None,
         )
         state = cycle.init_state(clients, seed=cfg.seed + 777)
-        pending: list = []  # (kind, device down_count | None, round) triples
+        # (kind, device down_count | None, round, record | None) 4-tuples
+        pending: list = []
         # device-resident batched eval: banks built ONCE, eval boundaries
         # read back only a (C, EVAL_BLOCK_COLS) scalar block (no
         # sync_clients round-trip)
@@ -355,6 +524,18 @@ def run_federated(
             )
             for c in sched.stragglers
         } if (faulted and sched.has_stragglers) else None
+        # telemetry host twins: the reference path has no device records, so
+        # it rebuilds them from the ragged host state — through the SAME jit
+        # helpers on identically padded buffers, so wherever the trajectory
+        # matches the device engines bitwise, the records do too
+        if sink is not None:
+            tel_ns_max = max(v.num_shared for v in views)
+            tel_nsv = np.array([v.num_shared for v in views])
+            tel_valid = jnp.asarray(
+                np.arange(tel_ns_max)[None, :] < tel_nsv[:, None]
+            )
+            tel_prev = [set() for _ in clients]  # last SENT upload, per client
+            tel_ages = np.zeros(len(clients), np.int32)
 
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
@@ -398,7 +579,7 @@ def run_federated(
         if use_device:
             _flush_ledger(
                 ledger, pending, views, codec, cfg.dim, cycle.k_per_client,
-                sched=sched if faulted else None,
+                sched=sched if faulted else None, sink=sink,
             )
             if block is None:
                 block = evaluator.evaluate(state.arrays.params, "valid")
@@ -407,6 +588,13 @@ def run_federated(
             val = weighted_average(
                 [c.evaluate("valid", cfg.max_eval_triples) for c in clients]
             )
+        if sink is not None:
+            sink.emit({
+                "ev": "eval", "round": int(round_no), "split": "valid",
+                "mrr": float(val["mrr"]), "hits10": float(val["hits10"]),
+                "params_transmitted": ledger.params_transmitted,
+                "bytes": ledger.bytes_int8_signs,
+            })
         eval_history.append((round_no, val["mrr"], val["hits10"]))
         if verbose:
             print(
@@ -459,9 +647,15 @@ def run_federated(
             state, per_round, _losses, block = cycle.superstep_with_eval(
                 state, kinds, evaluator, "valid", t0=t
             )
-            pending.extend(
-                (k, d, t + i) for i, (k, d) in enumerate(per_round)
-            )
+            if sink is None:
+                pending.extend(
+                    (k, d, t + i, None) for i, (k, d) in enumerate(per_round)
+                )
+            else:  # with telemetry the engine aligns (kind, down, record)
+                pending.extend(
+                    (k, d, t + i, r)
+                    for i, (k, d, r) in enumerate(per_round)
+                )
             t += chunk
             rounds_run = t
             if eval_boundary(t, block=block):
@@ -470,7 +664,7 @@ def run_federated(
         return _finish(
             cfg, clients, use_device, cycle, state, pending,
             views, codec, ledger, eval_history, best, rounds_run, evaluator,
-            sched=sched if faulted else None,
+            sched=sched if faulted else None, sink=sink,
         )
 
     for t in range(start_round, cfg.rounds):
@@ -481,11 +675,14 @@ def run_federated(
 
         if use_device:
             # ------------------------- device-resident train+communicate
+            rec = None
             if cfg.engine == "fused":
                 if comm:
-                    state, down, _loss = cycle.fused_cycle(
-                        state, sync=sync, t=t
-                    )
+                    out = cycle.fused_cycle(state, sync=sync, t=t)
+                    if sink is not None:
+                        state, down, _loss, rec = out
+                    else:
+                        state, down, _loss = out
                 else:
                     state, _jitter, _loss = cycle.train_cycle(state)
                     down = None
@@ -493,10 +690,12 @@ def run_federated(
                 state, jitter, _loss = cycle.train_cycle(state)
                 down = None
                 if comm:
-                    state, down = cycle.comm_round(
-                        state, jitter, sync=sync, t=t
-                    )
-            pending.append((kind, down if kind == "sparse" else None, t))
+                    out = cycle.comm_round(state, jitter, sync=sync, t=t)
+                    if sink is not None:
+                        state, down, rec = out
+                    else:
+                        state, down = out
+            pending.append((kind, down if kind == "sparse" else None, t, rec))
         else:
             # ----------------------------------- numpy reference protocol
             # fault semantics (repro.core.faults): part -> the client
@@ -550,6 +749,30 @@ def run_federated(
                         )
                     ledger.log_full_exchange(v.num_shared, cfg.dim)
             elif comm:  # sparse FedS round, ragged numpy reference path
+                if sink is not None:
+                    # the device records score changes on post-train
+                    # embeddings vs PRE-round histories — snapshot both
+                    # before the upload loop refreshes them, padded to the
+                    # same (C, Ns_max, D) the engines scan
+                    emb_pad = np.zeros(
+                        (len(clients), tel_ns_max, cfg.dim), np.float32
+                    )
+                    hist_pad = np.zeros_like(emb_pad)
+                    for c, v in zip(clients, views):
+                        n = v.num_shared
+                        emb_pad[v.client_id, :n] = np.asarray(
+                            c.params["entity"]
+                        )[v.shared_local]
+                        hist_pad[v.client_id, :n] = np.asarray(
+                            histories[v.client_id]
+                        )
+                    sc = change_scores(
+                        jnp.asarray(emb_pad).reshape(-1, cfg.dim),
+                        jnp.asarray(hist_pad).reshape(-1, cfg.dim),
+                    ).reshape(len(clients), tel_ns_max)
+                    sc = jnp.where(tel_valid, sc, -jnp.inf)
+                    tel_hist = np.asarray(score_histogram(sc, tel_valid))
+                    tel_overlap = np.zeros(len(clients), np.int32)
                 uploads = []
                 for c, v in zip(clients, views):
                     cid = v.client_id
@@ -568,6 +791,12 @@ def run_federated(
                         histories[cid] = hist
                         if residuals is not None:
                             residuals[cid] = res
+                        if sink is not None:
+                            # realized Top-K overlap with the previous SENT
+                            # upload; absent clients keep their carry
+                            cur = {int(e) for e in up.entity_ids}
+                            tel_overlap[cid] = len(cur & tel_prev[cid])
+                            tel_prev[cid] = cur
                         k_round = sparsity_k(v.num_shared, cfg.sparsity_p)
                         codec.log_upload(
                             ledger, k_round, cfg.dim, v.num_shared
@@ -618,6 +847,61 @@ def run_federated(
                             d.agg_values, d.priority,
                         )
             ledger.end_round()
+            if sink is not None:
+                rec_host = None
+                if comm:
+                    tel_ages = np.where(fpart, 0, tel_ages + 1).astype(
+                        np.int32
+                    )
+                    if residuals is not None:
+                        res_pad = np.zeros(
+                            (len(clients), tel_ns_max, cfg.dim), np.float32
+                        )
+                        for v in views:
+                            res_pad[v.client_id, : v.num_shared] = residuals[
+                                v.client_id
+                            ]
+                        res_mass_h = np.asarray(
+                            residual_mass(jnp.asarray(res_pad))
+                        )
+                    else:
+                        res_mass_h = np.zeros(len(clients), np.float32)
+                    if sync:
+                        billed = np.where(fpart, tel_nsv, 0).astype(np.int32)
+                        up_rows = dn_rows = billed
+                        overlap = np.zeros(len(clients), np.int32)
+                        hist_rec = np.zeros(
+                            (len(clients), NUM_SCORE_BUCKETS), np.int32
+                        )
+                    else:
+                        up_rows = np.where(
+                            fpart,
+                            [
+                                sparsity_k(v.num_shared, cfg.sparsity_p)
+                                for v in views
+                            ],
+                            0,
+                        ).astype(np.int32)
+                        dn_rows = np.array(
+                            [
+                                len(d.entity_ids) if fpart[v.client_id] else 0
+                                for v, d in zip(views, downloads)
+                            ],
+                            np.int32,
+                        )
+                        overlap = tel_overlap
+                        hist_rec = tel_hist
+                    rec_host = RoundTelemetry(
+                        up_rows=up_rows, dn_rows=dn_rows, overlap=overlap,
+                        res_mass=res_mass_h,
+                        part=fpart.astype(np.float32),
+                        up_ok=fup.astype(np.float32),
+                        dn_ok=fdn.astype(np.float32),
+                        age=tel_ages, score_hist=hist_rec,
+                    )
+                _emit_round_event(
+                    sink, codec, cfg.dim, views, kind, t, rec_host
+                )
 
         # ------------------------------------------------------- evaluation
         # terminal-eval guarantee: when rounds is not a multiple of the eval
@@ -632,25 +916,27 @@ def run_federated(
         cfg, clients, use_device, cycle if use_device else None,
         state if use_device else None, pending if use_device else None,
         views, codec, ledger, eval_history, best, rounds_run,
-        evaluator, sched=sched if faulted else None,
+        evaluator, sched=sched if faulted else None, sink=sink,
     )
 
 
 def _finish(
     cfg, clients, use_device, cycle, state, pending,
     views, codec, ledger, eval_history, best, rounds_run, evaluator=None,
-    sched=None,
+    sched=None, sink=None,
 ) -> FederatedResult:
     """Final flush + best-snapshot restore + test evaluation.
 
     Device engines restore the best on-device snapshot into the federation
     state, run the device-batched test eval, and only then materialize the
     tables into the per-client params (the single terminal host transfer).
+    With telemetry on this also emits the terminal ``eval`` (test split) and
+    ``ledger`` (real-vs-shadow reconciliation) events.
     """
     if use_device:
         _flush_ledger(
             ledger, pending, views, codec, cfg.dim, cycle.k_per_client,
-            sched=sched,
+            sched=sched, sink=sink,
         )
         if best["snap"] is not None:
             state = FederationState(
@@ -666,6 +952,14 @@ def _finish(
         test = weighted_average(
             [c.evaluate("test", cfg.max_eval_triples) for c in clients]
         )
+    if sink is not None:
+        sink.emit({
+            "ev": "eval", "round": int(rounds_run), "split": "test",
+            "mrr": float(test["mrr"]), "hits10": float(test["hits10"]),
+            "params_transmitted": ledger.params_transmitted,
+            "bytes": ledger.bytes_int8_signs,
+        })
+        _emit_ledger_event(sink, ledger)
     return FederatedResult(
         config=cfg,
         eval_history=eval_history,
@@ -683,6 +977,7 @@ def _run_federated_tiered(
     num_global_entities: int,
     cfg: FederatedConfig,
     verbose: bool = False,
+    sink=None,
 ) -> FederatedResult:
     """The host-tiered simulation loop (engine="tiered" / host_store=True).
 
@@ -726,7 +1021,7 @@ def _run_federated_tiered(
         clients, views, num_global_entities,
         sparsity_p=cfg.sparsity_p, local_epochs=cfg.local_epochs,
         codec=codec, cache_slots=cfg.cache_slots,
-        stage_steps=cfg.stage_steps,
+        stage_steps=cfg.stage_steps, telemetry=sink is not None,
     )
     store, ts = eng.init_state(mk_clients(), seed=cfg.seed + 777)
     evaluator = BatchedEvaluator(
@@ -736,6 +1031,12 @@ def _run_federated_tiered(
     )
     ledger = CommLedger()
     pending: list = []
+    # per-pending-round cache hit/miss/eviction deltas for the round events
+    cache_stats: list = [] if sink is not None else None
+    tel_prev_stats = (
+        {k: store.stats[k] for k in ("hits", "misses", "evictions")}
+        if sink is not None else None
+    )
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
     declines = 0
@@ -746,14 +1047,34 @@ def _run_federated_tiered(
     for t in range(cfg.rounds):
         rounds_run = t + 1
         kind = round_kind(t, cfg.protocol, cfg.sync_interval)
-        ts, down, _loss = eng.run_cycle(store, ts, kind)
-        pending.append((kind, down if kind == "sparse" else None, t))
+        rec = None
+        if sink is not None:
+            ts, down, _loss, rec = eng.run_cycle(store, ts, kind)
+            snap_stats = {
+                k: store.stats[k] for k in ("hits", "misses", "evictions")
+            }
+            cache_stats.append(
+                {k: snap_stats[k] - tel_prev_stats[k] for k in snap_stats}
+            )
+            tel_prev_stats = snap_stats
+        else:
+            ts, down, _loss = eng.run_cycle(store, ts, kind)
+        pending.append((kind, down if kind == "sparse" else None, t, rec))
         if (t + 1) % ee == 0 or (t + 1) == cfg.rounds:
             _flush_ledger(
-                ledger, pending, views, codec, cfg.dim, eng.k_per_client
+                ledger, pending, views, codec, cfg.dim, eng.k_per_client,
+                sink=sink, cache_stats=cache_stats,
             )
             params = eng.materialize_params(store, ts)
             val = aggregate_eval_block(evaluator.evaluate(params, "valid"))
+            if sink is not None:
+                sink.emit({
+                    "ev": "eval", "round": t + 1, "split": "valid",
+                    "mrr": float(val["mrr"]),
+                    "hits10": float(val["hits10"]),
+                    "params_transmitted": ledger.params_transmitted,
+                    "bytes": ledger.bytes_int8_signs,
+                })
             eval_history.append((t + 1, val["mrr"], val["hits10"]))
             if verbose:
                 print(
@@ -772,12 +1093,23 @@ def _run_federated_tiered(
             if declines >= cfg.patience:
                 break
 
-    _flush_ledger(ledger, pending, views, codec, cfg.dim, eng.k_per_client)
+    _flush_ledger(
+        ledger, pending, views, codec, cfg.dim, eng.k_per_client,
+        sink=sink, cache_stats=cache_stats,
+    )
     if best["snap"] is not None:
         params = {k: jnp.asarray(v) for k, v in best["snap"].items()}
     else:
         params = eng.materialize_params(store, ts)
     test = aggregate_eval_block(evaluator.evaluate(params, "test"))
+    if sink is not None:
+        sink.emit({
+            "ev": "eval", "round": int(rounds_run), "split": "test",
+            "mrr": float(test["mrr"]), "hits10": float(test["hits10"]),
+            "params_transmitted": ledger.params_transmitted,
+            "bytes": ledger.bytes_int8_signs,
+        })
+        _emit_ledger_event(sink, ledger)
     return FederatedResult(
         config=cfg,
         eval_history=eval_history,

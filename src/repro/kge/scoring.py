@@ -1,4 +1,4 @@
-"""KGE scoring registry: TransE, RotatE, pRotatE, DistMult, ComplEx.
+"""KGE scoring registry: TransE, RotatE, pRotatE, DistMult, ComplEx, HolE.
 
 Conventions (matching FedE / the RotatE reference implementation):
 
@@ -218,6 +218,26 @@ def distmult_score(
     return (h * r * t).sum(axis=-1)
 
 
+def _ccorr(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Circular correlation ccorr(a, b)_k = sum_i a_i b_{(i+k) mod n}."""
+    n = a.shape[-1]
+    return jnp.fft.irfft(jnp.conj(jnp.fft.rfft(a)) * jnp.fft.rfft(b), n=n)
+
+
+def _cconv(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Circular convolution cconv(a, b)_k = sum_i a_i b_{(k-i) mod n}."""
+    n = a.shape[-1]
+    return jnp.fft.irfft(jnp.fft.rfft(a) * jnp.fft.rfft(b), n=n)
+
+
+def hole_score(
+    h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float = 0.0
+) -> jnp.ndarray:
+    """<r, ccorr(h, t)> (HolE holographic embedding score)."""
+    del gamma
+    return (r * _ccorr(h, t)).sum(axis=-1)
+
+
 def complex_score(
     h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float = 0.0
 ) -> jnp.ndarray:
@@ -274,6 +294,14 @@ def _distmult_queries(h, r, t, gamma):
     return h * r, t * r  # <h,r,c> = (h*r)·c ; <c,r,t> = (t*r)·c
 
 
+def _hole_queries(h, r, t, gamma):
+    del gamma
+    # <r, ccorr(h,c)> == <cconv(h,r), c> and <r, ccorr(c,t)> == <ccorr(r,t), c>
+    # (swap the summation order) — both legs reduce to q · cand, so HolE
+    # rides the bilinear eval kernel with no candidate transform.
+    return _cconv(h, r), _ccorr(r, t)
+
+
 def _complex_queries(h, r, t, gamma):
     del gamma
     h_re, h_im = _split_complex(h)
@@ -322,6 +350,12 @@ register(ScoringSpec(
     doc="Re(<h, r, conj(t)>) (entities and relations in C^{dim/2})",
     score=complex_score, rel_dim=lambda dim: dim, rel_dim_doc="dim",
     rel_init="uniform", cand_queries=_complex_queries, adversarial=False,
+))
+register(ScoringSpec(
+    name="hole", family="bilinear",
+    doc="<r, ccorr(h, t)> (holographic circular correlation)",
+    score=hole_score, rel_dim=lambda dim: dim, rel_dim_doc="dim",
+    rel_init="uniform", cand_queries=_hole_queries, adversarial=False,
 ))
 
 

@@ -144,6 +144,12 @@ def main() -> None:
                     help="resume from --checkpoint when it exists; the "
                          "resumed trajectory is bitwise identical to an "
                          "uninterrupted run")
+    ap.add_argument("--telemetry", default="",
+                    metavar="PATH.jsonl",
+                    help="flight-recorder JSONL event stream (per-round "
+                         "on-device records, host spans, ledger "
+                         "reconciliation); render with "
+                         "tools/trace_report.py (empty = off, zero cost)")
     ap.add_argument("--out", default=None, help="write JSON result here")
     args = ap.parse_args()
 
@@ -169,6 +175,7 @@ def main() -> None:
         seed=args.seed, faults=args.faults,
         checkpoint_path=args.checkpoint,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
+        telemetry=args.telemetry,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)
 

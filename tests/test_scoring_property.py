@@ -79,12 +79,20 @@ def _np_complex(h, r, t, gamma):
     ).sum(-1)
 
 
+def _np_hole(h, r, t, gamma):
+    del gamma
+    n = h.shape[-1]
+    ccorr = np.fft.irfft(np.conj(np.fft.rfft(h)) * np.fft.rfft(t), n=n)
+    return (np.broadcast_to(r, ccorr.shape) * ccorr).sum(-1)
+
+
 ORACLES = {
     "transe": _np_transe,
     "rotate": _np_rotate,
     "protate": _np_protate,
     "distmult": _np_distmult,
     "complex": _np_complex,
+    "hole": _np_hole,
 }
 
 
@@ -168,7 +176,7 @@ def test_scoring_usage_mentions_every_method_and_family():
 def test_rel_dim_and_init_rules():
     dim = 16
     assert get_scoring("rotate").rel_dim(dim) == dim // 2
-    for name in ("transe", "protate", "distmult", "complex"):
+    for name in ("transe", "protate", "distmult", "complex", "hole"):
         assert get_scoring(name).rel_dim(dim) == dim
     for name, spec in registered_methods().items():
         model = KGEModel(method=name, num_entities=6, num_relations=3, dim=dim)

@@ -1,0 +1,287 @@
+"""Flight-recorder telemetry (repro.core.telemetry + the simulation sink).
+
+Three layers of guarantee, mirroring the design:
+
+* **unit** — the jit-safe record helpers (overlap, histogram, residual
+  mass) against tiny numpy oracles;
+* **structural** — telemetry off is the identity: the engines carry
+  ``tel=None`` (zero pytree leaves) and the simulation's trajectory,
+  ledger, and terminal metrics are bitwise equal with the recorder on or
+  off (recording observes, never perturbs);
+* **stream** — the JSONL grammar holds (exact round-event key set, one
+  run header, a terminal ledger event), the device engines emit bitwise
+  identical round events under a chaos schedule for every registered
+  codec family, the reference path's billing fields agree with the device
+  engines', and the shadow-ledger reconciliation invariant
+  (``reconciled: true``) holds for every engine including tiered —
+  which is also what ``tools/trace_report.py`` exits non-zero on.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.state import CycleEngine
+from repro.core.protocol import build_comm_views
+from repro.core.telemetry import (
+    NUM_SCORE_BUCKETS,
+    ROUND_EVENT_FIELDS,
+    init_telemetry_arrays,
+    residual_mass,
+    score_histogram,
+    upload_overlap,
+)
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.client import KGEClient
+from repro.federated.simulation import FederatedConfig, run_federated
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_CHAOS = "p=0.6,drop_up=0.2,drop_down=0.2,stragglers=0,lag=2,seed=3"
+# one spec per registered codec family at dim=8 (lowrank: D % cols == 0),
+# EF variants included so the residual-mass signal is live
+CODEC_SPECS = (
+    "identity",
+    "int8:ef=1",
+    "lowrank:cols=4,rank=1,ef=1",
+    "topk-dims:frac=0.5",
+)
+DEVICE_ENGINES = ("fused", "batched", "superstep")
+
+
+# ------------------------------------------------------------- unit helpers
+def test_upload_overlap_matches_set_intersection():
+    rng = np.random.default_rng(7)
+    C, k = 4, 6
+    up_idx = rng.integers(0, 30, size=(C, k)).astype(np.int32)
+    prev_idx = rng.integers(0, 30, size=(C, k)).astype(np.int32)
+    sent = (rng.random((C, k)) < 0.7).astype(np.float32)
+    prev = (rng.random((C, k)) < 0.7).astype(np.float32)
+    got = np.asarray(upload_overlap(
+        jnp.asarray(up_idx), jnp.asarray(sent),
+        jnp.asarray(prev_idx), jnp.asarray(prev),
+    ))
+    for c in range(C):
+        a = {int(i) for i, m in zip(up_idx[c], sent[c]) if m}
+        b = {int(i) for i, m in zip(prev_idx[c], prev[c]) if m}
+        # slot indices within one upload are distinct, so the masked
+        # pair-match sum is exactly the intersection size
+        assert got[c] == len(a & b), c
+
+
+def test_score_histogram_buckets_and_masks():
+    scores = jnp.asarray([[0.1, 0.3, 1.99, 5.0, -jnp.inf]])
+    valid = jnp.asarray([[True, True, True, True, False]])
+    hist = np.asarray(score_histogram(scores, valid))
+    assert hist.shape == (1, NUM_SCORE_BUCKETS)
+    assert hist.sum() == 4  # the invalid slot is dropped
+    assert hist[0, 0] == 1 and hist[0, 1] == 1  # 0.1, 0.3 (width 0.25)
+    assert hist[0, -1] == 2  # 1.99 and the 5.0 overflow clip into the top
+
+
+def test_residual_mass_is_l2_and_zero_width_is_zero():
+    rng = np.random.default_rng(3)
+    res = rng.normal(size=(3, 5, 4)).astype(np.float32)
+    got = np.asarray(residual_mass(jnp.asarray(res)))
+    want = np.linalg.norm(res.reshape(3, -1), axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    empty = np.asarray(residual_mass(jnp.zeros((3, 0, 4), jnp.float32)))
+    np.testing.assert_array_equal(empty, 0.0)
+
+
+def test_init_telemetry_arrays_zeroed():
+    tel = init_telemetry_arrays(3, 5)
+    assert tel.prev_idx.shape == (3, 5) and tel.prev_msk.shape == (3, 5)
+    assert not np.asarray(tel.prev_msk).any()
+
+
+# ------------------------------------------------ structural: off is identity
+def _mini_clients(num_clients=2, seed=1):
+    kg = generate_kg(num_entities=120, num_relations=4 * num_clients,
+                     num_triples=800, seed=seed)
+    cd = partition_by_relation(kg, num_clients, seed=0)
+    clients = [
+        KGEClient(d, method="transe", dim=8, batch_size=32,
+                  num_negatives=4, lr=5e-3, seed=0)
+        for d in cd
+    ]
+    views = build_comm_views([d.local_to_global for d in cd], kg.num_entities)
+    return kg, clients, views
+
+
+def test_telemetry_off_carries_no_leaves():
+    """telemetry=False must build the exact pre-telemetry state tree —
+    ``tel`` is None (zero pytree leaves), not a zeroed array pair."""
+    kg, clients, views = _mini_clients()
+    off = CycleEngine(clients, views, kg.num_entities, sparsity_p=0.5,
+                      local_epochs=1)
+    assert off.init_state(clients, seed=0).arrays.tel is None
+    _, clients2, _ = _mini_clients()
+    on = CycleEngine(clients2, views, kg.num_entities, sparsity_p=0.5,
+                     local_epochs=1, telemetry=True)
+    tel = on.init_state(clients2, seed=0).arrays.tel
+    assert tel is not None and tel.prev_idx.shape[0] == len(views)
+
+
+# -------------------------------------------------------- simulation fixture
+@pytest.fixture(scope="module")
+def sim_env():
+    kg = generate_kg(num_entities=120, num_relations=8, num_triples=900, seed=1)
+    clients = partition_by_relation(kg, 2, seed=0)
+    base = dict(method="transe", protocol="feds", dim=8, rounds=5,
+                local_epochs=1, batch_size=32, num_negatives=4, lr=5e-3,
+                sparsity_p=1.0, sync_interval=2, eval_every=2, patience=99,
+                max_eval_triples=30, seed=0)
+    return kg, clients, base
+
+
+def _events(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def _recorded_run(sim_env, tmp_path, tag, **overrides):
+    kg, clients, base = sim_env
+    path = tmp_path / f"{tag}.jsonl"
+    cfg = FederatedConfig(telemetry=str(path), **dict(base, **overrides))
+    res = run_federated(clients, kg.num_entities, cfg)
+    return res, _events(path)
+
+
+def test_telemetry_off_bitwise_neutral(sim_env, tmp_path):
+    """The recorder observes; it never perturbs.  Trajectory, ledger, and
+    terminal metrics must be bitwise equal with telemetry on or off."""
+    kg, clients, base = sim_env
+    off = run_federated(clients, kg.num_entities,
+                        FederatedConfig(engine="fused", **base))
+    on, events = _recorded_run(sim_env, tmp_path, "on", engine="fused")
+    assert off.eval_history == on.eval_history
+    assert off.ledger.history == on.ledger.history
+    assert off.ledger.params_transmitted == on.ledger.params_transmitted
+    assert off.ledger.bytes_int8_signs == on.ledger.bytes_int8_signs
+    assert off.test_mrr_cg == on.test_mrr_cg
+    assert events  # and the on-run actually recorded something
+
+
+# ----------------------------------------------------------- stream grammar
+def test_event_stream_grammar(sim_env, tmp_path):
+    _, events = _recorded_run(sim_env, tmp_path, "grammar", engine="fused")
+    kinds = [e["ev"] for e in events]
+    assert kinds[0] == "run" and kinds.count("run") == 1
+    assert kinds[-1] == "ledger" and kinds.count("ledger") == 1
+    rounds = [e for e in events if e["ev"] == "round"]
+    assert [e["round"] for e in rounds] == list(range(len(rounds)))
+    want_keys = set(ROUND_EVENT_FIELDS) | {"ev"}
+    for e in rounds:
+        assert set(e) == want_keys, e["round"]
+    evals = [e for e in events if e["ev"] == "eval"]
+    assert [e["split"] for e in evals].count("test") == 1
+    led = events[-1]
+    assert led["reconciled"] is True
+    assert led["params_transmitted"] == led["shadow_params"]
+    assert led["bytes"] == led["shadow_bytes"]
+    assert led["rounds"] == led["shadow_rounds"]
+
+
+# --------------------------- cross-engine bitwise records under chaos×codecs
+@pytest.mark.parametrize("codec", CODEC_SPECS)
+def test_device_engines_record_bitwise_identical_under_chaos(
+        sim_env, tmp_path, codec):
+    """fused == batched == superstep round events, byte for byte, under a
+    chaos schedule, for every registered codec family — and every stream
+    reconciles against the real ledger."""
+    streams = {}
+    for eng in DEVICE_ENGINES:
+        _, events = _recorded_run(
+            sim_env, tmp_path, f"{eng}-{codec.split(':')[0]}",
+            engine=eng, faults=_CHAOS, codec=codec,
+        )
+        led = events[-1]
+        assert led["ev"] == "ledger" and led["reconciled"] is True, (eng, codec)
+        streams[eng] = [e for e in events if e["ev"] == "round"]
+    assert streams["fused"] == streams["batched"] == streams["superstep"]
+    # the chaos schedule actually bit: some client skipped some round
+    parts = [p for e in streams["fused"] for p in e["part"]]
+    assert 0.0 in parts and 1.0 in parts
+
+
+def test_reference_engine_reconciles_and_bills_like_device(sim_env, tmp_path):
+    """The host-loop oracle rebuilds its records from ragged host state;
+    its informational signals (score_hist, overlap) come from its own
+    trajectory, but every billing field must equal the device engines'."""
+    _, dev = _recorded_run(sim_env, tmp_path, "dev",
+                           engine="superstep", faults=_CHAOS)
+    _, ref = _recorded_run(sim_env, tmp_path, "ref",
+                           engine="reference", faults=_CHAOS)
+    assert ref[-1]["ev"] == "ledger" and ref[-1]["reconciled"] is True
+    billing = ("round", "kind", "part", "up_rows", "dn_rows",
+               "up_bytes", "dn_bytes", "age", "cum_params", "cum_bytes")
+    dev_rounds = [e for e in dev if e["ev"] == "round"]
+    ref_rounds = [e for e in ref if e["ev"] == "round"]
+    assert len(dev_rounds) == len(ref_rounds)
+    for d, r in zip(dev_rounds, ref_rounds):
+        for k in billing:
+            assert d[k] == r[k], (d["round"], k)
+
+
+def test_tiered_engine_records_cache_activity(tmp_path):
+    kg = generate_kg(num_entities=300, num_relations=4, num_triples=900, seed=2)
+    cd = partition_by_relation(kg, 2, seed=2)
+    path = tmp_path / "tiered.jsonl"
+    cfg = FederatedConfig(
+        method="transe", protocol="feds", dim=8, rounds=4, local_epochs=1,
+        batch_size=32, num_negatives=4, lr=5e-3, sparsity_p=0.5,
+        sync_interval=3, eval_every=2, max_eval_triples=32,
+        engine="tiered", stage_steps=2, seed=3, telemetry=str(path),
+    )
+    run_federated(cd, kg.num_entities, cfg)
+    events = _events(path)
+    assert events[0]["ev"] == "run" and events[0]["engine"] == "tiered"
+    assert events[-1]["ev"] == "ledger" and events[-1]["reconciled"] is True
+    rounds = [e for e in events if e["ev"] == "round"]
+    assert sum(e["cache_misses"] for e in rounds) > 0  # cold start misses
+    spans = {e["name"] for e in events if e["ev"] == "span"}
+    assert "stage" in spans and "eval" in spans
+
+
+# -------------------------------------------------------- trace_report smoke
+def _trace_report(jsonl_path):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "trace_report.py"),
+         str(jsonl_path)],
+        capture_output=True, text=True, timeout=60,
+    )
+
+
+def test_trace_report_renders_and_verifies(sim_env, tmp_path):
+    _, events = _recorded_run(sim_env, tmp_path, "report", engine="fused")
+    res = _trace_report(tmp_path / "report.jsonl")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "reconciliation [PASS]" in res.stdout
+    assert "round" in res.stdout and "totals:" in res.stdout
+
+    # a truncated stream (run died before _finish) must fail loudly
+    cut = tmp_path / "cut.jsonl"
+    cut.write_text("".join(
+        json.dumps(e) + "\n" for e in events if e["ev"] != "ledger"
+    ))
+    res = _trace_report(cut)
+    assert res.returncode == 1
+    assert "ERROR" in res.stdout
+
+    # a stream whose shadow totals disagree with the real ledger must fail
+    # the reconciliation invariant, not pass on a stale flag
+    forged = [
+        dict(e, shadow_params=e["shadow_params"] + 1.0)
+        if e["ev"] == "ledger" else e
+        for e in events
+    ]
+    bad = tmp_path / "forged.jsonl"
+    bad.write_text("".join(json.dumps(e) + "\n" for e in forged))
+    res = _trace_report(bad)
+    assert res.returncode == 1
+    assert "reconciliation [FAIL]" in res.stdout

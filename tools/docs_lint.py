@@ -10,12 +10,18 @@ produces (parsed from .github/workflows/ci.yml) must be mentioned in
 EXPERIMENTS.md alongside its producer script, so the recorded perf
 trajectory stays documented as producers are added.
 
+And telemetry schema sync: every field named in the ``ROUND_EVENT_FIELDS``
+literal of ``src/repro/core/telemetry.py`` must appear backticked in the
+"Telemetry dataflow" section of docs/architecture.md — the recorder can't
+grow an undocumented signal.
+
   python tools/docs_lint.py
 
 CI pairs this with ``python -m compileall -q src`` as the docs-lint step.
 """
 from __future__ import annotations
 
+import ast
 import re
 import sys
 from pathlib import Path
@@ -45,8 +51,12 @@ def broken_links() -> list[str]:
     return broken
 
 
+# producers live under benchmarks/ or tools/; tools take a positional
+# input (e.g. trace_report.py telemetry.jsonl) before --json.  Argument
+# whitespace is [ \t] only so the match can't leak across CI steps.
 BENCH_STEP = re.compile(
-    r"python\s+benchmarks/(\w+)\.py\s+--json\s+(BENCH_\w+\.json)"
+    r"python\s+((?:benchmarks|tools)/\w+\.py)(?:[ \t]+(?!--json)\S+)*"
+    r"[ \t]+--json[ \t]+(BENCH_\w+\.json)"
 )
 
 
@@ -60,10 +70,40 @@ def undocumented_benchmarks() -> list[str]:
     missing = []
     for script, record in BENCH_STEP.findall(ci.read_text()):
         if record not in text:
-            missing.append(f"{record} (benchmarks/{script}.py)")
-        elif f"{script}.py" not in text:
-            missing.append(f"benchmarks/{script}.py (produces {record})")
+            missing.append(f"{record} ({script})")
+        elif script.split("/")[-1] not in text:
+            missing.append(f"{script} (produces {record})")
     return missing
+
+
+FIELDS_LITERAL = re.compile(r"ROUND_EVENT_FIELDS\s*=\s*(\([^)]*\))", re.S)
+TELEMETRY_HEADING = "## Telemetry dataflow"
+
+
+def telemetry_schema_drift() -> list[str]:
+    """docs/architecture.md's telemetry field table must cover exactly the
+    keys the recorder emits — parsed from the ROUND_EVENT_FIELDS literal in
+    core/telemetry.py (kept a pure literal so this check needs no jax)."""
+    src = ROOT / "src" / "repro" / "core" / "telemetry.py"
+    doc = ROOT / "docs" / "architecture.md"
+    if not src.exists() or not doc.exists():
+        return []
+    m = FIELDS_LITERAL.search(src.read_text())
+    if not m:
+        return ["src/repro/core/telemetry.py: ROUND_EVENT_FIELDS literal "
+                "not found (the docs sync check parses it textually)"]
+    fields = set(ast.literal_eval(m.group(1)))
+    text = doc.read_text()
+    if TELEMETRY_HEADING not in text:
+        return [f"docs/architecture.md: missing '{TELEMETRY_HEADING}' "
+                f"section documenting the round-event schema"]
+    section = text.split(TELEMETRY_HEADING, 1)[1].split("\n## ", 1)[0]
+    documented = set(re.findall(r"`(\w+)`", section))
+    drift = []
+    for f in sorted(fields - documented):
+        drift.append(f"docs/architecture.md §Telemetry dataflow: round-event "
+                     f"field `{f}` is emitted but undocumented")
+    return drift
 
 
 def main() -> int:
@@ -73,10 +113,14 @@ def main() -> int:
     undoc = undocumented_benchmarks()
     for u in undoc:
         print(f"UNDOCUMENTED BENCH RECORD  {u} — add it to EXPERIMENTS.md")
+    drift = telemetry_schema_drift()
+    for d in drift:
+        print(f"TELEMETRY SCHEMA DRIFT  {d}")
     files = len(doc_files())
-    if bad or undoc:
+    if bad or undoc or drift:
         print(f"{len(bad)} broken link(s), {len(undoc)} undocumented "
-              f"benchmark record(s) across {files} file(s)")
+              f"benchmark record(s), {len(drift)} schema drift(s) "
+              f"across {files} file(s)")
         return 1
     print(f"docs lint OK ({files} files)")
     return 0

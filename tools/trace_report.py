@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Render a federation flight-recorder JSONL stream into a readable report.
+
+Input: the event stream written by ``--telemetry PATH`` (see
+``repro.core.telemetry`` for the grammar: one ``run`` header, one ``round``
+event per round, ``eval`` events at boundaries, ``span`` timings for host
+stages, and a terminal ``ledger`` event).  Output: a per-round table, a
+host-span summary, the eval trajectory, and the run totals.
+
+This is also the telemetry pipeline's verifier: the ``ledger`` event carries
+the real ledger totals next to the shadow totals re-billed purely from
+device-recorded quantities.  If they disagree — the records misreport what
+was transmitted — the report says so and **exits non-zero**, which is the
+CI smoke step's assertion.
+
+Stdlib only (run it anywhere the JSONL lands, no jax needed):
+
+    python tools/trace_report.py telemetry.jsonl [--json BENCH_trace.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load_events(path: str) -> list[dict]:
+    events = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError as e:
+                raise SystemExit(f"{path}:{i + 1}: unparseable JSONL ({e})")
+            if not isinstance(ev, dict) or "ev" not in ev:
+                raise SystemExit(f"{path}:{i + 1}: not an event object")
+            events.append(ev)
+    return events
+
+
+def _fmt_row(cols, widths):
+    return "  ".join(str(c).rjust(w) for c, w in zip(cols, widths))
+
+
+def round_table(rounds: list[dict]) -> list[str]:
+    """One line per round: participation, rows/bytes per leg, mean realized
+    Top-K overlap fraction, EF residual mass, cache activity."""
+    header = ("round", "kind", "part", "up_rows", "dn_rows", "up_MB",
+              "dn_MB", "ovl%", "res_mass", "cache h/m/e")
+    widths = (5, 6, 4, 7, 7, 7, 7, 5, 8, 11)
+    lines = [_fmt_row(header, widths)]
+    for r in rounds:
+        n_part = sum(r["part"])
+        up_rows = sum(r["up_rows"])
+        ovl = (
+            f"{100.0 * sum(r['overlap']) / up_rows:.0f}"
+            if r["kind"] == "sparse" and up_rows else "-"
+        )
+        cache = "/".join(
+            str(r[k])
+            for k in ("cache_hits", "cache_misses", "cache_evictions")
+        )
+        lines.append(_fmt_row((
+            r["round"], r["kind"], f"{n_part}/{len(r['part'])}",
+            up_rows, sum(r["dn_rows"]),
+            f"{sum(r['up_bytes']) / 1e6:.3f}",
+            f"{sum(r['dn_bytes']) / 1e6:.3f}",
+            ovl, f"{sum(r['res_mass']):.2f}", cache,
+        ), widths))
+    return lines
+
+
+def span_table(spans: list[dict]) -> list[str]:
+    agg = defaultdict(lambda: [0, 0.0])
+    for s in spans:
+        agg[s["name"]][0] += 1
+        agg[s["name"]][1] += s["dur_s"]
+    lines = [_fmt_row(("span", "calls", "total_s", "mean_ms"), (12, 6, 9, 9))]
+    for name, (n, tot) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        lines.append(_fmt_row(
+            (name, n, f"{tot:.3f}", f"{1e3 * tot / n:.2f}"), (12, 6, 9, 9)
+        ))
+    return lines
+
+
+def eval_table(evals: list[dict]) -> list[str]:
+    lines = [_fmt_row(("round", "split", "MRR", "Hits@10", "Mparams"),
+                      (5, 6, 7, 8, 9))]
+    for e in evals:
+        lines.append(_fmt_row((
+            e["round"], e["split"], f"{e['mrr']:.4f}", f"{e['hits10']:.4f}",
+            f"{e['params_transmitted'] / 1e6:.3f}",
+        ), (5, 6, 7, 8, 9)))
+    return lines
+
+
+def report(events: list[dict]) -> tuple[list[str], list[str], bool]:
+    """Returns (report lines, claim strings, reconciled)."""
+    by = defaultdict(list)
+    for ev in events:
+        by[ev["ev"]].append(ev)
+    lines: list[str] = []
+    claims: list[str] = []
+
+    for run in by["run"]:
+        lines.append(
+            f"run: engine={run['engine']} codec={run['codec']} "
+            f"method={run['method']} protocol={run['protocol']} "
+            f"clients={run['clients']} dim={run['dim']} "
+            f"rounds={run['rounds']}"
+        )
+    rounds = sorted(by["round"], key=lambda r: r["round"])
+    if rounds:
+        lines.append("")
+        lines.extend(round_table(rounds))
+    if by["span"]:
+        lines.append("")
+        lines.extend(span_table(by["span"]))
+    if by["eval"]:
+        lines.append("")
+        lines.extend(eval_table(by["eval"]))
+
+    reconciled = False
+    if not by["ledger"]:
+        lines.append("")
+        lines.append("ERROR: no terminal 'ledger' event — the run died "
+                     "before _finish, or the stream is truncated")
+        claims.append("[WARN] trace: missing terminal ledger event")
+    else:
+        led = by["ledger"][-1]
+        # re-derive from the stored totals rather than trusting the flag:
+        # a stream whose ledger event was edited after the fact still fails
+        reconciled = bool(led["reconciled"]) and (
+            led["params_transmitted"] == led["shadow_params"]
+            and led["bytes"] == led["shadow_bytes"]
+            and led["rounds"] == led["shadow_rounds"]
+        )
+        part_rounds = [sum(r["part"]) for r in rounds]
+        mean_part = (
+            sum(part_rounds) / (len(part_rounds) or 1)
+        )
+        lines.append("")
+        lines.append(
+            f"totals: {led['rounds']} rounds, "
+            f"{led['params_transmitted'] / 1e6:.3f} Mparams, "
+            f"{led['bytes'] / 1e6:.3f} MB wire, "
+            f"mean participation {mean_part:.2f} clients/round"
+        )
+        tag = "PASS" if reconciled else "FAIL"
+        lines.append(
+            f"reconciliation [{tag}]: shadow ledger (re-billed from "
+            f"device records) {led['shadow_params'] / 1e6:.3f} Mparams / "
+            f"{led['shadow_bytes'] / 1e6:.3f} MB vs real "
+            f"{led['params_transmitted'] / 1e6:.3f} Mparams / "
+            f"{led['bytes'] / 1e6:.3f} MB"
+        )
+        claims.append(
+            f"[{tag}] trace: round records reconcile with the comm ledger "
+            f"bitwise ({led['rounds']} rounds)"
+        )
+    return lines, claims, reconciled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="telemetry JSONL written by --telemetry")
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH-style JSON record here")
+    args = ap.parse_args()
+    events = load_events(args.jsonl)
+    lines, claims, reconciled = report(events)
+    print("\n".join(lines))
+    if args.json:
+        rounds = [e for e in events if e["ev"] == "round"]
+        rec = {
+            "bench": "trace_report",
+            "schema_version": 1,
+            "fast": bool(os.environ.get("REPRO_BENCH_FAST")),
+            "source": args.jsonl,
+            "rounds": len(rounds),
+            "events": len(events),
+            "reconciled": reconciled,
+            "claims": claims,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+    if not reconciled:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
