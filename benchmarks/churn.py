@@ -30,7 +30,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import (  # noqa: E402
-    DIM, FAST, ROUNDS, SYNC_S, fmt_row, make_config, run_cached,
+    DIM, FAST, ROUNDS, SYNC_S, fmt_row, make_config, run_with_divergence,
 )
 
 PARTICIPATION = (1.0, 0.8, 0.6, 0.4)
@@ -43,38 +43,46 @@ def _bytes_per_round(res) -> float:
     return res.ledger.bytes_int8_signs / max(res.ledger.rounds, 1)
 
 
+def _fmt_div(x) -> str:
+    return f"{x:.4f}" if x is not None else "-"
+
+
 def run(out=print):
     rows = []
     out(f"\n== churn: participation sweep (TransE, R3, s={SYNC_S}, "
         f"{ROUNDS} rounds) ==")
-    out(fmt_row(["p_part", "MRR@CG", "bytes/round", "R@CG"]))
+    out(fmt_row(["p_part", "MRR@CG", "bytes/round", "R@CG", "div_sparse"]))
     for p in PARTICIPATION:
         faults = "" if p >= 1.0 else f"p={p},seed={FAULT_SEED}"
-        res = run_cached(3, make_config(
+        res, div = run_with_divergence(3, make_config(
             "feds", engine="superstep", faults=faults, patience=99,
         ))
         bpr = _bytes_per_round(res)
         rows.append({"kind": "participation", "value": p,
                      "mrr": res.test_mrr_cg, "bytes_per_round": bpr,
-                     "best_round": res.best_round})
+                     "best_round": res.best_round,
+                     "div_sparse": div["sparse"], "div_sync": div["sync"]})
         out(fmt_row([p, f"{res.test_mrr_cg:.4f}", f"{bpr / 1e3:.1f}KB",
-                     res.best_round]))
+                     res.best_round, _fmt_div(div["sparse"])]))
 
     out(f"\n== churn: sync interval under {CHURN!r} ==")
-    out(fmt_row(["s", "MRR@CG", "bytes/round", "R@CG"]))
+    out(fmt_row(["s", "MRR@CG", "bytes/round", "R@CG", "div_sparse",
+                 "div_sync"]))
     sweep = [("feds", s) for s in SYNC_SWEEP] + [("feds_nosync", None)]
     for proto, s in sweep:
         over = {"sync_interval": s} if s is not None else {}
-        res = run_cached(3, make_config(
+        res, div = run_with_divergence(3, make_config(
             proto, engine="superstep", faults=CHURN, patience=99, **over,
         ))
         label = s if s is not None else "never"
         rows.append({"kind": "sync_under_churn", "value": label,
                      "mrr": res.test_mrr_cg,
                      "bytes_per_round": _bytes_per_round(res),
-                     "best_round": res.best_round})
+                     "best_round": res.best_round,
+                     "div_sparse": div["sparse"], "div_sync": div["sync"]})
         out(fmt_row([label, f"{res.test_mrr_cg:.4f}",
-                     f"{_bytes_per_round(res) / 1e3:.1f}KB", res.best_round]))
+                     f"{_bytes_per_round(res) / 1e3:.1f}KB", res.best_round,
+                     _fmt_div(div["sparse"]), _fmt_div(div["sync"])]))
     return rows
 
 
@@ -105,6 +113,20 @@ def check_claims(rows):
         f"[{'PASS' if ok else 'WARN'}] sync under churn: best synced MRR "
         f"{best_s:.4f} vs never-sync {sync['never']['mrr']:.4f} "
         f"(sync rounds act as recovery points)"
+    )
+    # even under churn, every synced schedule's sync rounds must sit below
+    # its own sparse rounds on shared-entity divergence (the recovery the
+    # second sweep exists to map)
+    healed = [s for s in SYNC_SWEEP
+              if sync[s]["div_sync"] is not None
+              and sync[s]["div_sparse"] is not None
+              and sync[s]["div_sync"] < sync[s]["div_sparse"]]
+    ok = len(healed) == len(SYNC_SWEEP)
+    notes.append(
+        f"[{'PASS' if ok else 'WARN'}] sync under churn: "
+        f"{len(healed)}/{len(SYNC_SWEEP)} sync intervals show sync-round "
+        f"divergence below sparse-round divergence (sync heals drift "
+        f"accumulated while clients were absent)"
     )
     return notes
 

@@ -10,8 +10,11 @@ absolute MRR.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
 import os
+import tempfile
 import time
 
 from repro.core.sync import comm_ratio_worst_case
@@ -71,6 +74,46 @@ def run_cached(num_clients: int, cfg: FederatedConfig, verbose: bool = False):
         _RESULT_CACHE[key] = run_federated(clients, kg.num_entities, cfg, verbose)
         _RESULT_CACHE[key].wall_s = time.time() - t0  # type: ignore[attr-defined]
     return _RESULT_CACHE[key]
+
+
+def divergence_round_means(jsonl_path: str) -> dict:
+    """Mean shared-entity divergence by comm-round kind from a flight-recorder
+    JSONL: ``{"sparse": mean of per-round mean div_mean, "sync": ...}``, with
+    ``None`` for kinds that never happened (FedS/syn has no sync rounds)."""
+    by_kind: dict[str, list[float]] = {"sparse": [], "sync": []}
+    with open(jsonl_path) as f:
+        for line in f:
+            ev = json.loads(line)
+            if ev.get("ev") == "round" and ev.get("kind") in by_kind:
+                d = ev["div_mean"]
+                by_kind[ev["kind"]].append(sum(d) / max(len(d), 1))
+    return {
+        k: (sum(v) / len(v) if v else None) for k, v in by_kind.items()
+    }
+
+
+_DIV_CACHE: dict[tuple, dict] = {}
+
+
+def run_with_divergence(num_clients: int, cfg: FederatedConfig,
+                        verbose: bool = False):
+    """``run_cached`` with the flight recorder on: returns ``(result,
+    divergence_round_means dict)`` from ONE run.  The recorder is
+    observational (telemetry-off programs are bitwise identical), so the
+    result is also seeded into the plain-config cache — suites that run the
+    same config without telemetry reuse it instead of training again."""
+    cfg = dataclasses.replace(cfg, telemetry="")
+    key = (num_clients, tuple(sorted(vars(cfg).items())))
+    if key not in _DIV_CACHE:
+        fd, path = tempfile.mkstemp(suffix=".jsonl")
+        os.close(fd)
+        res = run_cached(
+            num_clients, dataclasses.replace(cfg, telemetry=path), verbose
+        )
+        _DIV_CACHE[key] = divergence_round_means(path)
+        os.unlink(path)
+        _RESULT_CACHE[key] = res
+    return _RESULT_CACHE[key], _DIV_CACHE[key]
 
 
 def fedepl_dim(p: float = SPARSITY, s: int = SYNC_S, dim: int = DIM) -> int:

@@ -9,11 +9,20 @@ select suites with ``--only table3,roofline``.
 producers emitted into one schema-checked ``BENCH_summary.json``, and fails
 loudly (non-zero exit) when a producer silently wrote nothing — the failure
 mode where the "recorded perf trajectory" is quietly empty.
+
+The perf-regression sentinel rides the same records: ``--write-baseline``
+flattens every producer record in ``--bench-dir`` to its numeric leaves
+(timing-like paths skipped — wall clock moves with the host, not the code)
+and snapshots them with tolerances into the ``--baseline`` file;
+``--baseline BENCH_baseline.json --check`` re-flattens fresh records and
+exits non-zero, naming the producer script, when a metric drifts out of
+tolerance, vanishes, or its producer wrote nothing.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 import time
@@ -31,8 +40,10 @@ JSON_PRODUCERS = {
     "BENCH_eval.json": ("eval_throughput", "eval_throughput"),
     "BENCH_scale.json": ("scale_entities", "scale_entities"),
     "BENCH_churn.json": ("churn", "churn"),
+    "BENCH_fig2.json": ("fig2_sync_ablation", "fig2_sync_ablation"),
     "BENCH_telemetry.json": ("telemetry_overhead", "telemetry_overhead"),
     "BENCH_trace.json": ("tools/trace_report", "trace_report"),
+    "BENCH_health.json": ("tools/health_report", "health_report"),
 }
 
 SCHEMA_VERSION = 1
@@ -95,6 +106,133 @@ def aggregate(bench_dir: str) -> int:
     return 1 if errors else 0
 
 
+# ---------------------------------------------------- perf-regression sentinel
+# Numeric leaf paths containing any of these substrings are never compared:
+# wall-clock / throughput numbers measure the host, not the code.  The list
+# is snapshotted INTO the baseline file, so retuning it never needs a code
+# change — edit the baseline and re-check.
+BASELINE_SKIP = ("wall", "us_per", "time", "_ms", "per_sec", "source")
+BASELINE_REL_TOL = 0.15  # generous: CI hosts differ in BLAS/arch
+BASELINE_ABS_TOL = 0.02  # floor for near-zero metrics (divergence, MRR)
+
+
+def _numeric_leaves(obj, prefix: str = "") -> dict:
+    """Flatten a JSON record to ``{dotted.path: float}`` over its int/float
+    leaves (bools are identity flags, strings are prose — neither is a
+    metric)."""
+    out: dict = {}
+    if isinstance(obj, bool) or obj is None:
+        return out
+    if isinstance(obj, (int, float)):
+        if math.isfinite(obj):
+            out[prefix] = float(obj)
+        return out
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_numeric_leaves(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(_numeric_leaves(v, f"{prefix}[{i}]"))
+    return out
+
+
+def _skipped(path: str, skip) -> bool:
+    low = path.lower()
+    return any(s in low for s in skip)
+
+
+def write_baseline(bench_dir: str, baseline_path: str) -> int:
+    """Snapshot every producer record's numeric leaves into the baseline."""
+    metrics, missing, fast = {}, [], False
+    for fname in sorted(JSON_PRODUCERS):
+        path = os.path.join(bench_dir, fname)
+        if not os.path.exists(path):
+            missing.append(f"{fname} ({_producer_script(JSON_PRODUCERS[fname][0])})")
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        fast = fast or bool(rec.get("fast"))
+        metrics[fname] = {
+            p: v for p, v in sorted(_numeric_leaves(rec).items())
+            if not _skipped(p, BASELINE_SKIP)
+        }
+    if not metrics:
+        print(f"no producer records found in {bench_dir!r} — run the "
+              f"benchmarks with --json first", file=sys.stderr)
+        return 1
+    baseline = {
+        "bench": "baseline",
+        "schema_version": SCHEMA_VERSION,
+        "fast": fast,
+        "rel_tol": BASELINE_REL_TOL,
+        "abs_tol": BASELINE_ABS_TOL,
+        "skip": list(BASELINE_SKIP),
+        "metrics": metrics,
+    }
+    with open(baseline_path, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    n = sum(len(v) for v in metrics.values())
+    print(f"baseline: {n} metric(s) from {len(metrics)} record(s) -> "
+          f"{baseline_path}")
+    for m in missing:
+        print(f"  (no record for {m} — not covered by this baseline)")
+    return 0
+
+
+def check_baseline(bench_dir: str, baseline_path: str) -> int:
+    """Compare fresh producer records against the committed baseline; every
+    error names the producer script so the regression has an owner."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read baseline {baseline_path}: {e}", file=sys.stderr)
+        return 1
+    rel_tol = base.get("rel_tol", BASELINE_REL_TOL)
+    abs_tol = base.get("abs_tol", BASELINE_ABS_TOL)
+    skip = tuple(base.get("skip", BASELINE_SKIP))
+    errors: list[str] = []
+    compared = 0
+    for fname, wants in sorted(base.get("metrics", {}).items()):
+        producer = (_producer_script(JSON_PRODUCERS[fname][0])
+                    if fname in JSON_PRODUCERS else fname)
+        path = os.path.join(bench_dir, fname)
+        if not os.path.exists(path):
+            errors.append(f"{fname}: missing — {producer} produced no "
+                          f"record to compare")
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        if bool(rec.get("fast")) != bool(base.get("fast")):
+            errors.append(
+                f"{fname}: fast={rec.get('fast')} but the baseline was "
+                f"recorded with fast={base.get('fast')} — regenerate with "
+                f"--write-baseline under the same REPRO_BENCH_FAST"
+            )
+            continue
+        got = _numeric_leaves(rec)
+        for p, want in sorted(wants.items()):
+            if _skipped(p, skip):
+                continue
+            if p not in got:
+                errors.append(f"{fname}: metric {p} vanished from the "
+                              f"record — check {producer}")
+                continue
+            compared += 1
+            tol = max(rel_tol * abs(want), abs_tol)
+            if abs(got[p] - want) > tol:
+                errors.append(
+                    f"{fname}: {p} = {got[p]:.6g}, baseline {want:.6g} "
+                    f"(tolerance ±{tol:.4g}) — check {producer}"
+                )
+    print(f"perf sentinel: {compared} metric(s) vs {baseline_path}, "
+          f"{len(errors)} problem(s)")
+    for e in errors:
+        print(f"  REGRESSION {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -106,7 +244,25 @@ def main() -> None:
                     help="don't run suites; merge the BENCH_*.json records "
                          "in DIR (default .) into BENCH_summary.json and "
                          "fail if any producer wrote nothing")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    metavar="PATH",
+                    help="perf-sentinel baseline file (read by --check, "
+                         "written by --write-baseline)")
+    ap.add_argument("--check", action="store_true",
+                    help="don't run suites; compare the producer records in "
+                         "--bench-dir against --baseline and exit non-zero "
+                         "on any out-of-tolerance metric (producer named)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="don't run suites; snapshot the producer records "
+                         "in --bench-dir into --baseline")
+    ap.add_argument("--bench-dir", default=".", metavar="DIR",
+                    help="where the BENCH_*.json producer records live "
+                         "(default .)")
     args = ap.parse_args()
+    if args.write_baseline:
+        sys.exit(write_baseline(args.bench_dir, args.baseline))
+    if args.check:
+        sys.exit(check_baseline(args.bench_dir, args.baseline))
     if args.aggregate is not None:
         sys.exit(aggregate(args.aggregate))
     only = set(args.only.split(",")) if args.only else None

@@ -53,9 +53,12 @@ import numpy as np
 from repro.core import eshard
 from repro.core.telemetry import (
     RoundTelemetry,
+    nonfinite_count,
     record_spec as telemetry_record_spec,
     residual_mass,
     score_histogram,
+    shared_divergence,
+    update_norm,
     upload_overlap,
 )
 from repro.core.codecs import IdentityCodec, WireCodec
@@ -385,6 +388,13 @@ def batched_sparse_round(
             res_mass = residual_mass(new_res, entity_axis=ea)
         else:
             res_mass = jnp.zeros((cl,), emb.dtype)
+        # model-health probes run on full-width (all-blocks) buffers so the
+        # divergence segment sums keep the unsharded summation order (the
+        # batched_sync_round rule); nonfinite is integer, hence order-exact
+        new_full = eshard.all_blocks(new_emb, ea)
+        div_mean, div_max = shared_divergence(
+            new_full, gid, valid, num_global, axis_name=axis_name
+        )
         rec = RoundTelemetry(
             up_rows=sent_maskf.sum(axis=1).astype(jnp.int32),
             dn_rows=down_count,
@@ -397,6 +407,10 @@ def batched_sparse_round(
             # placeholder with the post-update counters
             age=jnp.zeros((cl,), jnp.int32),
             score_hist=score_histogram(scores, valid_blk, entity_axis=ea),
+            div_mean=div_mean,
+            div_max=div_max,
+            upd_norm=update_norm(new_full, eshard.all_blocks(emb, ea), valid),
+            nonfinite=nonfinite_count(new_full, valid),
         )
         out = out + (rec, new_prev)
     return out

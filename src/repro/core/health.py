@@ -1,0 +1,234 @@
+"""Streaming health monitor over the flight-recorder event stream.
+
+The PR-9 telemetry pipe records what happened; this module judges it while
+the run is still going.  A declarative alert-rule spec (the PR-4 codec /
+PR-7 fault spec-string shape) compiles into a :class:`HealthMonitor` that
+the simulation hangs on the :class:`~repro.core.telemetry.TelemetrySink` —
+every ``round`` / ``eval`` event is observed as it drains, and a violated
+rule appends an ``{"ev": "alert"}`` event to the JSONL stream right after
+the event that fired it.  Four rules cover the paper's failure modes:
+
+* ``divergence>X`` — some client's shared rows drifted more than ``X``
+  (mean L2 vs the cross-client mean) from the federation consensus: the
+  inconsistency intermittent synchronization is supposed to bound.
+* ``nan`` — non-finite components appeared in shared rows (the training
+  run is numerically dead; everything downstream is noise).
+* ``mrr-stall=N`` — validation MRR has not improved for ``N`` rounds.
+* ``byte-budget=B`` — the cumulative wire bytes crossed ``B``.
+
+Rules latch: each fires at most once per run, recording the first
+violation (the report renders the full alert log).  The monitor's
+``mode`` decides severity: ``warn`` only records; ``fail`` additionally
+makes :meth:`HealthMonitor.should_stop` true, which the simulation checks
+at eval boundaries for a *graceful* fail-fast — the stream still ends
+with the terminal ledger event, so the JSONL grammar (and the shadow
+reconciliation) survives an aborted run.  ``tools/health_report.py``
+exits non-zero on fired fail-level alerts so CI can gate on the stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+ALERT_RULES = ("divergence", "nan", "mrr-stall", "byte-budget")
+ALERT_MODES = ("warn", "fail")
+_SPEC_GRAMMAR = (
+    "alert spec grammar: semicolon-separated rules over "
+    f"{ALERT_RULES}, e.g. 'divergence>0.5;nan;mrr-stall=20;byte-budget=2e9' "
+    "('nan' takes no value; divergence uses '>', the others '=')"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertRule:
+    """One parsed alert rule: a name from :data:`ALERT_RULES` plus its
+    threshold (None only for ``nan``, whose threshold is implicitly 0)."""
+
+    name: str
+    threshold: Optional[float] = None
+
+    def __post_init__(self):
+        if self.name not in ALERT_RULES:
+            raise ValueError(
+                f"unknown alert rule {self.name!r}; {_SPEC_GRAMMAR}"
+            )
+        if self.name == "nan":
+            if self.threshold is not None:
+                raise ValueError(f"rule 'nan' takes no value; {_SPEC_GRAMMAR}")
+        else:
+            if self.threshold is None or not self.threshold > 0:
+                raise ValueError(
+                    f"rule {self.name!r} needs a positive threshold, got "
+                    f"{self.threshold!r}; {_SPEC_GRAMMAR}"
+                )
+            if self.name == "mrr-stall" and self.threshold != int(self.threshold):
+                raise ValueError(
+                    f"rule 'mrr-stall' takes an integer round count, got "
+                    f"{self.threshold!r}; {_SPEC_GRAMMAR}"
+                )
+
+    @property
+    def spec(self) -> str:
+        """The canonical spec-string form (parse/format round-trips)."""
+        if self.name == "nan":
+            return "nan"
+        if self.name == "divergence":
+            return f"divergence>{self.threshold:g}"
+        if self.name == "mrr-stall":
+            return f"mrr-stall={int(self.threshold)}"
+        return f"byte-budget={self.threshold:g}"
+
+
+def parse_alert_spec(spec: str) -> Tuple[AlertRule, ...]:
+    """Parse the ``--alerts`` spec string into a rule tuple.
+
+    An empty string means "no monitoring" and returns ``()``.  Errors are
+    self-describing: they restate the grammar alongside the bad item.
+    """
+    spec = (spec or "").strip()
+    if not spec:
+        return ()
+    rules = []
+    seen = set()
+    for item in spec.split(";"):
+        item = item.strip()
+        if not item:
+            raise ValueError(f"empty alert rule in {spec!r}; {_SPEC_GRAMMAR}")
+        if ">" in item:
+            name, _, val = (s.strip() for s in item.partition(">"))
+        elif "=" in item:
+            name, _, val = (s.strip() for s in item.partition("="))
+        else:
+            name, val = item, None
+        if name in seen:
+            raise ValueError(f"duplicate alert rule {name!r}")
+        seen.add(name)
+        threshold = None
+        if val is not None:
+            try:
+                threshold = float(val)
+            except ValueError:
+                raise ValueError(
+                    f"bad value {val!r} for alert rule {name!r}; "
+                    f"{_SPEC_GRAMMAR}"
+                ) from None
+        rules.append(AlertRule(name, threshold))
+    return tuple(rules)
+
+
+def format_alert_spec(rules: Tuple[AlertRule, ...]) -> str:
+    """Inverse of :func:`parse_alert_spec` (canonical form)."""
+    return ";".join(r.spec for r in rules)
+
+
+class HealthMonitor:
+    """Evaluates alert rules online against the drained event stream.
+
+    Stateful across one run: ``observe`` consumes each ``round`` / ``eval``
+    event (in emission order) and returns the ``alert`` events it fired —
+    the sink writes them immediately after the triggering event.  ``fired``
+    keeps every alert for the terminal summary; ``should_stop`` is the
+    fail-fast signal the simulation polls at eval boundaries.
+    """
+
+    def __init__(self, rules: Tuple[AlertRule, ...], mode: str = "warn"):
+        if mode not in ALERT_MODES:
+            raise ValueError(
+                f"unknown alert mode {mode!r}; expected one of {ALERT_MODES}"
+            )
+        self.rules = tuple(rules)
+        self.mode = mode
+        self.fired: list[dict] = []
+        self._latched: set[str] = set()
+        self._best_mrr = -math.inf
+        self._best_round = 0
+
+    def _fire(self, rule: AlertRule, round_no: int, value, detail: str):
+        if rule.name in self._latched:
+            return None
+        self._latched.add(rule.name)
+        alert = {
+            "ev": "alert", "rule": rule.spec, "name": rule.name,
+            "round": int(round_no), "level": self.mode,
+            "value": float(value),
+            "threshold": (
+                float(rule.threshold) if rule.threshold is not None else 0.0
+            ),
+            "detail": detail,
+        }
+        self.fired.append(alert)
+        return alert
+
+    def should_stop(self) -> bool:
+        return self.mode == "fail" and bool(self.fired)
+
+    # ------------------------------------------------------------ observers
+    def observe(self, event: dict) -> list[dict]:
+        ev = event.get("ev")
+        if ev == "round":
+            return self._observe_round(event)
+        if ev == "eval" and event.get("split") == "valid":
+            return self._observe_eval(event)
+        return []
+
+    def _observe_round(self, event: dict) -> list[dict]:
+        out = []
+        t = event.get("round", 0)
+        for rule in self.rules:
+            if rule.name == "divergence":
+                worst = max(event.get("div_mean") or [0.0])
+                if worst > rule.threshold:
+                    c = (event["div_mean"]).index(worst)
+                    a = self._fire(
+                        rule, t, worst,
+                        f"client {c} div_mean {worst:.4g} > "
+                        f"{rule.threshold:g} at round {t}",
+                    )
+                    if a:
+                        out.append(a)
+            elif rule.name == "nan":
+                bad = sum(event.get("nonfinite") or [0])
+                floats = (event.get("div_mean") or []) \
+                    + (event.get("upd_norm") or []) \
+                    + (event.get("res_mass") or [])
+                if bad > 0 or any(not math.isfinite(x) for x in floats):
+                    a = self._fire(
+                        rule, t, bad,
+                        f"{bad} non-finite component(s) in shared rows "
+                        f"at round {t}",
+                    )
+                    if a:
+                        out.append(a)
+            elif rule.name == "byte-budget":
+                spent = event.get("cum_bytes", 0.0)
+                if spent > rule.threshold:
+                    a = self._fire(
+                        rule, t, spent,
+                        f"cumulative wire bytes {spent:.4g} > budget "
+                        f"{rule.threshold:g} at round {t}",
+                    )
+                    if a:
+                        out.append(a)
+        return out
+
+    def _observe_eval(self, event: dict) -> list[dict]:
+        out = []
+        t = event.get("round", 0)
+        mrr = event.get("mrr", -math.inf)
+        if mrr > self._best_mrr:
+            self._best_mrr = mrr
+            self._best_round = t
+        for rule in self.rules:
+            if rule.name != "mrr-stall":
+                continue
+            stalled = t - self._best_round
+            if stalled >= rule.threshold:
+                a = self._fire(
+                    rule, t, stalled,
+                    f"val MRR best ({self._best_mrr:.4f}) unimproved for "
+                    f"{stalled} rounds (limit {int(rule.threshold)})",
+                )
+                if a:
+                    out.append(a)
+        return out

@@ -71,9 +71,12 @@ from repro.core.telemetry import (
     RoundTelemetry,
     TelemetryArrays,
     init_telemetry_arrays,
+    nonfinite_count,
     record_spec,
     residual_mass,
+    shared_divergence,
     telemetry_spec,
+    update_norm,
 )
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_scoring, loss_from_scores, per_sample_losses
@@ -749,6 +752,14 @@ class CycleEngine:
                         consts.valid.sum(axis=1).astype(jnp.int32),
                         0,
                     )
+                    # health probes on the post-sync rows, full width so the
+                    # divergence segment sums keep the unsharded summation
+                    # order; a fault-free sync collapses div_* to exact zero
+                    post_full = eshard.all_blocks(rows, eaxis)
+                    div_mean, div_max = shared_divergence(
+                        post_full, consts.gid, consts.valid, num_global,
+                        axis_name=axis,
+                    )
                     rec = RoundTelemetry(
                         up_rows=billed,
                         dn_rows=billed,
@@ -761,6 +772,13 @@ class CycleEngine:
                         score_hist=jnp.zeros(
                             (cl, NUM_SCORE_BUCKETS), jnp.int32
                         ),
+                        div_mean=div_mean,
+                        div_max=div_max,
+                        upd_norm=update_norm(
+                            post_full, eshard.all_blocks(emb, eaxis),
+                            consts.valid,
+                        ),
+                        nonfinite=nonfinite_count(post_full, consts.valid),
                     )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)

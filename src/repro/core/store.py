@@ -77,8 +77,11 @@ from repro.core.telemetry import (
     RoundTelemetry,
     TelemetryArrays,
     init_telemetry_arrays,
+    nonfinite_count,
     residual_mass,
+    shared_divergence,
     span as telemetry_span,
+    update_norm,
 )
 from repro.data.loader import stack_padded_triples
 from repro.kge.scoring import get_scoring, per_sample_losses
@@ -607,6 +610,9 @@ class TieredCycleEngine:
                     # Top-K signals; the overlap carry passes through
                     onesf = jnp.ones((c_n,), jnp.float32)
                     billed = valid.sum(axis=1).astype(jnp.int32)
+                    div_mean, div_max = shared_divergence(
+                        rows, gid, valid, num_global
+                    )
                     rec = RoundTelemetry(
                         up_rows=billed,
                         dn_rows=billed,
@@ -619,6 +625,10 @@ class TieredCycleEngine:
                         score_hist=jnp.zeros(
                             (c_n, NUM_SCORE_BUCKETS), jnp.int32
                         ),
+                        div_mean=div_mean,
+                        div_max=div_max,
+                        upd_norm=update_norm(rows, emb, valid),
+                        nonfinite=nonfinite_count(rows, valid),
                     )
             else:
                 # halve after the f32 cast (mirrors RoundEngine.sparse_round)

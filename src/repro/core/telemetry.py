@@ -69,6 +69,14 @@ class RoundTelemetry(NamedTuple):
     post-round EF residual bank, ``part``/``up_ok``/``dn_ok`` (C,) 0/1 fault
     masks, ``age`` (C,) int32 rounds since last participation (post-update),
     ``score_hist`` (C, NUM_SCORE_BUCKETS) int32 change-score histogram.
+
+    Model-health probes ride the same record: ``div_mean``/``div_max``
+    (C,) f32 mean/max L2 distance of the client's post-round shared rows
+    from the existence-masked cross-client mean (the inconsistency the
+    paper's intermittent synchronization bounds — it collapses at sync
+    rounds), ``upd_norm`` (C,) f32 L2 norm of the round's shared-row
+    update, ``nonfinite`` (C,) int32 count of non-finite components in
+    the client's post-round shared rows.
     """
 
     up_rows: jnp.ndarray
@@ -80,6 +88,10 @@ class RoundTelemetry(NamedTuple):
     dn_ok: jnp.ndarray
     age: jnp.ndarray
     score_hist: jnp.ndarray
+    div_mean: jnp.ndarray
+    div_max: jnp.ndarray
+    upd_norm: jnp.ndarray
+    nonfinite: jnp.ndarray
 
 
 # The exact key set of a ``{"ev": "round"}`` JSONL event.  Kept as a literal
@@ -88,6 +100,7 @@ class RoundTelemetry(NamedTuple):
 ROUND_EVENT_FIELDS = (
     "round", "kind", "up_rows", "dn_rows", "overlap", "res_mass",
     "part", "up_ok", "dn_ok", "age", "score_hist",
+    "div_mean", "div_max", "upd_norm", "nonfinite",
     "up_bytes", "dn_bytes", "cache_hits", "cache_misses",
     "cache_evictions", "cum_params", "cum_bytes",
 )
@@ -154,6 +167,64 @@ def upload_overlap(up_idx, sent_maskf, prev_idx, prev_msk):
     return pair.sum(axis=(1, 2)).astype(jnp.int32)
 
 
+def shared_divergence(rows, gid, valid, num_global: int,
+                      axis_name: Optional[str] = None):
+    """Per-client shared-entity divergence against the cross-client mean.
+
+    ``rows`` (C, Ns, D) padded shared-row values, ``gid`` (C, Ns) int32
+    global entity ids (padding slots point at ``num_global``), ``valid``
+    (C, Ns) existence mask.  For every global entity the existence-masked
+    cross-client mean row is formed by segment sum (one throwaway segment
+    swallows the padding), then each client's valid rows are measured
+    against it: ``div_mean`` averages the per-row L2 distances, ``div_max``
+    takes the worst row.  A fault-free sync round makes every copy equal
+    the mean, so both collapse to exactly zero — the recovery signal the
+    paper's intermittent synchronization predicts.
+
+    Callers under entity sharding must pass full-width (all-blocks) rows so
+    the segment sums reduce in unsharded order (the
+    :func:`~repro.core.engine.batched_sync_round` rule); ``axis_name``
+    psum-reduces across a *client* mesh only.
+    """
+    _, _, d = rows.shape
+    validf = valid.astype(rows.dtype)
+    ids = jnp.where(valid, gid, num_global).reshape(-1)
+    total = jax.ops.segment_sum(
+        (rows * validf[:, :, None]).reshape(-1, d), ids,
+        num_segments=num_global + 1)
+    cnt = jax.ops.segment_sum(validf.reshape(-1), ids,
+                              num_segments=num_global + 1)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+        cnt = jax.lax.psum(cnt, axis_name)
+    mean = total / jnp.maximum(cnt, 1.0)[:, None]
+    diff = rows - mean[gid]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1)) * validf
+    div_mean = dist.sum(axis=1) / jnp.maximum(validf.sum(axis=1), 1.0)
+    return div_mean, dist.max(axis=1, initial=0.0)
+
+
+def update_norm(new_rows, old_rows, valid):
+    """(C,) f32 L2 norm of each client's shared-row update this round.
+
+    Padding slots are masked; like :func:`residual_mass`, callers under
+    entity sharding pass full-width buffers so the reduction order matches
+    the unsharded program bitwise.
+    """
+    diff = (new_rows - old_rows) * valid.astype(new_rows.dtype)[:, :, None]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=(1, 2)))
+
+
+def nonfinite_count(rows, valid):
+    """(C,) int32 count of non-finite components in valid shared rows.
+
+    Integer accumulation is order-exact, so this is safe under any
+    sharding; it feeds the ``nan`` alert rule.
+    """
+    bad = ~jnp.isfinite(rows) & valid[:, :, None]
+    return bad.sum(axis=(1, 2)).astype(jnp.int32)
+
+
 # -------------------------------------------------------- host sink + spans
 class TelemetrySink:
     """Newline-delimited JSON event writer with span timing.
@@ -164,19 +235,26 @@ class TelemetrySink:
     checkpoint.  ``shadow`` is installed by the simulation: a second
     :class:`~repro.federated.comm.CommLedger` fed only from device-recorded
     telemetry, whose totals the ``ledger`` event compares against the real
-    ledger's.
+    ledger's.  ``monitor`` (a :class:`~repro.core.health.HealthMonitor`,
+    installed by the simulation when ``--alerts`` is set) observes every
+    ``round``/``eval`` event as it drains and may append ``alert`` events
+    to the stream, right after the event that fired them.
     """
 
     def __init__(self, path: str):
         self.path = str(path)
         self._f = None
         self.shadow = None
+        self.monitor = None
 
     def emit(self, event: dict) -> None:
         if self._f is None:
             self._f = open(self.path, "w")
         self._f.write(json.dumps(event) + "\n")
         self._f.flush()
+        if self.monitor is not None and event.get("ev") in ("round", "eval"):
+            for alert in self.monitor.observe(event):
+                self.emit(alert)
 
     @contextlib.contextmanager
     def span(self, name: str, **attrs):

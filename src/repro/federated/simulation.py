@@ -69,6 +69,7 @@ from repro.core.aggregate import Upload, fede_aggregate, personalized_aggregate
 from repro.core.codecs import parse_codec_spec
 from repro.core.evaluation import BatchedEvaluator
 from repro.core.faults import host_round_faults, parse_fault_spec
+from repro.core.health import HealthMonitor, parse_alert_spec
 from repro.core.protocol import (
     apply_full_download,
     apply_sparse_download,
@@ -83,8 +84,11 @@ from repro.core.telemetry import (
     NUM_SCORE_BUCKETS,
     RoundTelemetry,
     TelemetrySink,
+    nonfinite_count,
     residual_mass,
     score_histogram,
+    shared_divergence,
+    update_norm,
 )
 from repro.core.sync import round_kind
 from repro.data.partition import ClientData
@@ -159,6 +163,14 @@ class FederatedConfig:
     # the records to cross-check the real accounting (tools/trace_report.py).
     # Off: zero-cost — the engines compile the exact pre-telemetry programs.
     telemetry: str = ""
+    # streaming health monitor: alert-rule spec (repro.core.health grammar),
+    # e.g. "divergence>0.5;nan;mrr-stall=20;byte-budget=2e9"; requires
+    # telemetry (rules judge the drained event stream).  alert_mode "warn"
+    # records ``alert`` events only; "fail" additionally stops the run
+    # gracefully at the next eval boundary after an alert fires (the stream
+    # still ends with the terminal ledger event).
+    alerts: str = ""
+    alert_mode: str = "warn"
 
 
 @dataclasses.dataclass
@@ -289,6 +301,8 @@ def _emit_round_event(sink, codec, dim, views, kind, t, rec, cache=None):
             "res_mass": [0.0] * c_n, "part": zi, "up_ok": zi, "dn_ok": zi,
             "age": zi,
             "score_hist": [[0] * NUM_SCORE_BUCKETS for _ in range(c_n)],
+            "div_mean": [0.0] * c_n, "div_max": [0.0] * c_n,
+            "upd_norm": [0.0] * c_n, "nonfinite": zi,
             "up_bytes": [0.0] * c_n, "dn_bytes": [0.0] * c_n,
             "cache_hits": int(cache["hits"]) if cache else 0,
             "cache_misses": int(cache["misses"]) if cache else 0,
@@ -327,6 +341,10 @@ def _emit_round_event(sink, codec, dim, views, kind, t, rec, cache=None):
         "dn_ok": [int(x > 0.5) for x in rec.dn_ok],
         "age": [int(x) for x in rec.age],
         "score_hist": [[int(x) for x in row] for row in rec.score_hist],
+        "div_mean": [float(x) for x in rec.div_mean],
+        "div_max": [float(x) for x in rec.div_max],
+        "upd_norm": [float(x) for x in rec.upd_norm],
+        "nonfinite": [int(x) for x in rec.nonfinite],
         "up_bytes": up_bytes, "dn_bytes": dn_bytes,
         "cache_hits": int(cache["hits"]) if cache else 0,
         "cache_misses": int(cache["misses"]) if cache else 0,
@@ -365,6 +383,12 @@ def run_federated(
         raise ValueError(
             f"unknown engine {cfg.engine!r}; expected one of {ENGINES}"
         )
+    rules = parse_alert_spec(cfg.alerts)  # eager: bad specs fail before work
+    if rules and not cfg.telemetry:
+        raise ValueError(
+            "alerts need the event stream: set telemetry=<path> "
+            "(--telemetry) alongside alerts"
+        )
     if not cfg.telemetry:
         return _run_federated_impl(
             clients_data, num_global_entities, cfg, verbose, None
@@ -373,6 +397,8 @@ def run_federated(
     # the shadow ledger: re-bills every round from device-recorded telemetry
     # only; _finish's "ledger" event compares it to the real one bitwise
     sink.shadow = CommLedger()
+    if rules:
+        sink.monitor = HealthMonitor(rules, mode=cfg.alert_mode)
     sink.emit({
         "ev": "run",
         "engine": (
@@ -536,6 +562,25 @@ def _run_federated_impl(
             )
             tel_prev = [set() for _ in clients]  # last SENT upload, per client
             tel_ages = np.zeros(len(clients), np.int32)
+            # padded gid twin of build_padded_views (padding -> num_global,
+            # the throwaway divergence segment)
+            tel_gid_np = np.full(
+                (len(clients), tel_ns_max), num_global_entities, np.int32
+            )
+            for v in views:
+                tel_gid_np[v.client_id, : v.num_shared] = v.shared_global
+            tel_gid = jnp.asarray(tel_gid_np)
+
+            def _tel_rows_pad():
+                """Clients' current shared rows, padded like the engines'."""
+                pad = np.zeros(
+                    (len(clients), tel_ns_max, cfg.dim), np.float32
+                )
+                for c, v in zip(clients, views):
+                    pad[v.client_id, : v.num_shared] = np.asarray(
+                        c.params["entity"]
+                    )[v.shared_local]
+                return pad
 
     eval_history: list[tuple[int, float, float]] = []
     best = {"mrr": -1.0, "round": 0, "snap": None, "hits": 0.0}
@@ -628,6 +673,13 @@ def _run_federated_impl(
                 declines=declines, prev_mrr=prev_mrr,
             )
             last_ckpt = round_no
+        if sink is not None and sink.monitor is not None \
+                and sink.monitor.should_stop():
+            # fail-fast alert mode: stop gracefully — _finish still runs,
+            # so the stream keeps its terminal ledger event
+            if verbose:
+                print(f"round {round_no:4d}  stopping on fail-level alert")
+            return True
         return declines >= cfg.patience
 
     if cfg.engine == "superstep":
@@ -711,7 +763,11 @@ def _run_federated_impl(
                 fpart, fup, fdn = host_round_faults(sched, t, len(clients))
             else:
                 fpart = fup = fdn = np.ones(len(clients), dtype=bool)
+            tel_pre = None
             if comm and sync:
+                if sink is not None:
+                    # pre-round shared rows, for the update-norm probe twin
+                    tel_pre = _tel_rows_pad()
                 uploads = []
                 for c, v in zip(clients, views):
                     if not fpart[v.client_id]:
@@ -773,6 +829,8 @@ def _run_federated_impl(
                     sc = jnp.where(tel_valid, sc, -jnp.inf)
                     tel_hist = np.asarray(score_histogram(sc, tel_valid))
                     tel_overlap = np.zeros(len(clients), np.int32)
+                    tel_pre = emb_pad  # post-train, pre-comm — same rows the
+                    # device round's update-norm probe measures against
                 uploads = []
                 for c, v in zip(clients, views):
                     cid = v.client_id
@@ -891,6 +949,13 @@ def _run_federated_impl(
                         )
                         overlap = tel_overlap
                         hist_rec = tel_hist
+                    # health-probe twins: post-round padded rows through the
+                    # SAME jit helpers the device records use, so wherever
+                    # the trajectory matches bitwise, the probes do too
+                    post_pad = jnp.asarray(_tel_rows_pad())
+                    div_mean_h, div_max_h = shared_divergence(
+                        post_pad, tel_gid, tel_valid, num_global_entities
+                    )
                     rec_host = RoundTelemetry(
                         up_rows=up_rows, dn_rows=dn_rows, overlap=overlap,
                         res_mass=res_mass_h,
@@ -898,6 +963,14 @@ def _run_federated_impl(
                         up_ok=fup.astype(np.float32),
                         dn_ok=fdn.astype(np.float32),
                         age=tel_ages, score_hist=hist_rec,
+                        div_mean=np.asarray(div_mean_h),
+                        div_max=np.asarray(div_max_h),
+                        upd_norm=np.asarray(update_norm(
+                            post_pad, jnp.asarray(tel_pre), tel_valid
+                        )),
+                        nonfinite=np.asarray(
+                            nonfinite_count(post_pad, tel_valid)
+                        ),
                     )
                 _emit_round_event(
                     sink, codec, cfg.dim, views, kind, t, rec_host
@@ -1090,6 +1163,13 @@ def _run_federated_tiered(
                 }
             declines = declines + 1 if val["mrr"] < prev_mrr else 0
             prev_mrr = val["mrr"]
+            if sink is not None and sink.monitor is not None \
+                    and sink.monitor.should_stop():
+                # graceful fail-fast (mirrors eval_boundary): the terminal
+                # flush + ledger event below still run
+                if verbose:
+                    print(f"round {t + 1:4d}  stopping on fail-level alert")
+                break
             if declines >= cfg.patience:
                 break
 

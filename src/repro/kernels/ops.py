@@ -100,6 +100,14 @@ def kge_cand_scores(h, r, t, cand, method: str, gamma: float):
         return ts, hs
     interpret = mode == "interpret"
     q_t, q_h = spec.cand_queries(h, r, t, gamma)
+    hs = None
+    if not spec.fold_head:
+        # head leg nonlinear in the candidate (spec.cand_queries gave no
+        # q_head): evaluate score(c, r, t) exactly on the RAW candidate
+        # block, before cand_prep rewrites it for the kernel.
+        hs = spec.score(
+            cand[..., None, :, :], r[..., :, None, :], t[..., :, None, :], gamma
+        )
     cand = spec.cand_prep(cand, gamma)
     if spec.family == "distance":
         statics = spec.kernel_statics(gamma, h.shape[-1])
@@ -113,7 +121,7 @@ def kge_cand_scores(h, r, t, cand, method: str, gamma: float):
         )
     for _ in range(h.ndim - 2):  # leading client axes
         fn = jax.vmap(fn)
-    return fn(q_t, cand), fn(q_h, cand)
+    return fn(q_t, cand), (hs if hs is not None else fn(q_h, cand))
 
 
 def sparse_apply(emb, agg, priority, sign) -> jnp.ndarray:

@@ -81,6 +81,11 @@ class ScoringSpec:
     # candidate-block transform applied once per kernel call (pRotatE
     # rescales entity rows to phase units); identity for everything else.
     cand_prep: Callable[..., jnp.ndarray] = _identity_cand_prep
+    # False: the head leg score(c, r, t) is NOT linear/foldable in the
+    # candidate (ProjE's tanh(c + r)), so cand_queries returns q_head=None
+    # and kge_cand_scores evaluates that leg by broadcasting ``score``
+    # exactly on every path; the tail leg still rides the eval kernel.
+    fold_head: bool = True
     # distance family only: which distance _dist_cand_kernel computes.
     kernel_mode: str | None = None
     # extra static kwargs for the distance kernel, from (gamma, true dim).
@@ -238,6 +243,14 @@ def hole_score(
     return (r * _ccorr(h, t)).sum(axis=-1)
 
 
+def proje_score(
+    h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float = 0.0
+) -> jnp.ndarray:
+    """<tanh(h + r), t> (ProjE pointwise combination, bias-free)."""
+    del gamma
+    return (jnp.tanh(h + r) * t).sum(axis=-1)
+
+
 def complex_score(
     h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray, gamma: float = 0.0
 ) -> jnp.ndarray:
@@ -302,6 +315,14 @@ def _hole_queries(h, r, t, gamma):
     return _cconv(h, r), _ccorr(r, t)
 
 
+def _proje_queries(h, r, t, gamma):
+    del gamma, t
+    # tail: <tanh(h+r), c> folds to q_t · c — but the head leg
+    # <tanh(c+r), t> is nonlinear IN THE CANDIDATE, so no head query row
+    # exists (fold_head=False routes that leg through the exact broadcast).
+    return jnp.tanh(h + r), None
+
+
 def _complex_queries(h, r, t, gamma):
     del gamma
     h_re, h_im = _split_complex(h)
@@ -350,6 +371,13 @@ register(ScoringSpec(
     doc="Re(<h, r, conj(t)>) (entities and relations in C^{dim/2})",
     score=complex_score, rel_dim=lambda dim: dim, rel_dim_doc="dim",
     rel_init="uniform", cand_queries=_complex_queries, adversarial=False,
+))
+register(ScoringSpec(
+    name="proje", family="bilinear",
+    doc="<tanh(h + r), t> (ProjE pointwise combination; head leg unfolds)",
+    score=proje_score, rel_dim=lambda dim: dim, rel_dim_doc="dim",
+    rel_init="uniform", cand_queries=_proje_queries, adversarial=False,
+    fold_head=False,
 ))
 register(ScoringSpec(
     name="hole", family="bilinear",

@@ -14,6 +14,7 @@ import json
 
 from repro.core.codecs import codec_usage, parse_codec_spec
 from repro.core.faults import parse_fault_spec
+from repro.core.health import ALERT_MODES, parse_alert_spec
 from repro.core.sync import comm_ratio_worst_case
 from repro.data import generate_kg, partition_by_relation
 from repro.federated.simulation import FederatedConfig, run_federated
@@ -52,6 +53,15 @@ def _fault_spec(spec: str) -> str:
     """Validate a --faults spec eagerly, carrying the grammar message."""
     try:
         parse_fault_spec(spec)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return spec
+
+
+def _alert_spec(spec: str) -> str:
+    """Validate an --alerts spec eagerly, carrying the grammar message."""
+    try:
+        parse_alert_spec(spec)
     except ValueError as e:
         raise argparse.ArgumentTypeError(str(e)) from None
     return spec
@@ -150,6 +160,17 @@ def main() -> None:
                          "on-device records, host spans, ledger "
                          "reconciliation); render with "
                          "tools/trace_report.py (empty = off, zero cost)")
+    ap.add_argument("--alerts", type=_alert_spec, default="",
+                    metavar="RULE[;RULE...]",
+                    help="streaming health alert rules evaluated over the "
+                         "--telemetry stream, e.g. 'divergence>0.5;nan;"
+                         "mrr-stall=20;byte-budget=2e9'; fired alerts land "
+                         "as 'alert' events (render with "
+                         "tools/health_report.py)")
+    ap.add_argument("--alert-mode", default="warn", choices=ALERT_MODES,
+                    help="'warn' records alerts; 'fail' also stops the run "
+                         "gracefully at the next eval boundary after one "
+                         "fires")
     ap.add_argument("--out", default=None, help="write JSON result here")
     args = ap.parse_args()
 
@@ -176,6 +197,7 @@ def main() -> None:
         checkpoint_path=args.checkpoint,
         checkpoint_every=args.checkpoint_every, resume=args.resume,
         telemetry=args.telemetry,
+        alerts=args.alerts, alert_mode=args.alert_mode,
     )
     res = run_federated(clients, kg.num_entities, cfg, verbose=True)
 

@@ -1,0 +1,363 @@
+"""Health observatory: divergence probes, alert rules, monitor, report.
+
+Four layers, mirroring the pipeline:
+
+* **unit** — the jit-safe probe helpers (shared-entity divergence, update
+  norms, non-finite counts) against float64 numpy oracles, including the
+  consensus property (identical shared rows => exactly zero divergence);
+* **grammar** — the ``--alerts`` spec parses/round-trips canonically and
+  every rejection restates the grammar (the codec/fault spec contract);
+* **monitor** — :class:`repro.core.health.HealthMonitor` fires each rule
+  once (latched), attributes the offending client, and drives the
+  fail-mode graceful stop without breaking the stream grammar;
+* **report** — ``tools/health_report.py`` as a subprocess: exit 0 on a
+  healthy stream (sync strictly reduces divergence), exit 1 on fail-level
+  alerts or a tampered sync round.
+"""
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.health import (
+    ALERT_RULES,
+    AlertRule,
+    HealthMonitor,
+    format_alert_spec,
+    parse_alert_spec,
+)
+from repro.core.telemetry import (
+    nonfinite_count,
+    shared_divergence,
+    update_norm,
+)
+from repro.data import generate_kg, partition_by_relation
+from repro.federated.simulation import FederatedConfig, run_federated
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+# ----------------------------------------------------- probe numpy oracles
+def _np_shared_divergence(rows, gid, valid, num_global):
+    """float64 oracle: per-client mean/max L2 distance of each valid shared
+    row to the existence-masked cross-client mean of its global entity."""
+    rows = rows.astype(np.float64)
+    C, k, d = rows.shape
+    total = np.zeros((num_global, d))
+    cnt = np.zeros(num_global)
+    for c in range(C):
+        for j in range(k):
+            if valid[c, j]:
+                total[gid[c, j]] += rows[c, j]
+                cnt[gid[c, j]] += 1
+    mean = total / np.maximum(cnt, 1.0)[:, None]
+    div_mean = np.zeros(C)
+    div_max = np.zeros(C)
+    for c in range(C):
+        dists = [
+            np.linalg.norm(rows[c, j] - mean[gid[c, j]])
+            for j in range(k) if valid[c, j]
+        ]
+        if dists:
+            div_mean[c] = np.mean(dists)
+            div_max[c] = np.max(dists)
+    return div_mean, div_max
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_shared_divergence_matches_numpy_oracle(seed):
+    rng = np.random.default_rng(seed)
+    C, k, d, G = 3, 7, 8, 20
+    rows = rng.normal(size=(C, k, d)).astype(np.float32)
+    gid = rng.integers(0, G, size=(C, k)).astype(np.int32)
+    valid = rng.random((C, k)) < 0.7
+    got_mean, got_max = shared_divergence(
+        jnp.asarray(rows), jnp.asarray(gid), jnp.asarray(valid), G
+    )
+    want_mean, want_max = _np_shared_divergence(rows, gid, valid, G)
+    np.testing.assert_allclose(np.asarray(got_mean), want_mean,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_max), want_max,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_divergence_is_exactly_zero_at_consensus():
+    """The ISM post-sync property the report's --check-sync leans on: when
+    every client holds the SAME row for each shared entity, divergence is
+    exactly 0.0 — not approximately.  (Exact because each entity's slots
+    are unique per client, so segment counts are powers of two and the
+    mean-of-identical-rows division is exact in binary float — the real
+    federation's shape: one slot per shared entity per client.)"""
+    rng = np.random.default_rng(5)
+    C, k, d, G = 2, 6, 8, 10
+    table = rng.normal(size=(G, d)).astype(np.float32)
+    gid = np.stack([rng.permutation(G)[:k] for _ in range(C)]).astype(np.int32)
+    rows = table[gid]  # all clients agree with the global table
+    valid = np.ones((C, k), dtype=bool)
+    div_mean, div_max = shared_divergence(
+        jnp.asarray(rows), jnp.asarray(gid), jnp.asarray(valid), G
+    )
+    assert float(np.abs(np.asarray(div_mean)).max()) == 0.0
+    assert float(np.abs(np.asarray(div_max)).max()) == 0.0
+
+
+def test_divergence_ignores_invalid_slots():
+    """Padding rows (valid=False) contribute to neither the cross-client
+    mean nor the distances — a client with NO valid slots reports 0."""
+    rows = np.ones((2, 3, 4), dtype=np.float32) * 7.0
+    gid = np.zeros((2, 3), dtype=np.int32)
+    valid = np.zeros((2, 3), dtype=bool)
+    valid[0, 0] = True  # a single live row: consensus with itself
+    div_mean, div_max = shared_divergence(
+        jnp.asarray(rows), jnp.asarray(gid), jnp.asarray(valid), 5
+    )
+    np.testing.assert_array_equal(np.asarray(div_mean), [0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(div_max), [0.0, 0.0])
+
+
+def test_update_norm_matches_numpy_oracle():
+    rng = np.random.default_rng(6)
+    C, k, d = 3, 5, 8
+    new = rng.normal(size=(C, k, d)).astype(np.float32)
+    old = rng.normal(size=(C, k, d)).astype(np.float32)
+    valid = rng.random((C, k)) < 0.6
+    got = np.asarray(update_norm(
+        jnp.asarray(new), jnp.asarray(old), jnp.asarray(valid)
+    ))
+    diff = (new.astype(np.float64) - old) * valid[:, :, None]
+    want = np.sqrt((diff * diff).sum(axis=(1, 2)))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_nonfinite_count_masks_padding():
+    rows = np.zeros((2, 3, 4), dtype=np.float32)
+    rows[0, 0, 0] = np.nan
+    rows[0, 1, 1] = np.inf
+    rows[1, 2, :] = -np.inf  # padded slot: must not count
+    valid = np.array([[True, True, False], [True, True, False]])
+    got = np.asarray(nonfinite_count(jnp.asarray(rows), jnp.asarray(valid)))
+    np.testing.assert_array_equal(got, [2, 0])
+
+
+# ------------------------------------------------------------ alert grammar
+def test_alert_spec_round_trips_canonically():
+    spec = "divergence>0.5;nan;mrr-stall=20;byte-budget=2e9"
+    rules = parse_alert_spec(spec)
+    assert [r.name for r in rules] == list(ALERT_RULES)
+    assert format_alert_spec(rules) == "divergence>0.5;nan;mrr-stall=20;byte-budget=2e+09"
+    # canonical form is a fixed point
+    assert format_alert_spec(parse_alert_spec(format_alert_spec(rules))) \
+        == format_alert_spec(rules)
+
+
+def test_alert_spec_empty_means_off():
+    assert parse_alert_spec("") == ()
+    assert parse_alert_spec("  ") == ()
+
+
+@pytest.mark.parametrize("bad,needle", [
+    ("divergence", "positive threshold"),
+    ("divergence>-1", "positive threshold"),
+    ("divergence>pasta", "bad value"),
+    ("nan=1", "takes no value"),
+    ("mrr-stall=2.5", "integer round count"),
+    ("plasma>3", "unknown alert rule"),
+    ("nan;;nan", "empty alert rule"),
+    ("nan;nan", "duplicate alert rule"),
+])
+def test_alert_spec_errors_are_self_describing(bad, needle):
+    with pytest.raises(ValueError) as e:
+        parse_alert_spec(bad)
+    assert needle in str(e.value)
+    if needle != "duplicate alert rule":  # duplicates cite the rule, not
+        assert "alert spec grammar" in str(e.value)  # the whole grammar
+
+
+def test_alert_rule_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown alert rule"):
+        AlertRule("bogus", 1.0)
+    with pytest.raises(ValueError, match="positive threshold"):
+        AlertRule("byte-budget", 0.0)
+
+
+# ---------------------------------------------------------- monitor behavior
+def _round_event(t, div_mean, nonfinite=(0, 0), cum_bytes=0.0):
+    return {"ev": "round", "round": t, "kind": "sparse",
+            "div_mean": list(div_mean), "div_max": list(div_mean),
+            "upd_norm": [0.0] * len(div_mean),
+            "nonfinite": list(nonfinite), "res_mass": [0.0] * len(div_mean),
+            "cum_bytes": cum_bytes}
+
+
+def test_monitor_divergence_latches_and_attributes_client():
+    mon = HealthMonitor(parse_alert_spec("divergence>0.5"), mode="warn")
+    assert mon.observe(_round_event(0, [0.1, 0.2])) == []
+    fired = mon.observe(_round_event(1, [0.1, 0.9]))
+    assert len(fired) == 1
+    a = fired[0]
+    assert a["ev"] == "alert" and a["name"] == "divergence"
+    assert a["round"] == 1 and a["level"] == "warn"
+    assert "client 1" in a["detail"]
+    # latched: a worse violation later does not re-fire
+    assert mon.observe(_round_event(2, [2.0, 2.0])) == []
+    assert len(mon.fired) == 1
+    assert not mon.should_stop()  # warn never stops
+
+
+def test_monitor_nan_rule_sees_counts_and_nonfinite_floats():
+    mon = HealthMonitor(parse_alert_spec("nan"), mode="fail")
+    assert mon.observe(_round_event(0, [0.1, 0.1])) == []
+    assert mon.observe(_round_event(1, [0.1, 0.1], nonfinite=(3, 0)))
+    assert mon.should_stop()
+    mon2 = HealthMonitor(parse_alert_spec("nan"), mode="fail")
+    assert mon2.observe(_round_event(0, [math.inf, 0.1]))
+
+
+def test_monitor_byte_budget_and_mrr_stall():
+    mon = HealthMonitor(
+        parse_alert_spec("byte-budget=1000;mrr-stall=2"), mode="warn"
+    )
+    assert mon.observe(_round_event(0, [0.0], cum_bytes=999.0)) == []
+    assert mon.observe(_round_event(1, [0.0], cum_bytes=1001.0))
+    evs = [
+        {"ev": "eval", "split": "valid", "round": 0, "mrr": 0.3},
+        {"ev": "eval", "split": "valid", "round": 1, "mrr": 0.2},
+        {"ev": "eval", "split": "valid", "round": 2, "mrr": 0.25},
+        {"ev": "eval", "split": "test", "round": 3, "mrr": 9.9},  # ignored
+    ]
+    fired = [a for e in evs for a in mon.observe(e)]
+    assert [a["name"] for a in fired] == ["mrr-stall"]
+    assert "unimproved for 2 rounds" in fired[0]["detail"]
+
+
+def test_monitor_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown alert mode"):
+        HealthMonitor((), mode="explode")
+
+
+# ------------------------------------------------------- simulation wiring
+@pytest.fixture(scope="module")
+def health_env():
+    kg = generate_kg(num_entities=120, num_relations=8, num_triples=900,
+                     seed=1)
+    clients = partition_by_relation(kg, 2, seed=0)
+    base = dict(method="transe", protocol="feds", dim=8, rounds=5,
+                local_epochs=1, batch_size=32, num_negatives=4, lr=5e-3,
+                sparsity_p=0.4, sync_interval=2, eval_every=2, patience=99,
+                max_eval_triples=30, seed=0)
+    return kg, clients, base
+
+
+def _run(health_env, tmp_path, tag, **overrides):
+    kg, clients, base = health_env
+    path = tmp_path / f"{tag}.jsonl"
+    cfg = FederatedConfig(telemetry=str(path), **dict(base, **overrides))
+    res = run_federated(clients, kg.num_entities, cfg)
+    with open(path) as f:
+        return res, [json.loads(line) for line in f if line.strip()], path
+
+
+def test_alerts_without_telemetry_is_a_config_error(health_env):
+    kg, clients, base = health_env
+    cfg = FederatedConfig(alerts="nan", **base)
+    with pytest.raises(ValueError, match="telemetry"):
+        run_federated(clients, kg.num_entities, cfg)
+
+
+def test_fail_mode_stops_gracefully_with_intact_stream(health_env, tmp_path):
+    """A fail-level alert stops the run at the next eval boundary — early,
+    but still ending with a reconciled ledger event (the grammar trace and
+    shadow billing survive the abort)."""
+    res, events, _ = _run(
+        health_env, tmp_path, "failfast",
+        alerts="divergence>1e-6", alert_mode="fail",
+    )
+    assert res.rounds_run < 5  # stopped before the configured horizon
+    alerts = [e for e in events if e["ev"] == "alert"]
+    assert alerts and alerts[0]["level"] == "fail"
+    assert alerts[0]["name"] == "divergence"
+    led = events[-1]
+    assert led["ev"] == "ledger" and led["reconciled"] is True
+    # alert events land immediately after the round that fired them
+    idx = events.index(alerts[0])
+    assert events[idx - 1]["ev"] == "round"
+    assert events[idx - 1]["round"] == alerts[0]["round"]
+
+
+def test_warn_mode_records_but_never_stops(health_env, tmp_path):
+    res, events, _ = _run(
+        health_env, tmp_path, "warn",
+        alerts="divergence>1e-6", alert_mode="warn",
+    )
+    assert res.rounds_run == 5
+    alerts = [e for e in events if e["ev"] == "alert"]
+    assert alerts and all(a["level"] == "warn" for a in alerts)
+    # latched: at most one alert per rule for the whole run
+    assert len(alerts) == len({a["name"] for a in alerts})
+
+
+# -------------------------------------------------- health_report subprocess
+def _health_report(jsonl_path, *args):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "health_report.py"),
+         str(jsonl_path), *args],
+        capture_output=True, text=True, timeout=60,
+    )
+
+
+def test_health_report_passes_on_healthy_run(health_env, tmp_path):
+    """Healthy run + high thresholds: no alerts, sync strictly reduces
+    divergence, exit 0, and the BENCH record says healthy."""
+    _, _, path = _run(
+        health_env, tmp_path, "healthy",
+        alerts="divergence>100;nan;byte-budget=1e12", alert_mode="fail",
+    )
+    out_json = tmp_path / "BENCH_health.json"
+    res = _health_report(path, "--check-sync", "--json", str(out_json))
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "alerts: none fired" in res.stdout
+    assert "sync recovery [PASS]" in res.stdout
+    rec = json.loads(out_json.read_text())
+    assert rec["bench"] == "health_report" and rec["healthy"] is True
+    assert any("PASS" in c for c in rec["claims"])
+
+
+def test_health_report_fails_on_fail_level_alert(health_env, tmp_path):
+    _, _, path = _run(
+        health_env, tmp_path, "alerting",
+        alerts="divergence>1e-6", alert_mode="fail",
+    )
+    res = _health_report(path)
+    assert res.returncode == 1
+    assert "divergence" in res.stdout and "fail" in res.stdout
+
+
+def test_health_report_catches_tampered_sync_round(health_env, tmp_path):
+    """--check-sync re-derives the recovery property from the stream: a
+    sync round whose divergence did NOT fall below the preceding comm
+    round must fail, even with no alerts anywhere."""
+    _, events, _ = _run(health_env, tmp_path, "tamper")
+    forged = []
+    for e in events:
+        if e.get("ev") == "round" and e.get("kind") == "sync":
+            e = dict(e, div_mean=[9.9 for _ in e["div_mean"]])
+        forged.append(e)
+    bad = tmp_path / "forged.jsonl"
+    bad.write_text("".join(json.dumps(e) + "\n" for e in forged))
+    res = _health_report(bad, "--check-sync")
+    assert res.returncode == 1
+    assert "sync recovery [FAIL]" in res.stdout
+
+
+def test_health_report_rejects_unparseable_stream(tmp_path):
+    bad = tmp_path / "garbage.jsonl"
+    bad.write_text('{"ev": "run"}\nnot json\n')
+    res = _health_report(bad)
+    assert res.returncode != 0
+    assert "unparseable" in (res.stdout + res.stderr)

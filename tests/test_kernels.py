@@ -145,7 +145,7 @@ def test_kge_cand_scores_head_leg_algebra():
 
 
 @pytest.mark.parametrize(
-    "method", ["transe", "rotate", "protate", "distmult", "complex"]
+    "method", ["transe", "rotate", "protate", "distmult", "complex", "proje"]
 )
 def test_kge_cand_scores_interpret_close_to_ref(monkeypatch, method):
     """Family-tagged Pallas dispatch (interpret) of both legs stays within

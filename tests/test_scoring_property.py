@@ -79,6 +79,11 @@ def _np_complex(h, r, t, gamma):
     ).sum(-1)
 
 
+def _np_proje(h, r, t, gamma):
+    del gamma
+    return (np.tanh(h + r) * t).sum(-1)
+
+
 def _np_hole(h, r, t, gamma):
     del gamma
     n = h.shape[-1]
@@ -93,6 +98,7 @@ ORACLES = {
     "distmult": _np_distmult,
     "complex": _np_complex,
     "hole": _np_hole,
+    "proje": _np_proje,
 }
 
 
@@ -176,7 +182,7 @@ def test_scoring_usage_mentions_every_method_and_family():
 def test_rel_dim_and_init_rules():
     dim = 16
     assert get_scoring("rotate").rel_dim(dim) == dim // 2
-    for name in ("transe", "protate", "distmult", "complex", "hole"):
+    for name in ("transe", "protate", "distmult", "complex", "hole", "proje"):
         assert get_scoring(name).rel_dim(dim) == dim
     for name, spec in registered_methods().items():
         model = KGEModel(method=name, num_entities=6, num_relations=3, dim=dim)

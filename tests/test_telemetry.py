@@ -219,13 +219,29 @@ def test_reference_engine_reconciles_and_bills_like_device(sim_env, tmp_path):
                            engine="reference", faults=_CHAOS)
     assert ref[-1]["ev"] == "ledger" and ref[-1]["reconciled"] is True
     billing = ("round", "kind", "part", "up_rows", "dn_rows",
-               "up_bytes", "dn_bytes", "age", "cum_params", "cum_bytes")
+               "up_bytes", "dn_bytes", "age", "cum_params", "cum_bytes",
+               "nonfinite")  # int probes are order-exact everywhere
     dev_rounds = [e for e in dev if e["ev"] == "round"]
     ref_rounds = [e for e in ref if e["ev"] == "round"]
     assert len(dev_rounds) == len(ref_rounds)
     for d, r in zip(dev_rounds, ref_rounds):
         for k in billing:
             assert d[k] == r[k], (d["round"], k)
+        # The float health probes are informational: the twin computes them
+        # over its OWN trajectory, which drifts from the device's under
+        # chaos (different padding -> different fp paths, compounded by
+        # training).  What must agree structurally: exact 0.0 at consensus
+        # (mean of two bitwise-identical rows is exact in both), and the
+        # same sawtooth within a band — max-type stats pick single
+        # entities, so the band is wide.
+        for k in ("div_mean", "div_max", "upd_norm"):
+            dv, rv = np.asarray(d[k]), np.asarray(r[k])
+            np.testing.assert_array_equal(
+                dv == 0.0, rv == 0.0,
+                err_msg=f"round {d['round']} {k} zero-set")
+            np.testing.assert_allclose(
+                dv, rv, rtol=0.5, atol=2e-3,
+                err_msg=f"round {d['round']} {k}")
 
 
 def test_tiered_engine_records_cache_activity(tmp_path):

@@ -1,0 +1,219 @@
+#!/usr/bin/env python3
+"""Render the federation's model-health trajectory and alert log.
+
+Input: the flight-recorder JSONL written by ``--telemetry PATH`` — with
+the health probes of ``repro.core.telemetry`` (``div_mean`` / ``div_max``
+/ ``upd_norm`` / ``nonfinite`` per round event) and any ``alert`` events
+the streaming monitor (``repro.core.health``, ``--alerts``) appended.
+Output: the shared-entity divergence trajectory around sync boundaries —
+the sync-recovery figure the paper's Intermittent Synchronization
+Mechanism motivates but never plots — plus the fired-alert log.
+
+This is also the health pipeline's verifier, two ways:
+
+* any **fail-level alert** in the stream makes the report exit non-zero
+  (CI gates a healthy run on exit code 0);
+* with ``--check-sync``, every sync round must land strictly below the
+  immediately preceding comm round's divergence — the recovery property
+  ISM predicts — or the report exits non-zero.
+
+Stdlib only (run it anywhere the JSONL lands, no jax needed):
+
+    python tools/health_report.py telemetry.jsonl --check-sync \
+        [--json BENCH_health.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load_events(path: str) -> list[dict]:
+    events = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except ValueError as e:
+                raise SystemExit(f"{path}:{i + 1}: unparseable JSONL ({e})")
+            if not isinstance(ev, dict) or "ev" not in ev:
+                raise SystemExit(f"{path}:{i + 1}: not an event object")
+            events.append(ev)
+    return events
+
+
+def _fmt_row(cols, widths):
+    return "  ".join(str(c).rjust(w) for c, w in zip(cols, widths))
+
+
+def _mean(xs) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def divergence_table(rounds: list[dict]) -> list[str]:
+    """One line per comm round: the divergence / update-norm / non-finite
+    probes, with each sync round annotated with its drop vs the previous
+    comm round (the ISM recovery signal)."""
+    header = ("round", "kind", "div_mean", "div_max", "upd_norm",
+              "nonfin", "sync_drop")
+    widths = (5, 6, 9, 9, 9, 6, 10)
+    lines = [_fmt_row(header, widths)]
+    prev_div = None
+    for r in rounds:
+        div = _mean(r["div_mean"])
+        drop = "-"
+        if r["kind"] == "sync" and prev_div is not None:
+            drop = f"{prev_div - div:+.4f}"
+        lines.append(_fmt_row((
+            r["round"], r["kind"], f"{div:.4f}",
+            f"{max(r['div_max']):.4f}", f"{_mean(r['upd_norm']):.4f}",
+            sum(r["nonfinite"]), drop,
+        ), widths))
+        prev_div = div
+    return lines
+
+
+def alert_table(alerts: list[dict]) -> list[str]:
+    lines = [_fmt_row(("round", "level", "rule", "detail"), (5, 5, 18, 0))]
+    for a in alerts:
+        lines.append(_fmt_row(
+            (a["round"], a["level"], a["rule"], a["detail"]), (5, 5, 18, 0)
+        ))
+    return lines
+
+
+def check_sync_recovery(rounds: list[dict]) -> tuple[int, int, list[str]]:
+    """(checked, failed, failure details): every sync round must land
+    strictly below the previous comm round's mean divergence.  Sync rounds
+    with no comm round before them (or a zero-divergence one — nothing to
+    recover) are skipped."""
+    checked = failed = 0
+    details = []
+    prev = None
+    for r in rounds:
+        div = _mean(r["div_mean"])
+        if r["kind"] == "sync" and prev is not None and prev[1] > 0.0:
+            checked += 1
+            if not div < prev[1]:
+                failed += 1
+                details.append(
+                    f"sync round {r['round']}: divergence {div:.6f} did not "
+                    f"fall below round {prev[0]}'s {prev[1]:.6f}"
+                )
+        prev = (r["round"], div)
+    return checked, failed, details
+
+
+def report(events: list[dict], check_sync: bool):
+    """Returns (report lines, claim strings, ok)."""
+    by = defaultdict(list)
+    for ev in events:
+        by[ev["ev"]].append(ev)
+    lines: list[str] = []
+    claims: list[str] = []
+    ok = True
+
+    for run in by["run"]:
+        lines.append(
+            f"run: engine={run['engine']} codec={run['codec']} "
+            f"method={run['method']} protocol={run['protocol']} "
+            f"clients={run['clients']} dim={run['dim']} "
+            f"rounds={run['rounds']}"
+        )
+    # "none" rounds carry no record (all-zero probes) — only comm rounds
+    # tell a health story
+    rounds = sorted(
+        (r for r in by["round"] if r["kind"] != "none"),
+        key=lambda r: r["round"],
+    )
+    if rounds:
+        lines.append("")
+        lines.extend(divergence_table(rounds))
+
+    # re-derive severity from the alert events, not from exit-time state:
+    # a stream is judged by what it says, even if the monitor is long gone
+    alerts = by["alert"]
+    lines.append("")
+    if alerts:
+        lines.extend(alert_table(alerts))
+        fails = [a for a in alerts if a["level"] == "fail"]
+        tag = "FAIL" if fails else "WARN"
+        claims.append(
+            f"[{tag}] health: {len(alerts)} alert(s) fired "
+            f"({len(fails)} fail-level): "
+            + ", ".join(sorted({a["name"] for a in alerts}))
+        )
+        if fails:
+            ok = False
+    else:
+        lines.append("alerts: none fired")
+        claims.append("[PASS] health: no alerts fired")
+
+    if check_sync:
+        checked, failed, details = check_sync_recovery(rounds)
+        lines.append("")
+        if checked == 0:
+            lines.append("sync recovery [FAIL]: no sync round follows a "
+                         "divergent comm round — nothing to check")
+            claims.append("[FAIL] health: sync-recovery check vacuous")
+            ok = False
+        elif failed:
+            lines.append(f"sync recovery [FAIL]: {failed}/{checked} sync "
+                         f"round(s) did not reduce divergence")
+            lines.extend("  " + d for d in details)
+            claims.append(
+                f"[FAIL] health: {failed}/{checked} sync round(s) failed "
+                f"to reduce shared-entity divergence"
+            )
+            ok = False
+        else:
+            lines.append(f"sync recovery [PASS]: all {checked} sync "
+                         f"round(s) strictly reduced divergence")
+            claims.append(
+                f"[PASS] health: every sync round ({checked}) strictly "
+                f"reduced shared-entity divergence"
+            )
+    return lines, claims, ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl", help="telemetry JSONL written by --telemetry")
+    ap.add_argument("--check-sync", action="store_true",
+                    help="fail unless every sync round strictly reduces "
+                         "the shared-entity divergence (the ISM recovery "
+                         "property)")
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH-style JSON record here")
+    args = ap.parse_args()
+    events = load_events(args.jsonl)
+    lines, claims, ok = report(events, args.check_sync)
+    print("\n".join(lines))
+    if args.json:
+        rounds = [e for e in events if e["ev"] == "round"]
+        alerts = [e for e in events if e["ev"] == "alert"]
+        rec = {
+            "bench": "health_report",
+            "schema_version": 1,
+            "fast": bool(os.environ.get("REPRO_BENCH_FAST")),
+            "source": args.jsonl,
+            "rounds": len(rounds),
+            "alerts": len(alerts),
+            "healthy": ok,
+            "claims": claims,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"wrote {args.json}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
